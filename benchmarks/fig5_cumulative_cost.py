@@ -1,0 +1,63 @@
+"""Fig. 5: cumulative normalized execution cost over recurring executions,
+averaged over all jobs — the exploration investment amortizing."""
+
+from __future__ import annotations
+
+import csv
+
+import numpy as np
+
+from benchmarks.common import (
+    DEFAULT_REPS,
+    JOB_ORDER,
+    artifact_path,
+    search_traces,
+)
+
+
+def cumulative_curve(traces, horizon: int) -> np.ndarray:
+    """Each iteration's cost is the trial's cost while searching; after the
+    stop the job keeps running on the best-found configuration."""
+    curves = []
+    for t in traces:
+        costs = list(t.costs)
+        stop = t.stop_iteration or len(costs)
+        per_iter = []
+        best_so_far = np.inf
+        for i in range(horizon):
+            if i < stop and i < len(costs):
+                best_so_far = min(best_so_far, costs[i])
+                per_iter.append(costs[i])
+            else:
+                per_iter.append(best_so_far)
+        curves.append(np.cumsum(per_iter))
+    return np.mean(curves, axis=0)
+
+
+def run(reps: int = DEFAULT_REPS, horizon: int = 100) -> dict:
+    ruya_curves, cp_curves = [], []
+    for key in JOB_ORDER:
+        ruya, cp, _ = search_traces(key, reps=reps)
+        ruya_curves.append(cumulative_curve(ruya, horizon))
+        cp_curves.append(cumulative_curve(cp, horizon))
+    ruya_mean = np.mean(ruya_curves, axis=0)
+    cp_mean = np.mean(cp_curves, axis=0)
+
+    path = artifact_path("paper", "fig5_cumulative.csv")
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["execution", "ruya_cumulative", "cherrypick_cumulative"])
+        for i in range(horizon):
+            w.writerow([i + 1, round(ruya_mean[i], 3), round(cp_mean[i], 3)])
+
+    print("\n== Fig. 5: cumulative cost over recurrences ==")
+    for n in (5, 10, 25, 50, 100):
+        adv = (cp_mean[n - 1] - ruya_mean[n - 1]) / cp_mean[n - 1] * 100
+        print(f"  after {n:3d} executions: Ruya {ruya_mean[n-1]:8.2f} | "
+              f"CherryPick {cp_mean[n-1]:8.2f}  (Ruya {adv:+.1f}%)")
+    return {"csv": path,
+            "advantage_at_25": float((cp_mean[24] - ruya_mean[24]) / cp_mean[24])}
+
+
+if __name__ == "__main__":
+    run()

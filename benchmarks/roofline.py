@@ -1,0 +1,129 @@
+"""§Roofline: three-term roofline per (arch × shape) from dry-run artifacts.
+
+Reads ``artifacts/dryrun/*__single_pod.json`` (the roofline table is
+single-pod per the assignment; multi-pod artifacts prove the pod axis
+shards) and reports, per cell:
+
+    compute    = HLO_FLOPs_per_device / 197e12           (bf16 MXU peak)
+    memory     = HLO_bytes_per_device / 819e9            (HBM bandwidth)
+    collective = collective_bytes_per_device / 50e9      (ICI per link)
+
+FLOPs/bytes are the loop-scaled HLO costs (see launch/hlo_analysis.py —
+XLA's own cost_analysis counts scan bodies once).  MODEL_FLOPS uses
+6·N·D for training (N_active for MoE) and 2·N_active·tokens for serving;
+the ratio MODEL_FLOPS/HLO_FLOPs exposes remat/redundancy waste.
+"""
+
+from __future__ import annotations
+
+import csv
+import glob
+import json
+import os
+
+from benchmarks.common import artifact_path
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link
+
+MOVE_HINTS = {
+    "compute": "reduce recompute (remat policy) or shard more model axes",
+    "memory": "avoid materializing O(T·S) attention (chunked/flash path), "
+              "fewer remat passes, bf16 residuals",
+    "collective": "cut TP all-reduces (sequence-parallel residuals), fewer "
+                  "microbatch re-gathers (FSDP), bigger per-shard tiles",
+}
+
+
+def model_flops(art: dict) -> float:
+    cell = art["cell"]
+    kind = art["kind"]
+    n_active = art["model"]["active_params"]
+    if kind == "train":
+        return 6.0 * n_active * art["model"]["tokens"]
+    if kind == "prefill":
+        # tokens field holds global_batch for serve cells; recover tokens
+        seq = {"prefill_32k": 32768}.get(cell, 0)
+        return 2.0 * n_active * art["model"]["tokens"] * seq
+    # decode: one new token per sequence
+    return 2.0 * n_active * art["model"]["tokens"]
+
+
+def load_cells(mesh: str = "single_pod"):
+    pattern = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                           "dryrun", f"*__{mesh}.json")
+    cells = []
+    for path in sorted(glob.glob(pattern)):
+        with open(path) as f:
+            art = json.load(f)
+        cells.append(art)
+    return cells
+
+
+def analyze(art: dict) -> dict:
+    h = art["hlo_cost"]
+    chips = art["chips"]
+    compute = h["flops_per_device"] / PEAK_FLOPS
+    memory = h["hbm_bytes_per_device"] / HBM_BW
+    collective = h["collective_bytes_per_device"] / ICI_BW
+    terms = {"compute": compute, "memory": memory, "collective": collective}
+    dominant = max(terms, key=terms.get)
+    step_s = max(terms.values())
+    mf = model_flops(art)
+    hlo_global = h["flops_per_device"] * chips
+    useful = mf / hlo_global if hlo_global > 0 else 0.0
+    # roofline fraction: useful model FLOPs per chip-second of the
+    # roofline-estimated step vs the chip's peak.
+    frac = (mf / chips / max(step_s, 1e-12)) / PEAK_FLOPS
+    return {
+        "arch": art["arch"],
+        "cell": art["cell"],
+        "kind": art["kind"],
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": collective,
+        "dominant": dominant,
+        "step_s": step_s,
+        "model_flops": mf,
+        "useful_flops_ratio": useful,
+        "roofline_fraction": frac,
+        "peak_gib": art["memory"]["peak_bytes_per_device"] / 2**30,
+        "fits_16g": art["memory"]["fits_16g"],
+        "hint": MOVE_HINTS[dominant],
+    }
+
+
+def run(mesh: str = "single_pod") -> dict:
+    cells = load_cells(mesh)
+    rows = []
+    skipped = 0
+    for art in cells:
+        if art["status"] == "skipped":
+            skipped += 1
+            continue
+        if art["status"] != "ok":
+            print(f"  !! {art.get('arch')}×{art.get('cell')}: {art['status']}")
+            continue
+        rows.append(analyze(art))
+
+    rows.sort(key=lambda r: (r["arch"], r["cell"]))
+    path = artifact_path("roofline", f"roofline_{mesh}.csv")
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0]))
+        w.writeheader()
+        w.writerows(rows)
+
+    print(f"\n== §Roofline ({mesh}, {len(rows)} cells, {skipped} skipped) ==")
+    print(f"  {'arch':24s}{'cell':13s}{'cmp(s)':>8}{'mem(s)':>8}{'coll(s)':>9}"
+          f"{'dom':>6}{'useful':>8}{'roofl%':>8}{'GiB/dev':>9}")
+    for r in rows:
+        print(f"  {r['arch']:24s}{r['cell']:13s}{r['compute_s']:8.3f}"
+              f"{r['memory_s']:8.3f}{r['collective_s']:9.3f}"
+              f"{r['dominant'][:4]:>6}{r['useful_flops_ratio']:8.2f}"
+              f"{r['roofline_fraction']*100:8.2f}{r['peak_gib']:9.2f}")
+    return {"rows": rows, "csv": path}
+
+
+if __name__ == "__main__":
+    run()

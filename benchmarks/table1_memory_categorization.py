@@ -1,0 +1,73 @@
+"""Table I: determined job memory requirement (category + GB for linear)."""
+
+from __future__ import annotations
+
+import csv
+
+from repro.cluster import ClusterSimulator
+
+from benchmarks.common import GiB, JOB_ORDER, artifact_path, profile_once
+
+# Paper Table I ground truth for validation.
+PAPER = {
+    "naivebayes/spark/bigdata": ("linear", 754),
+    "naivebayes/spark/huge": ("linear", 395),
+    "kmeans/spark/bigdata": ("linear", 503),
+    "kmeans/spark/huge": ("linear", 252),
+    "pagerank/spark/bigdata": ("linear", 86),
+    "pagerank/spark/huge": ("linear", 42),
+    "logregr/spark/bigdata": ("unclear", None),
+    "logregr/spark/huge": ("unclear", None),
+    "linregr/spark/bigdata": ("unclear", None),
+    "linregr/spark/huge": ("unclear", None),
+    "join/spark/bigdata": ("flat", None),
+    "join/spark/huge": ("flat", None),
+    "pagerank/hadoop/bigdata": ("flat", None),
+    "pagerank/hadoop/huge": ("flat", None),
+    "terasort/hadoop/bigdata": ("flat", None),
+    "terasort/hadoop/huge": ("flat", None),
+}
+
+
+def run() -> dict:
+    rows = []
+    matches = 0
+    for key in JOB_ORDER:
+        sim = ClusterSimulator.for_job(key)
+        prof = profile_once(sim)
+        cat = prof.model.category.value
+        est_gb = (
+            prof.model.estimate(sim.job.input_gb * GiB) / GiB
+            if cat == "linear" else None
+        )
+        paper_cat, paper_gb = PAPER[key]
+        ok = cat == paper_cat and (
+            paper_gb is None or abs(est_gb - paper_gb) / paper_gb < 0.10
+        )
+        matches += ok
+        rows.append({
+            "job": key, "category": cat,
+            "estimate_gb": round(est_gb, 1) if est_gb else "",
+            "paper_category": paper_cat,
+            "paper_gb": paper_gb or "",
+            "match": ok,
+            "r2": round(prof.model.r2, 4),
+        })
+
+    path = artifact_path("paper", "table1.csv")
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0]))
+        w.writeheader()
+        w.writerows(rows)
+
+    print(f"\n== Table I: memory categorization ({matches}/16 match paper) ==")
+    for r in rows:
+        mark = "✓" if r["match"] else "✗"
+        print(f"  {mark} {r['job']:28s} {r['category']:8s} "
+              f"{r['estimate_gb'] or '-':>7} (paper: {r['paper_category']}"
+              f"{' ' + str(r['paper_gb']) + ' GB' if r['paper_gb'] else ''})")
+    return {"rows": rows, "matches": matches, "csv": path}
+
+
+if __name__ == "__main__":
+    run()

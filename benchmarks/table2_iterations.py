@@ -1,0 +1,68 @@
+"""Table II: iterations to find configurations with normalized cost
+c ≤ 1.2 / ≤ 1.1 / = 1.0 — CherryPick vs Ruya, plus the quotient row.
+
+The paper's headline: mean quotient ≈ 37.9 % / 40.2 % / 49.2 %.
+"""
+
+from __future__ import annotations
+
+import csv
+
+import numpy as np
+
+from benchmarks.common import (
+    DEFAULT_REPS,
+    JOB_ORDER,
+    artifact_path,
+    mean_iterations_until,
+    search_traces,
+)
+
+THRESHOLDS = (1.2, 1.1, 1.0)
+
+# Paper Table II mean row, for validation banding.
+PAPER_MEAN = {1.2: (8.735, 3.307), 1.1: (16.487, 6.627), 1.0: (23.629, 11.631)}
+PAPER_QUOTIENT = {1.2: 0.379, 1.1: 0.402, 1.0: 0.492}
+
+
+def run(reps: int = DEFAULT_REPS) -> dict:
+    rows = []
+    for key in JOB_ORDER:
+        ruya, cp, prof = search_traces(key, reps=reps)
+        row = {"job": key, "category": prof.model.category.value}
+        for th in THRESHOLDS:
+            row[f"cp_{th}"] = round(mean_iterations_until(cp, th), 3)
+            row[f"ruya_{th}"] = round(mean_iterations_until(ruya, th), 3)
+            row[f"quot_{th}"] = round(row[f"ruya_{th}"] / row[f"cp_{th}"], 3)
+        rows.append(row)
+        print(f"  {key:28s} ({row['category']:7s}) "
+              + " ".join(f"c≤{th}: {row[f'ruya_{th}']:6.2f}/"
+                         f"{row[f'cp_{th}']:6.2f}={row[f'quot_{th}']*100:5.1f}%"
+                         for th in THRESHOLDS))
+
+    mean_row = {"job": "MEAN", "category": ""}
+    for th in THRESHOLDS:
+        cp_m = float(np.mean([r[f"cp_{th}"] for r in rows]))
+        ru_m = float(np.mean([r[f"ruya_{th}"] for r in rows]))
+        mean_row[f"cp_{th}"] = round(cp_m, 3)
+        mean_row[f"ruya_{th}"] = round(ru_m, 3)
+        mean_row[f"quot_{th}"] = round(ru_m / cp_m, 3)
+    rows.append(mean_row)
+
+    path = artifact_path("paper", "table2.csv")
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0]))
+        w.writeheader()
+        w.writerows(rows)
+
+    print(f"\n== Table II mean (reps={reps}) ==")
+    for th in THRESHOLDS:
+        q = mean_row[f"quot_{th}"]
+        print(f"  c≤{th}: Ruya {mean_row[f'ruya_{th}']:6.2f} vs CherryPick "
+              f"{mean_row[f'cp_{th}']:6.2f} → quotient {q*100:5.1f}% "
+              f"(paper: {PAPER_QUOTIENT[th]*100:.1f}%)")
+    return {"rows": rows, "mean": mean_row, "csv": path}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Table III: memory-profiling time per job (emulated single-machine runs).
+
+Paper: 2–22 minutes per job, mean 565 s, median < 8 min.
+"""
+
+from __future__ import annotations
+
+import csv
+
+import numpy as np
+
+from repro.cluster import ClusterSimulator
+
+from benchmarks.common import JOB_ORDER, artifact_path, profile_once
+
+PAPER_MEAN_S = 565.0
+
+
+def run() -> dict:
+    rows = []
+    for key in JOB_ORDER:
+        sim = ClusterSimulator.for_job(key)
+        prof = profile_once(sim)
+        rows.append({
+            "job": key,
+            "time_s": round(prof.total_time_s, 1),
+            "calibration_runs": prof.calibration_runs,
+            "samples": len(prof.sizes),
+        })
+    times = [r["time_s"] for r in rows]
+    summary = {
+        "mean_s": float(np.mean(times)),
+        "median_s": float(np.median(times)),
+        "min_s": float(np.min(times)),
+        "max_s": float(np.max(times)),
+    }
+
+    path = artifact_path("paper", "table3.csv")
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0]))
+        w.writeheader()
+        w.writerows(rows)
+
+    print("\n== Table III: profiling time ==")
+    for r in rows:
+        print(f"  {r['job']:28s} {r['time_s']:7.1f}s")
+    print(f"  mean {summary['mean_s']:.0f}s (paper {PAPER_MEAN_S:.0f}s), "
+          f"median {summary['median_s']:.0f}s, "
+          f"range [{summary['min_s']:.0f}, {summary['max_s']:.0f}]s")
+    return {"rows": rows, "summary": summary, "csv": path}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,76 @@
+"""The paper's algorithm end to end, twice:
+
+  A. On its OWN domain — the emulated Scout cluster evaluation: profile a
+     job's memory on "one machine", split the 69-config search space,
+     Bayesian-optimize, and compare against CherryPick across seeds.
+  B. Beyond the paper — the SAME algorithm tuning TPU execution
+     configurations (microbatch × remat × FSDP × sequence-sharding) for an
+     assigned architecture on the production (16,16) mesh, where a trial is
+     an AOT compile + roofline estimate.  (Pass --tpu; each trial compiles
+     for ~10–20 s on this CPU container.)
+
+    PYTHONPATH=src python examples/autotune_demo.py
+    PYTHONPATH=src python examples/autotune_demo.py --tpu --budget 8
+"""
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+
+def demo_cluster(seeds: int = 15) -> None:
+    from repro.cluster import ClusterSimulator
+    from repro.core import run_cherrypick, run_ruya
+
+    GiB = 1024**3
+    print("=== A. Ruya on the paper's own domain (3 job classes) ===")
+    for key in ["kmeans/spark/huge", "terasort/hadoop/bigdata",
+                "logregr/spark/huge"]:
+        sim = ClusterSimulator.for_job(key)
+        ruya_iters, cp_iters = [], []
+        prof = None
+        for seed in range(seeds):
+            rep = run_ruya(
+                profile_run=sim.profile_run_fn(),
+                full_input_size=sim.job.input_gb * GiB,
+                space=sim.space, cost_fn=sim.cost_fn(),
+                rng=np.random.default_rng(seed),
+                per_node_overhead=0.5 * GiB, to_exhaustion=True,
+                profile_result=prof,
+            )
+            prof = rep.profile
+            cp = run_cherrypick(space=sim.space, cost_fn=sim.cost_fn(),
+                                rng=np.random.default_rng(seed),
+                                to_exhaustion=True)
+            ruya_iters.append(rep.trace.iterations_until(1.0))
+            cp_iters.append(cp.iterations_until(1.0))
+        print(f"  {key:28s} [{prof.model.category.value:7s}] "
+              f"iterations-to-optimal: Ruya {np.mean(ruya_iters):5.1f} "
+              f"vs CherryPick {np.mean(cp_iters):5.1f}")
+
+
+def demo_tpu(arch: str, cell: str, budget: int) -> None:
+    print(f"\n=== B. Ruya tuning TPU exec configs for {arch} × {cell} ===")
+    from repro.launch.autotune import run_autotune
+
+    run_autotune(arch, cell, budget=budget,
+                 cache_path="artifacts/autotune/demo_cache.json")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tpu", action="store_true",
+                    help="also run the TPU exec-config tuner (compiles!)")
+    ap.add_argument("--arch", default="granite-8b")
+    ap.add_argument("--cell", default="train_4k")
+    ap.add_argument("--budget", type=int, default=8)
+    args = ap.parse_args()
+    demo_cluster()
+    if args.tpu:
+        demo_tpu(args.arch, args.cell, args.budget)
+    else:
+        print("\n(pass --tpu to run the beyond-paper TPU exec-config tuner)")

@@ -1,0 +1,87 @@
+"""End-to-end training example: a ~100M-parameter granite-family LM trained
+for a few hundred steps with the full production stack — synthetic data
+pipeline, AdamW + warmup-cosine, microbatched gradient accumulation, async
+checkpointing, preemption handling and the straggler monitor.
+
+    PYTHONPATH=src python examples/train_lm.py --preset 20m  --steps 200
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+
+The 20m preset finishes in minutes on this CPU container; the 100m preset
+is the assignment's "~100M for a few hundred steps" driver (CPU wall time
+is substantial; on one real accelerator it is minutes).  Training resumes
+from the newest checkpoint automatically — Ctrl-C and re-run to see the
+restart path.
+"""
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import ExecConfig
+from repro.data import SyntheticDataset, shard_batch
+from repro.models import Model, ModelConfig, count_params
+from repro.runtime.loop import PreemptionGuard, TrainLoop
+from repro.runtime.steps import init_train_state, make_train_step
+
+PRESETS = {
+    # ~19M params: d=384, L=6 — quick on CPU
+    "20m": dict(num_layers=6, d_model=384, num_heads=6, num_kv_heads=2,
+                d_ff=1536, vocab_size=8192, head_dim=64),
+    # ~105M params: d=768, L=12 — the assignment's ~100M driver
+    "100m": dict(num_layers=12, d_model=768, num_heads=12, num_kv_heads=4,
+                 d_ff=3072, vocab_size=32768, head_dim=64),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=list(PRESETS), default="20m")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="train_lm_ckpt")
+    args = ap.parse_args()
+
+    cfg = ModelConfig(
+        name=f"granite-{args.preset}", family="dense",
+        param_dtype="float32", compute_dtype="bfloat16",
+        remat_policy="none", **PRESETS[args.preset],
+    )
+    model = Model(cfg)
+    n = count_params(model.param_specs())
+    print(f"[train_lm] {cfg.name}: {n/1e6:.1f}M params, "
+          f"{args.global_batch}×{args.seq_len} tokens/step")
+
+    ex = ExecConfig(
+        learning_rate=args.lr, warmup_steps=20, total_steps=args.steps,
+        num_microbatches=args.microbatches, remat="none",
+    )
+    state = init_train_state(model, ex, jax.random.key(0))
+    step = jax.jit(make_train_step(model, ex), donate_argnums=(0,))
+    ds = SyntheticDataset(cfg, args.global_batch, args.seq_len, seed=0)
+
+    loop = TrainLoop(
+        train_step=step, batch_at=ds.batch_at, place_batch=shard_batch,
+        state=state,
+        checkpoints=CheckpointManager(args.ckpt_dir, keep_n=3),
+        checkpoint_every=50, log_every=10,
+        guard=PreemptionGuard(install=True),
+    )
+    loop.maybe_restore()
+    result = loop.run(args.steps)
+    hist = result["history"]
+    if hist:
+        print(f"[train_lm] loss {hist[0]['loss']:.3f} → {hist[-1]['loss']:.3f} "
+              f"over {result['final_step']} steps "
+              f"({result['exit']}, {len(result['stragglers'])} stragglers)")
+
+
+if __name__ == "__main__":
+    main()

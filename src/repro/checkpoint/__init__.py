@@ -1,0 +1,5 @@
+"""Checkpointing: atomic step directories, keep-N, async save, elastic restore."""
+
+from repro.checkpoint.manager import CheckpointManager, load_pytree, save_pytree
+
+__all__ = ["CheckpointManager", "load_pytree", "save_pytree"]

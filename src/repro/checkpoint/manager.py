@@ -1,0 +1,202 @@
+"""Sharded checkpoints with atomic commits and elastic restore.
+
+Layout (one directory per step, committed atomically by rename):
+
+    <root>/step_00000100.tmp/        # written here ...
+    <root>/step_00000100/            # ... then renamed (atomic on POSIX)
+        manifest.json                # treedef paths, shapes, dtypes, step
+        <leaf-path>.npy              # one array per leaf (np.save, mmap-able)
+
+Design notes for the 1000-node target:
+  * Arrays are stored as *logical* (global) arrays keyed by tree path, not
+    by device — a checkpoint written on a (16,16) mesh restores onto a
+    (2,16,16) mesh or a different chip count unchanged: the loader simply
+    ``device_put``s each leaf with the *target* sharding ("elastic
+    restore").  On a real multi-host pod each host would write its owned
+    shards (process-local addressable data) with the same manifest format.
+  * ``save_async`` snapshots to host memory synchronously (cheap) and does
+    file I/O on a background thread — the train loop never blocks on disk.
+  * ``keep_n`` bounds disk usage; the newest N step dirs survive.
+  * bfloat16 round-trips via a raw-bytes view (npy has no bf16 dtype).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["CheckpointManager", "save_pytree", "load_pytree"]
+
+_MANIFEST = "manifest.json"
+
+
+def _flatten_with_paths(tree: Any) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(_path_str(p) for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def _path_str(entry: Any) -> str:
+    if hasattr(entry, "key"):
+        return str(entry.key)
+    if hasattr(entry, "idx"):
+        return str(entry.idx)
+    if hasattr(entry, "name"):
+        return str(entry.name)
+    return str(entry)
+
+
+def _leaf_filename(key: str) -> str:
+    return key.replace("/", ".") + ".npy"
+
+
+def save_pytree(directory: str, tree: Any, *, extra: Optional[Dict] = None) -> None:
+    """Write a pytree of arrays into ``directory`` (must not exist)."""
+    tmp = directory + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    entries = {}
+    for key, leaf in _flatten_with_paths(tree):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = _leaf_filename(key)
+        dtype = str(arr.dtype)
+        if arr.dtype == np.dtype("bfloat16"):
+            # npy can't store bf16: persist a uint16 view + logical dtype.
+            np.save(os.path.join(tmp, fname), arr.view(np.uint16))
+        else:
+            np.save(os.path.join(tmp, fname), arr)
+        entries[key] = {"file": fname, "dtype": dtype, "shape": list(arr.shape)}
+    manifest = {"entries": entries, "extra": extra or {}}
+    with open(os.path.join(tmp, _MANIFEST), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if os.path.exists(directory):
+        shutil.rmtree(directory)
+    os.replace(tmp, directory)  # atomic commit
+
+
+def load_pytree(
+    directory: str,
+    target_tree: Any,
+    *,
+    shardings: Any = None,
+) -> Tuple[Any, Dict]:
+    """Restore into the structure of ``target_tree``.
+
+    ``shardings``: optional matching pytree of NamedSharding — each leaf is
+    placed with its *target* sharding, which is what makes restore elastic
+    across mesh shapes / device counts.
+    """
+    with open(os.path.join(directory, _MANIFEST)) as f:
+        manifest = json.load(f)
+    entries = manifest["entries"]
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(target_tree)
+    shard_leaves = (
+        jax.tree.leaves(shardings) if shardings is not None else [None] * len(flat)
+    )
+    leaves = []
+    for (path, ref), sh in zip(flat, shard_leaves):
+        key = "/".join(_path_str(p) for p in path)
+        if key not in entries:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        meta = entries[key]
+        raw = np.load(os.path.join(directory, meta["file"]))
+        if meta["dtype"] == "bfloat16":
+            raw = raw.view(np.dtype("bfloat16"))
+        if tuple(raw.shape) != tuple(np.shape(ref)):
+            raise ValueError(
+                f"leaf {key!r}: checkpoint shape {raw.shape} != target "
+                f"{np.shape(ref)}"
+            )
+        leaves.append(jax.device_put(raw, sh) if sh is not None else raw)
+    return jax.tree_util.tree_unflatten(treedef, [l for l in leaves]), manifest[
+        "extra"
+    ]
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    """Step-indexed checkpoints with keep-N retention and async writes."""
+
+    root: str
+    keep_n: int = 3
+
+    def __post_init__(self) -> None:
+        os.makedirs(self.root, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # -- paths ---------------------------------------------------------------
+
+    def step_dir(self, step: int) -> str:
+        return os.path.join(self.root, f"step_{step:08d}")
+
+    def all_steps(self) -> List[int]:
+        steps = []
+        for name in os.listdir(self.root):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    steps.append(int(name[len("step_"):]))
+                except ValueError:
+                    continue
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    # -- save ------------------------------------------------------------------
+
+    def save(self, step: int, tree: Any, *, extra: Optional[Dict] = None) -> None:
+        save_pytree(self.step_dir(step), tree, extra=(extra or {}) | {"step": step})
+        self._gc()
+
+    def save_async(self, step: int, tree: Any, *, extra: Optional[Dict] = None) -> None:
+        """Snapshot to host now; write on a background thread."""
+        self.wait()  # one in-flight save at a time
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def _work():
+            try:
+                self.save(step, host_tree, extra=extra)
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=_work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # -- restore -----------------------------------------------------------------
+
+    def restore(
+        self, target_tree: Any, *, step: Optional[int] = None, shardings: Any = None
+    ) -> Tuple[Any, Dict]:
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.root}")
+        return load_pytree(self.step_dir(step), target_tree, shardings=shardings)
+
+    # -- retention -----------------------------------------------------------------
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: max(len(steps) - self.keep_n, 0)]:
+            shutil.rmtree(self.step_dir(s), ignore_errors=True)

@@ -1,0 +1,36 @@
+"""Scout-like cluster evaluation substrate (paper §IV).
+
+The paper evaluates on the Scout dataset (Hsu et al., "Arrow") — 1031 Spark
+and Hadoop executions over 69 AWS cluster configurations.  That dataset is
+not bundled in this offline container, so this package *emulates* it from the
+paper's published structure: the 69-config grid (`nodes`), the 16 jobs of
+Table I with their memory categories and GB requirements (`workloads`), and
+deterministic cost surfaces exhibiting the Fig. 1 memory cliff (`simulator`).
+"""
+
+from repro.cluster.nodes import (
+    ClusterConfig,
+    NodeType,
+    NODE_TYPES,
+    enumerate_cluster_configs,
+    make_cluster_search_space,
+)
+from repro.cluster.workloads import JOBS, JobSpec
+from repro.cluster.simulator import (
+    ClusterSimulator,
+    job_cost_table,
+    make_profile_run_fn,
+)
+
+__all__ = [
+    "ClusterConfig",
+    "ClusterSimulator",
+    "JOBS",
+    "JobSpec",
+    "NODE_TYPES",
+    "NodeType",
+    "enumerate_cluster_configs",
+    "job_cost_table",
+    "make_cluster_search_space",
+    "make_profile_run_fn",
+]

@@ -1,0 +1,112 @@
+"""The assigned input-shape cells and abstract input specs per cell.
+
+Four cells (LM-family shapes are seq_len × global_batch):
+
+  train_4k      4,096 × 256   — training step
+  prefill_32k  32,768 × 32    — inference prefill (fills the decode cache)
+  decode_32k   32,768 × 128   — one new token, KV/state cache at 32k
+  long_500k   524,288 × 1     — long-context decode; sub-quadratic archs only
+
+``decode_*`` / ``long_*`` lower ``serve_step`` (one token against a cache of
+seq_len), not ``train_step``.  ``input_specs`` returns weak-type-correct
+``jax.ShapeDtypeStruct`` stand-ins for every model input — no allocation —
+which is what the multi-pod dry-run lowers against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.model import Model
+from repro.models.spec import abstract_tree
+
+__all__ = ["ShapeCell", "CELLS", "cell_applicable", "input_specs", "cache_len"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+CELLS: Dict[str, ShapeCell] = {
+    c.name: c
+    for c in [
+        ShapeCell("train_4k", 4_096, 256, "train"),
+        ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+        ShapeCell("decode_32k", 32_768, 128, "decode"),
+        ShapeCell("long_500k", 524_288, 1, "decode"),
+    ]
+}
+
+
+def cell_applicable(cfg: ModelConfig, cell: ShapeCell) -> Tuple[bool, str]:
+    """(applicable, reason-if-not).  long_500k needs a sub-quadratic arch."""
+    if cell.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "full-attention arch: 500k-token cache is O(L²) — skipped"
+    return True, ""
+
+
+def cache_len(cell: ShapeCell) -> int:
+    return cell.seq_len
+
+
+def _token_batch(
+    cfg: ModelConfig, batch: int, seq: int, *, for_train: bool
+) -> Dict[str, Any]:
+    """Abstract batch dict for one forward/train step."""
+    out: Dict[str, Any] = {}
+    text_len = seq
+    if cfg.family == "vlm" and cfg.num_patch_tokens:
+        text_len = seq - cfg.num_patch_tokens
+        out["patches"] = jax.ShapeDtypeStruct(
+            (batch, cfg.num_patch_tokens, cfg.d_model), cfg.cdtype
+        )
+    if cfg.family == "encdec":
+        assert cfg.encoder is not None
+        out["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder.source_len, cfg.d_model), cfg.cdtype
+        )
+    out["tokens"] = jax.ShapeDtypeStruct((batch, text_len), jnp.int32)
+    if for_train:
+        out["loss_mask"] = jax.ShapeDtypeStruct((batch, text_len), jnp.float32)
+    return out
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every input of the cell's step fn.
+
+    train:   {"batch": {...}}                       → train_step(state, batch)
+    prefill: {"batch": {...}, "cache": {...}}       → prefill_step
+    decode:  {"tokens", "cache", "index"}           → serve_step
+    """
+    model = Model(cfg)
+    if cell.kind == "train":
+        return {"batch": _token_batch(cfg, cell.global_batch, cell.seq_len,
+                                      for_train=True)}
+    if cell.kind == "prefill":
+        cache = abstract_tree(model.cache_specs(cell.global_batch, cell.seq_len))
+        return {
+            "batch": _token_batch(cfg, cell.global_batch, cell.seq_len,
+                                  for_train=False),
+            "cache": cache,
+        }
+    if cell.kind == "decode":
+        cache = abstract_tree(model.cache_specs(cell.global_batch, cell.seq_len))
+        return {
+            "tokens": jax.ShapeDtypeStruct((cell.global_batch, 1), jnp.int32),
+            "cache": cache,
+            "index": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+    raise ValueError(cell.kind)

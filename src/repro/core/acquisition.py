@@ -1,0 +1,45 @@
+"""Acquisition functions for Bayesian-optimized configuration search.
+
+CherryPick (and hence Ruya) uses Expected Improvement: the next configuration
+to try is the one believed to yield the most significant cost saving over the
+best configuration seen so far.  Probability of Improvement is provided for
+completeness (it is the other acquisition the paper names).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["expected_improvement", "probability_of_improvement"]
+
+
+def _norm_pdf(z: jax.Array) -> jax.Array:
+    return jnp.exp(-0.5 * z * z) / jnp.sqrt(2.0 * jnp.pi)
+
+
+def _norm_cdf(z: jax.Array) -> jax.Array:
+    return 0.5 * (1.0 + jax.scipy.special.erf(z / jnp.sqrt(2.0)))
+
+
+def expected_improvement(
+    mean: jax.Array, std: jax.Array, best: jax.Array, xi: float = 0.0
+) -> jax.Array:
+    """EI for cost *minimization*: E[max(best - f, 0)].
+
+    ``mean``/``std``: GP posterior at candidate points; ``best``: lowest
+    observed cost; ``xi``: optional exploration margin.
+    """
+    std = jnp.maximum(std, 1e-12)
+    improvement = best - mean - xi
+    z = improvement / std
+    ei = improvement * _norm_cdf(z) + std * _norm_pdf(z)
+    return jnp.maximum(ei, 0.0)
+
+
+def probability_of_improvement(
+    mean: jax.Array, std: jax.Array, best: jax.Array, xi: float = 0.0
+) -> jax.Array:
+    """P[f < best - xi] under the GP posterior (cost minimization)."""
+    std = jnp.maximum(std, 1e-12)
+    return _norm_cdf((best - mean - xi) / std)

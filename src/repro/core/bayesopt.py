@@ -1,0 +1,168 @@
+"""Bayesian-optimized iterative configuration search (paper §III-E).
+
+Two searchers share one engine:
+
+  * ``cherrypick_search``  — the baseline: plain Bayesian optimization with a
+    Matérn-5/2 GP and Expected Improvement over the whole space (CherryPick,
+    Alipourfard et al., NSDI'17): 3 random initial configs, then argmax-EI,
+    stopping once max EI < 10 % of the best observed cost (and at least
+    ``min_observations`` configs were tried).
+
+  * ``ruya_search`` — the paper's contribution: the same engine, but run first
+    over the memory-derived *priority group*; only after the group is
+    exhausted does the search open up to the remaining configurations, with
+    the GP retaining every observation made so far.
+
+Both searchers can be run past their stopping criterion (``to_exhaustion``)
+so the evaluation can measure "after how many iterations was the optimal /
+near-optimal configuration first tried" (Table II) independently of when the
+stop fired; the would-have-stopped iteration is recorded in the result.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import fast_bo
+from repro.core.search_space import SearchSpace
+
+__all__ = ["BOSettings", "SearchTrace", "cherrypick_search", "ruya_search"]
+
+CostFn = Callable[[int], float]
+
+
+@dataclasses.dataclass(frozen=True)
+class BOSettings:
+    n_init: int = 3  # random initial configurations (CherryPick §4)
+    ei_stop_rel: float = 0.10  # stop when max EI < 10 % of best cost
+    min_observations: int = 6  # don't stop before this many trials
+    max_iters: Optional[int] = None
+    xi: float = 0.0
+
+
+@dataclasses.dataclass
+class SearchTrace:
+    """Complete record of one search run."""
+
+    tried: List[int]  # config indices in trial order
+    costs: List[float]  # observed costs in trial order
+    stop_iteration: Optional[int]  # 1-based iteration where the criterion fired
+    phase_boundary: Optional[int]  # trials made in the priority phase (Ruya)
+
+    @property
+    def best_cost(self) -> float:
+        return float(np.min(self.costs))
+
+    @property
+    def best_index(self) -> int:
+        return self.tried[int(np.argmin(self.costs))]
+
+    def iterations_until(self, threshold_cost: float) -> Optional[int]:
+        """1-based iteration at which a cost ≤ threshold was first observed."""
+        for i, c in enumerate(self.costs):
+            if c <= threshold_cost:
+                return i + 1
+        return None
+
+
+def _bo_loop(
+    space: SearchSpace,
+    cost_fn: CostFn,
+    rng: np.random.Generator,
+    candidate_order: Sequence[Sequence[int]],
+    settings: BOSettings,
+    to_exhaustion: bool,
+) -> SearchTrace:
+    """Shared engine.  ``candidate_order`` is a list of candidate *pools*;
+    pool k+1 is only opened once pool k is exhausted (Ruya's two phases).
+    The GP is always fit on every observation made so far."""
+    n = len(space)
+    tried: List[int] = []
+    costs: List[float] = []
+    stop_iteration: Optional[int] = None
+    phase_boundary: Optional[int] = None
+    encoded_all = np.asarray(space.encoded(), np.float32)
+
+    # Fixed-shape state for the jitted BO step.
+    obs_mask = np.zeros(n, bool)
+    y = np.zeros(n, np.float32)
+
+    def observe(idx: int) -> None:
+        c = float(cost_fn(idx))
+        tried.append(idx)
+        costs.append(c)
+        obs_mask[idx] = True
+        y[idx] = c
+
+    for phase, pool in enumerate(candidate_order):
+        pool = [int(i) for i in pool if not obs_mask[i]]
+        if not pool:
+            continue
+        if phase >= 1 and phase_boundary is None:
+            phase_boundary = len(tried)
+
+        # Random initialization only in the first phase; later phases reuse
+        # the GP knowledge gained so far (paper §III-E).
+        if phase == 0:
+            n_init = min(settings.n_init, len(pool))
+            init = rng.choice(len(pool), size=n_init, replace=False)
+            for idx in (pool[int(i)] for i in init):
+                observe(idx)
+
+        cand_mask = np.zeros(n, bool)
+        cand_mask[np.asarray(pool, np.int64)] = True
+
+        while bool(np.any(cand_mask & ~obs_mask)):
+            if settings.max_iters is not None and len(tried) >= settings.max_iters:
+                return SearchTrace(tried, costs, stop_iteration, phase_boundary)
+            pick, max_ei, best = fast_bo.bo_step(
+                encoded_all, obs_mask, y, cand_mask, xi=settings.xi
+            )
+            pick, max_ei, best = int(pick), float(max_ei), float(best)
+            if (
+                stop_iteration is None
+                and len(tried) >= settings.min_observations
+                and max_ei < settings.ei_stop_rel * best
+            ):
+                stop_iteration = len(tried)
+                if not to_exhaustion:
+                    return SearchTrace(tried, costs, stop_iteration, phase_boundary)
+            observe(pick)
+
+    return SearchTrace(tried, costs, stop_iteration, phase_boundary)
+
+
+def cherrypick_search(
+    space: SearchSpace,
+    cost_fn: CostFn,
+    rng: np.random.Generator,
+    *,
+    settings: BOSettings = BOSettings(),
+    to_exhaustion: bool = False,
+) -> SearchTrace:
+    """Baseline: plain CherryPick BO over the full space."""
+    return _bo_loop(
+        space, cost_fn, rng, [list(range(len(space)))], settings, to_exhaustion
+    )
+
+
+def ruya_search(
+    space: SearchSpace,
+    cost_fn: CostFn,
+    rng: np.random.Generator,
+    priority: Sequence[int],
+    remaining: Sequence[int],
+    *,
+    settings: BOSettings = BOSettings(),
+    to_exhaustion: bool = False,
+) -> SearchTrace:
+    """Ruya: BO over the priority group first, then over the remaining space.
+
+    With an empty ``remaining`` (unclear jobs, or a requirement every config
+    satisfies) this degrades exactly to the baseline — the paper's fallback.
+    """
+    pools = [list(priority)] + ([list(remaining)] if len(remaining) else [])
+    return _bo_loop(space, cost_fn, rng, pools, settings, to_exhaustion)

@@ -1,0 +1,131 @@
+"""Gaussian-process regression in pure JAX.
+
+This is the surrogate model used by the CherryPick-style Bayesian optimization
+(Alipourfard et al., NSDI'17) that Ruya builds on.  Matérn-5/2 kernel over the
+encoded configuration features, observation noise, Cholesky-based posterior.
+
+Hyperparameters (lengthscale, amplitude, noise) are selected by maximizing the
+log marginal likelihood over a small deterministic grid — robust, derivative
+free, and cheap for the O(70)-point spaces this paper works with.  Everything
+is jnp so the whole fit+predict path is jittable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["GPParams", "GPPosterior", "matern52", "fit_gp", "gp_predict"]
+
+_JITTER = 1e-8
+
+
+@dataclasses.dataclass(frozen=True)
+class GPParams:
+    """Kernel hyperparameters."""
+
+    lengthscale: jax.Array  # (n_features,) or scalar
+    amplitude: jax.Array  # scalar
+    noise: jax.Array  # scalar observation noise variance
+
+
+@dataclasses.dataclass(frozen=True)
+class GPPosterior:
+    """Cached posterior factorization for prediction."""
+
+    params: GPParams
+    x_train: jax.Array  # (n, d) standardized features
+    chol: jax.Array  # (n, n) lower Cholesky of K + noise*I
+    alpha: jax.Array  # (n,) K^{-1} (y - mean)
+    y_mean: jax.Array  # scalar — standardization mean of y
+    y_std: jax.Array  # scalar — standardization scale of y
+
+
+def matern52(x1: jax.Array, x2: jax.Array, params: GPParams) -> jax.Array:
+    """Matérn-5/2 kernel matrix between (n,d) and (m,d)."""
+    scaled1 = x1 / params.lengthscale
+    scaled2 = x2 / params.lengthscale
+    # Pairwise Euclidean distances, numerically clamped.
+    d2 = (
+        jnp.sum(scaled1**2, -1)[:, None]
+        + jnp.sum(scaled2**2, -1)[None, :]
+        - 2.0 * scaled1 @ scaled2.T
+    )
+    d = jnp.sqrt(jnp.maximum(d2, 1e-12))
+    sqrt5_d = jnp.sqrt(5.0) * d
+    return params.amplitude * (1.0 + sqrt5_d + 5.0 / 3.0 * d**2) * jnp.exp(-sqrt5_d)
+
+
+def _log_marginal_likelihood(
+    x: jax.Array, y: jax.Array, params: GPParams
+) -> jax.Array:
+    n = x.shape[0]
+    k = matern52(x, x, params) + (params.noise + _JITTER) * jnp.eye(n)
+    chol = jnp.linalg.cholesky(k)
+    alpha = jax.scipy.linalg.cho_solve((chol, True), y)
+    return (
+        -0.5 * y @ alpha
+        - jnp.sum(jnp.log(jnp.diagonal(chol)))
+        - 0.5 * n * jnp.log(2.0 * jnp.pi)
+    )
+
+
+def _candidate_grid(n_features: int) -> Tuple[jax.Array, jax.Array]:
+    """Deterministic (lengthscale, noise) grid for hyperparameter selection."""
+    lengthscales = jnp.array([0.1, 0.25, 0.5, 1.0, 2.0, 4.0])
+    noises = jnp.array([1e-4, 1e-2, 1e-1])
+    ls, nz = jnp.meshgrid(lengthscales, noises, indexing="ij")
+    return ls.reshape(-1), nz.reshape(-1)
+
+
+def fit_gp(x: jax.Array, y: jax.Array) -> GPPosterior:
+    """Fit a GP to observations.
+
+    ``x``: (n, d) raw features (already encoded); ``y``: (n,) raw costs.
+    Features are assumed pre-standardized by the search-space encoder;
+    targets are standardized internally so the amplitude grid is scale free.
+    """
+    x = jnp.asarray(x, jnp.float64 if jax.config.read("jax_enable_x64") else jnp.float32)
+    y = jnp.asarray(y, x.dtype)
+    y_mean = jnp.mean(y)
+    y_std = jnp.maximum(jnp.std(y), 1e-8)
+    y_n = (y - y_mean) / y_std
+
+    ls_grid, nz_grid = _candidate_grid(x.shape[-1])
+
+    def lml_for(ls, nz):
+        p = GPParams(lengthscale=ls, amplitude=jnp.asarray(1.0, x.dtype), noise=nz)
+        return _log_marginal_likelihood(x, y_n, p)
+
+    lmls = jax.vmap(lml_for)(ls_grid, nz_grid)
+    lmls = jnp.where(jnp.isfinite(lmls), lmls, -jnp.inf)
+    best = jnp.argmax(lmls)
+    params = GPParams(
+        lengthscale=ls_grid[best],
+        amplitude=jnp.asarray(1.0, x.dtype),
+        noise=nz_grid[best],
+    )
+
+    n = x.shape[0]
+    k = matern52(x, x, params) + (params.noise + _JITTER) * jnp.eye(n, dtype=x.dtype)
+    chol = jnp.linalg.cholesky(k)
+    alpha = jax.scipy.linalg.cho_solve((chol, True), y_n)
+    return GPPosterior(
+        params=params, x_train=x, chol=chol, alpha=alpha, y_mean=y_mean, y_std=y_std
+    )
+
+
+def gp_predict(post: GPPosterior, x_new: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Posterior mean and standard deviation at ``x_new`` (m, d), in raw y units."""
+    x_new = jnp.asarray(x_new, post.x_train.dtype)
+    k_star = matern52(post.x_train, x_new, post.params)  # (n, m)
+    mean_n = k_star.T @ post.alpha
+    v = jax.scipy.linalg.solve_triangular(post.chol, k_star, lower=True)
+    var_n = post.params.amplitude - jnp.sum(v * v, axis=0)
+    var_n = jnp.maximum(var_n, 1e-12)
+    mean = mean_n * post.y_std + post.y_mean
+    std = jnp.sqrt(var_n) * post.y_std
+    return mean, std

@@ -1,0 +1,97 @@
+"""End-to-end Ruya tuner: profile → categorize → split → two-phase BO search.
+
+This module is environment-agnostic.  An environment supplies:
+  * a profiling run function   run(sample_size) -> (runtime_s, peak_mem_bytes)
+  * the full input size        (bytes, or tokens-per-device for the TPU tuner)
+  * the discrete search space  (SearchSpace)
+  * a trial cost function      cost_fn(config_index) -> float
+
+Two environments ship with the repo: the Scout-like cluster emulator
+(`repro.cluster`) reproducing the paper's evaluation, and the TPU
+sharding-configuration autotuner (`repro.launch.autotune`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.bayesopt import (
+    BOSettings,
+    SearchTrace,
+    cherrypick_search,
+    ruya_search,
+)
+from repro.core.memory_model import MemoryModel
+from repro.core.profiler import ProfileResult, profile_job
+from repro.core.search_space import SearchSpace, split_search_space
+
+__all__ = ["RuyaReport", "run_ruya", "run_cherrypick"]
+
+
+@dataclasses.dataclass
+class RuyaReport:
+    profile: ProfileResult
+    priority: Tuple[int, ...]
+    remaining: Tuple[int, ...]
+    trace: SearchTrace
+
+    @property
+    def memory_model(self) -> MemoryModel:
+        return self.profile.model
+
+
+def run_ruya(
+    *,
+    profile_run: Callable[[float], Tuple[float, float]],
+    full_input_size: float,
+    space: SearchSpace,
+    cost_fn: Callable[[int], float],
+    rng: np.random.Generator,
+    per_node_overhead: float = 0.0,
+    leeway: float = 0.10,
+    flat_fraction: float = 1.0 / 7.0,
+    settings: BOSettings = BOSettings(),
+    to_exhaustion: bool = False,
+    profile_result: Optional[ProfileResult] = None,
+) -> RuyaReport:
+    """The full Ruya pipeline.  ``profile_result`` can be injected to reuse a
+    previous profiling phase (the paper: profiling only repeats when the
+    execution context changes)."""
+    prof = profile_result or profile_job(profile_run, full_input_size)
+    prio, rest = split_search_space(
+        space,
+        prof.model,
+        full_input_size,
+        per_node_overhead=per_node_overhead,
+        leeway=leeway,
+        flat_fraction=flat_fraction,
+    )
+    trace = ruya_search(
+        space,
+        cost_fn,
+        rng,
+        prio,
+        rest,
+        settings=settings,
+        to_exhaustion=to_exhaustion,
+    )
+    return RuyaReport(
+        profile=prof, priority=tuple(prio), remaining=tuple(rest), trace=trace
+    )
+
+
+def run_cherrypick(
+    *,
+    space: SearchSpace,
+    cost_fn: Callable[[int], float],
+    rng: np.random.Generator,
+    settings: BOSettings = BOSettings(),
+    to_exhaustion: bool = False,
+) -> SearchTrace:
+    """The baseline, for side-by-side evaluation (paper §IV-C)."""
+    return cherrypick_search(
+        space, cost_fn, rng, settings=settings, to_exhaustion=to_exhaustion
+    )

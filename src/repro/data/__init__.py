@@ -1,0 +1,5 @@
+"""Deterministic synthetic data pipeline."""
+
+from repro.data.pipeline import SyntheticDataset, make_batch, shard_batch
+
+__all__ = ["SyntheticDataset", "make_batch", "shard_batch"]

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the zoo's compute hot-spots.
+
+Three kernels, each a package with ``<name>.py`` (pl.pallas_call + explicit
+BlockSpec VMEM tiling), ``ops.py`` (jit'd public wrapper + custom VJP) and
+``ref.py`` (pure-jnp oracle used by tests and as the XLA fallback):
+
+  * ``flash_attention`` — online-softmax causal GQA attention
+  * ``rmsnorm``         — fused RMSNorm
+  * ``ssd``             — Mamba-2 SSD intra-chunk term
+
+The kernels target TPU (MXU-aligned tiles, VMEM residency); on this CPU
+container they are validated with ``interpret=True``.  The Ruya paper's own
+contribution is framework-level (no kernel to port) — these are the
+perf-critical *substrate* layers its tuner schedules (DESIGN.md §2.1).
+"""

@@ -1,0 +1,90 @@
+"""Public flash-attention op: padding, TPU/CPU dispatch, custom VJP.
+
+Forward runs the Pallas kernel on TPU (or in interpret mode when forced);
+everywhere else it falls back to the jnp oracle so the same model code runs
+on any backend.  The backward pass is the algebraic reference VJP — the
+standard "kernel forward, XLA backward" split: training still gets the
+flash forward's memory win inside remat'd layer bodies (the backward
+recompute *also* uses the kernel forward), while gradients stay exact.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import ref
+from repro.kernels.flash_attention.flash_attention import (
+    flash_attention_kernel_call,
+)
+
+__all__ = ["flash_attention"]
+
+
+def _should_use_kernel(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return True  # caller explicitly chose the kernel path
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention(
+    q: jax.Array,  # (B, T, H, D)
+    k: jax.Array,  # (B, S, KV, D)
+    v: jax.Array,
+    causal: bool = True,
+    sm_scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    return _forward(q, k, v, causal, sm_scale, block_q, block_k, interpret)
+
+
+def _forward(q, k, v, causal, sm_scale, block_q, block_k, interpret):
+    if not _should_use_kernel(interpret):
+        return ref.attention_ref(q, k, v, causal=causal, sm_scale=sm_scale)
+    t, s = q.shape[1], k.shape[1]
+    qp = _pad_to(q, 1, block_q)
+    kp = _pad_to(k, 1, block_k)
+    vp = _pad_to(v, 1, block_k)
+    out = flash_attention_kernel_call(
+        qp, kp, vp,
+        causal=causal, sm_scale=sm_scale,
+        block_q=block_q, block_k=block_k,
+        kv_valid_len=s,
+        interpret=bool(interpret),
+    )
+    return out[:, :t]
+
+
+def _fwd(q, k, v, causal, sm_scale, block_q, block_k, interpret):
+    out = _forward(q, k, v, causal, sm_scale, block_q, block_k, interpret)
+    return out, (q, k, v)
+
+
+def _bwd(causal, sm_scale, block_q, block_k, interpret, residuals, g):
+    q, k, v = residuals
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: ref.attention_ref(
+            q_, k_, v_, causal=causal, sm_scale=sm_scale
+        ),
+        q, k, v,
+    )
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for flash attention (GQA, optional causal mask)."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(
+    q: jax.Array,  # (B, T, H, D)
+    k: jax.Array,  # (B, S, KV, D)
+    v: jax.Array,  # (B, S, KV, D)
+    *,
+    causal: bool = True,
+    sm_scale: Optional[float] = None,
+) -> jax.Array:
+    b, t, h, d = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    group = h // kv
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(d)
+    qg = q.reshape(b, t, kv, group, d)
+    logits = jnp.einsum(
+        "btkgh,bskh->bkgts", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    if causal:
+        mask = jnp.arange(t)[:, None] >= jnp.arange(s)[None, :]
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgts,bskh->btkgh", probs, v.astype(jnp.float32))
+    return out.reshape(b, t, h, d).astype(q.dtype)

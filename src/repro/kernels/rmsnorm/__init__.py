@@ -1,0 +1,4 @@
+from repro.kernels.rmsnorm import ops, ref
+from repro.kernels.rmsnorm.ops import rmsnorm
+
+__all__ = ["ops", "ref", "rmsnorm"]

@@ -1,0 +1,55 @@
+"""Public fused-RMSNorm op: flattening, padding, dispatch, custom VJP."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rmsnorm import ref
+from repro.kernels.rmsnorm.rmsnorm import rmsnorm_kernel_call
+
+__all__ = ["rmsnorm"]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def rmsnorm(
+    x: jax.Array,  # (..., D)
+    scale: jax.Array,  # (D,)
+    eps: float = 1e-6,
+    block_rows: int = 256,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    return _forward(x, scale, eps, block_rows, interpret)
+
+
+def _forward(x, scale, eps, block_rows, interpret):
+    use_kernel = interpret is not None or jax.default_backend() == "tpu"
+    if not use_kernel:
+        return ref.rmsnorm_ref(x, scale, eps)
+    shape = x.shape
+    d = shape[-1]
+    flat = x.reshape(-1, d)
+    rows = flat.shape[0]
+    pad = (-rows) % block_rows
+    if pad:
+        flat = jnp.pad(flat, ((0, pad), (0, 0)))
+    out = rmsnorm_kernel_call(
+        flat, scale, eps=eps, block_rows=block_rows, interpret=bool(interpret)
+    )
+    return out[:rows].reshape(shape)
+
+
+def _fwd(x, scale, eps, block_rows, interpret):
+    return _forward(x, scale, eps, block_rows, interpret), (x, scale)
+
+
+def _bwd(eps, block_rows, interpret, res, g):
+    x, scale = res
+    _, vjp = jax.vjp(lambda x_, s_: ref.rmsnorm_ref(x_, s_, eps), x, scale)
+    return vjp(g)
+
+
+rmsnorm.defvjp(_fwd, _bwd)

@@ -1,0 +1,4 @@
+from repro.kernels.ssd import ops, ref
+from repro.kernels.ssd.ops import ssd_diag_chunk
+
+__all__ = ["ops", "ref", "ssd_diag_chunk"]

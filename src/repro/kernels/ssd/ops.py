@@ -1,0 +1,53 @@
+"""Public SSD intra-chunk op: reshaping, dispatch, custom VJP."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd import ref
+from repro.kernels.ssd.ssd import ssd_diag_kernel_call
+
+__all__ = ["ssd_diag_chunk"]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def ssd_diag_chunk(
+    x: jax.Array,  # (B, NC, Q, H, P)
+    dt: jax.Array,  # (B, NC, Q, H)
+    lA: jax.Array,  # (B, NC, Q, H)
+    B_: jax.Array,  # (B, NC, Q, H, N) — head-expanded
+    C_: jax.Array,  # (B, NC, Q, H, N)
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    return _forward(x, dt, lA, B_, C_, interpret)
+
+
+def _forward(x, dt, lA, B_, C_, interpret):
+    use_kernel = interpret is not None or jax.default_backend() == "tpu"
+    if not use_kernel:
+        return ref.ssd_diag_ref(x, dt, lA, B_, C_)
+    b, nc, q, h, p = x.shape
+    n = B_.shape[-1]
+    flat = lambda a: a.reshape((b * nc,) + a.shape[2:])
+    y = ssd_diag_kernel_call(
+        flat(x), flat(dt), flat(lA), flat(B_), flat(C_),
+        interpret=bool(interpret),
+    )
+    return y.reshape(b, nc, q, h, p)
+
+
+def _fwd(x, dt, lA, B_, C_, interpret):
+    return _forward(x, dt, lA, B_, C_, interpret), (x, dt, lA, B_, C_)
+
+
+def _bwd(interpret, res, g):
+    x, dt, lA, B_, C_ = res
+    _, vjp = jax.vjp(ref.ssd_diag_ref, x, dt, lA, B_, C_)
+    return vjp(g)
+
+
+ssd_diag_chunk.defvjp(_fwd, _bwd)

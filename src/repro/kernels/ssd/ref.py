@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the SSD intra-chunk (diagonal) term.
+
+Matches the non-kernel branch of ``repro.models.ssm.ssd_chunked``:
+
+    y[i] = Σ_{j ≤ i} (C_i · B_j) · exp(Σ_{l=j+1..i} lA_l) · dt_j · x_j
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ssd_diag_ref"]
+
+
+def _segsum(lA: jax.Array) -> jax.Array:
+    q = lA.shape[-1]
+    cs = jnp.cumsum(lA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    ii = jnp.arange(q)
+    return jnp.where(ii[:, None] >= ii[None, :], diff, -jnp.inf)
+
+
+def ssd_diag_ref(
+    x: jax.Array,  # (B, NC, Q, H, P)
+    dt: jax.Array,  # (B, NC, Q, H)
+    lA: jax.Array,  # (B, NC, Q, H) log-decays (dt·A)
+    B_: jax.Array,  # (B, NC, Q, H, N)
+    C_: jax.Array,  # (B, NC, Q, H, N)
+) -> jax.Array:
+    seg = _segsum(jnp.moveaxis(lA.astype(jnp.float32), -1, -2))  # (B,NC,H,Q,Q)
+    decay = jnp.exp(seg)
+    scores = jnp.einsum(
+        "bcqhn,bckhn->bchqk", C_.astype(jnp.float32), B_.astype(jnp.float32)
+    )
+    return jnp.einsum(
+        "bchqk,bckh,bckhp->bcqhp",
+        scores * decay,
+        dt.astype(jnp.float32),
+        x.astype(jnp.float32),
+    )

@@ -1,0 +1,84 @@
+"""Mamba-2 SSD intra-chunk Pallas kernel.
+
+The intra-chunk (diagonal) term is the SSD compute hot-spot: per
+(batch, chunk, head) it is two GEMMs around an elementwise decay mask —
+
+    scores = C · Bᵀ            (Q×N · N×Q  → Q×Q)
+    y      = (scores ⊙ D ⊙ dt) · x   (Q×Q · Q×P → Q×P)
+
+with D[i,j] = exp(Σ_{l=j+1..i} lA_l) for i ≥ j, 0 above the diagonal.
+
+TPU mapping: grid = (B·NC, H); one grid cell holds the whole (Q, ·) working
+set in VMEM — at the zoo's shapes (Q=256, N≤128, P=64) that is
+Q·N + Q·Q + Q·P + Q·2 floats ≈ 0.6 MB, MXU-aligned on every GEMM dim
+(Q, N, P all multiples of 64/128).  The segment-sum mask is built in-kernel
+from the cumulative log-decays — O(Q) loads instead of materializing the
+(Q, Q) decay in HBM, which is exactly the data-movement the fused kernel
+eliminates (the unfused XLA path writes/reads the Q×Q decay + scores).
+
+The inter-chunk recurrence stays in XLA (a short lax.scan over chunk
+states — latency-bound, no kernel win).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["ssd_diag_kernel_call"]
+
+
+def _kernel(x_ref, dt_ref, la_ref, b_ref, c_ref, o_ref):
+    # Tiles per (b·c, h) cell: x (Q,P), dt (Q,1), lA (Q,1), B (Q,N), C (Q,N).
+    x = x_ref[0, :, 0, :].astype(jnp.float32)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)  # (Q,)
+    la = la_ref[0, :, 0].astype(jnp.float32)  # (Q,)
+    bb = b_ref[0, :, 0, :].astype(jnp.float32)
+    cc = c_ref[0, :, 0, :].astype(jnp.float32)
+
+    q = x.shape[0]
+    cs = jnp.cumsum(la)  # (Q,)
+    seg = cs[:, None] - cs[None, :]  # Σ_{l=j+1..i} lA_l
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    decay = jnp.where(ii >= jj, jnp.exp(seg), 0.0)  # (Q, Q)
+
+    scores = jax.lax.dot_general(
+        cc, bb, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (Q, Q) = C·Bᵀ
+    w = scores * decay * dt[None, :]
+    y = jax.lax.dot_general(
+        w, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (Q, P)
+    o_ref[0, :, 0, :] = y
+
+
+def ssd_diag_kernel_call(
+    x: jax.Array,  # (BC, Q, H, P)  — batch·chunks flattened
+    dt: jax.Array,  # (BC, Q, H)
+    lA: jax.Array,  # (BC, Q, H)
+    B_: jax.Array,  # (BC, Q, H, N) — already head-expanded
+    C_: jax.Array,  # (BC, Q, H, N)
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    bc, q, h, p = x.shape
+    n = B_.shape[-1]
+    grid = (bc, h)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q, 1, p), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1, q, 1), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, q, 1), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, q, 1, n), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1, q, 1, n), lambda i, j: (i, 0, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q, 1, p), lambda i, j: (i, 0, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bc, q, h, p), jnp.float32),
+        interpret=interpret,
+    )(x, dt, lA, B_, C_)

@@ -1,0 +1,1 @@
+"""Launch layer: production meshes, AOT dry-run, train/serve drivers, autotuner."""

@@ -1,0 +1,290 @@
+"""Cost analysis of optimized (post-SPMD) HLO text with correct loop scaling.
+
+``compiled.cost_analysis()`` counts every while-loop body ONCE — a
+scan-over-layers transformer under-reports FLOPs by ~num_layers, and the
+FSDP all-gathers inside the layer loop disappear from any naive grep of the
+module text.  This analyzer walks the computation graph of
+``compiled.as_text()`` and multiplies loop-body costs by the
+``known_trip_count`` XLA records in each while's backend_config, giving:
+
+  * ``flops``            — 2·M·N·K per dot (batch dims included), loop-scaled
+  * ``collective_bytes`` — result bytes of all-reduce / all-gather /
+                           reduce-scatter / all-to-all / collective-permute
+                           (and their -start forms), loop-scaled; these are
+                           PER-PARTITION shapes, i.e. bytes through one chip
+  * ``hbm_bytes``        — Σ (operand + result bytes) over materializing ops
+                           (fusions, dots, collectives, slices, copies…),
+                           loop-scaled: a buffer-traffic model of HBM bytes
+
+Branches of ``conditional`` are counted at the maximum across branches
+(upper bound; noted in EXPERIMENTS.md for the one arch that uses lax.cond —
+zamba2's every-6-layers shared attention).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["HloCost", "analyze_hlo"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# Ops that materialize buffers for the HBM-traffic model.  Elementwise ops
+# appear inside fusions (counted as one unit); these are the top-level
+# buffer producers/consumers.
+_MATERIALIZING = (
+    "fusion", "dot", "convolution", "copy", "convert", "transpose",
+    "dynamic-slice", "dynamic-update-slice", "slice", "concatenate",
+    "broadcast", "reduce", "reduce-window", "scatter", "gather", "select",
+    "sort", "reverse", "pad", "iota", "add", "multiply", "subtract",
+    "divide", "maximum", "minimum", "exponential", "rsqrt", "tanh",
+    "compare", "reduce-precision", "bitcast-convert",
+) + _COLLECTIVES
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    collective_bytes: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_breakdown: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def __add__(self, other: "HloCost") -> "HloCost":
+        bd = dict(self.collective_breakdown)
+        for k, v in other.collective_breakdown.items():
+            bd[k] = bd.get(k, 0.0) + v
+        return HloCost(
+            self.flops + other.flops,
+            self.collective_bytes + other.collective_bytes,
+            self.hbm_bytes + other.hbm_bytes,
+            bd,
+        )
+
+    def scaled(self, n: float) -> "HloCost":
+        return HloCost(
+            self.flops * n,
+            self.collective_bytes * n,
+            self.hbm_bytes * n,
+            {k: v * n for k, v in self.collective_breakdown.items()},
+        )
+
+
+def _type_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string (arrays and (possibly nested) tuples)."""
+    total = 0
+    for m in re.finditer(r"(\w+)\[([0-9,]*)\]", type_str):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(x) for x in m.group(2).split(",") if x]
+        total += math.prod(dims) * _DTYPE_BYTES[dt] if dims else _DTYPE_BYTES[dt]
+    return total
+
+
+def _array_dims(type_str: str) -> List[int]:
+    m = re.search(r"\w+\[([0-9,]*)\]", type_str)
+    if not m:
+        return []
+    return [int(x) for x in m.group(1).split(",") if x]
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    type_str: str
+    op: str
+    operands: List[str]
+    attrs: str
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\],{}\/\* ]+?))\s+"
+    r"([\w\-]+)\((.*?)\)(.*)$"
+)
+_COMP_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s+->")
+
+
+def _parse_computations(text: str) -> Tuple[Dict[str, List[_Instr]], str]:
+    comps: Dict[str, List[_Instr]] = {}
+    current: Optional[str] = None
+    entry: Optional[str] = None
+    for line in text.splitlines():
+        if not line.startswith(" ") and ("{" in line) and ("->" in line):
+            m = _COMP_HEADER_RE.match(line.strip())
+            if m:
+                current = m.group(2)
+                comps[current] = []
+                if m.group(1):
+                    entry = current
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        if current is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op, operands_str, attrs = m.groups()
+        operands = re.findall(r"%([\w\.\-]+)", operands_str)
+        comps[current].append(_Instr(name, type_str.strip(), op, operands, attrs))
+    if entry is None:
+        raise ValueError("no ENTRY computation found in HLO text")
+    return comps, entry
+
+
+def _trip_count(attrs: str) -> float:
+    m = re.search(r'known_trip_count[^0-9]*"?n"?[^0-9]*(\d+)', attrs)
+    return float(m.group(1)) if m else 1.0
+
+
+def _called_computations(attrs: str) -> List[str]:
+    out = []
+    m = re.search(r"calls=%?([\w\.\-]+)", attrs)
+    if m:
+        out.append(m.group(1))
+    m = re.search(r"to_apply=%?([\w\.\-]+)", attrs)
+    if m:
+        out.append(m.group(1))
+    return out
+
+
+def _fusion_write_bytes(instr: _Instr, comps: Dict[str, List[_Instr]]) -> float:
+    """Bytes a fusion writes.  In-place dynamic-update-slice fusions (XLA
+    aliases input and output) only write the update slice — resolve the
+    update operand's type inside the fused computation."""
+    result = float(_type_bytes(instr.type_str))
+    called = _called_computations(instr.attrs)
+    if not called:
+        return result
+    body = comps.get(called[0], [])
+    dus = [i for i in body if i.op == "dynamic-update-slice"]
+    if not dus:
+        return result
+    written = 0.0
+    for d in dus:
+        if len(d.operands) > 1:
+            for instr2 in body:
+                if instr2.name == d.operands[1]:
+                    written += float(_type_bytes(instr2.type_str))
+                    break
+    return written if written > 0 else result
+
+
+def analyze_hlo(text: str) -> HloCost:
+    comps, entry = _parse_computations(text)
+    memo: Dict[str, HloCost] = {}
+
+    def shape_of(comp: List[_Instr], name: str) -> Optional[List[int]]:
+        for instr in comp:
+            if instr.name == name:
+                return _array_dims(instr.type_str)
+        return None
+
+    def cost_of(comp_name: str) -> HloCost:
+        if comp_name in memo:
+            return memo[comp_name]
+        memo[comp_name] = HloCost()  # cycle guard
+        comp = comps.get(comp_name)
+        if comp is None:
+            return memo[comp_name]
+        total = HloCost()
+        for instr in comp:
+            op = instr.op
+            if op == "dot":
+                out_elems = math.prod(_array_dims(instr.type_str) or [1])
+                lhs_dims = shape_of(comp, instr.operands[0]) or []
+                cdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.attrs)
+                k = 1
+                if cdims and lhs_dims:
+                    for i in cdims.group(1).split(","):
+                        if i:
+                            k *= lhs_dims[int(i)]
+                flops = 2.0 * out_elems * k
+                total = total + HloCost(flops=flops)
+            base = op.replace("-start", "")
+            if base in _COLLECTIVES and not op.endswith("-done"):
+                b = float(_type_bytes(instr.type_str))
+                bd = {base: b}
+                total = total + HloCost(collective_bytes=b, collective_breakdown=bd)
+            if op in _MATERIALIZING:
+                # Traffic model: every materialized buffer is written once and
+                # read once downstream → 2 × bytes-written.  In-place update
+                # ops only write the updated slice (XLA aliases the buffer).
+                def _operand_bytes(idx: int) -> float:
+                    if idx >= len(instr.operands):
+                        return 0.0
+                    for instr2 in comp:
+                        if instr2.name == instr.operands[idx]:
+                            return float(_type_bytes(instr2.type_str))
+                    return 0.0
+
+                if op == "dynamic-update-slice":
+                    wb = _operand_bytes(1)
+                elif op == "scatter":
+                    wb = _operand_bytes(2)
+                elif op == "fusion":
+                    wb = _fusion_write_bytes(instr, comps)
+                else:
+                    wb = float(_type_bytes(instr.type_str))
+                total = total + HloCost(hbm_bytes=2.0 * wb)
+            if op == "while":
+                body = re.search(r"body=%?([\w\.\-]+)", instr.attrs)
+                cond = re.search(r"condition=%?([\w\.\-]+)", instr.attrs)
+                n = _trip_count(instr.attrs)
+                inner = HloCost()
+                if body:
+                    inner = inner + cost_of(body.group(1))
+                if cond:
+                    inner = inner + cost_of(cond.group(1))
+                total = total + inner.scaled(n)
+            elif op == "conditional":
+                branches = re.search(
+                    r"branch_computations=\{([^}]*)\}", instr.attrs
+                )
+                names: List[str] = []
+                if branches:
+                    names = re.findall(r"%?([\w\.\-]+)", branches.group(1))
+                else:
+                    names = [
+                        m.group(1)
+                        for m in re.finditer(
+                            r"(?:true|false)_computation=%?([\w\.\-]+)", instr.attrs
+                        )
+                    ]
+                if names:
+                    best = None
+                    for nm in names:
+                        c = cost_of(nm)
+                        if best is None or c.flops > best.flops:
+                            best = c
+                    total = total + (best or HloCost())
+            else:
+                for called in _called_computations(instr.attrs):
+                    inner = cost_of(called)
+                    # Ops inside a fusion/apply computation do not touch HBM
+                    # individually — the call site's operands+result (already
+                    # counted via _MATERIALIZING) are the real traffic.
+                    total = total + HloCost(
+                        flops=inner.flops,
+                        collective_bytes=inner.collective_bytes,
+                        hbm_bytes=0.0,
+                        collective_breakdown=inner.collective_breakdown,
+                    )
+        memo[comp_name] = total
+        return total
+
+    return cost_of(entry)

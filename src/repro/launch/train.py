@@ -1,0 +1,86 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [--smoke]``.
+
+Runs the fault-tolerant training loop (checkpoint/restart, preemption
+handling, straggler monitor) for any registered architecture.  On this CPU
+container use ``--smoke`` (reduced config); on a TPU pod the same driver
+runs the full config across the production mesh by passing ``--mesh``.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--learning-rate", type=float, default=None)
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", choices=["none", "single_pod", "multi_pod"],
+                    default="none")
+    args = ap.parse_args()
+
+    import repro.configs as C
+    from repro.checkpoint import CheckpointManager
+    from repro.data import SyntheticDataset, shard_batch
+    from repro.models import Model
+    from repro.runtime.loop import PreemptionGuard, TrainLoop
+    from repro.runtime.steps import init_train_state, make_train_step
+
+    spec = C.smoke(args.arch) if args.smoke else C.get(args.arch)
+    ex = spec.exec
+    if args.learning_rate is not None:
+        ex = ex.replace(learning_rate=args.learning_rate)
+    if args.microbatches is not None:
+        ex = ex.replace(num_microbatches=args.microbatches)
+    ex = ex.replace(total_steps=max(args.steps, 1))
+
+    model = Model(spec.model)
+    state = init_train_state(model, ex, jax.random.key(args.seed))
+
+    if args.mesh != "none":
+        from repro.configs.shapes import ShapeCell
+        from repro.launch.build import build_cell
+        from repro.launch.mesh import make_production_mesh
+
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multi_pod"))
+        cell = ShapeCell("cli", args.seq_len, args.global_batch, "train")
+        built = build_cell(spec, cell, mesh, exec_override=ex)
+        step_fn = jax.jit(built.step_fn, in_shardings=built.in_shardings,
+                          out_shardings=built.out_shardings,
+                          donate_argnums=built.donate_argnums)
+        state = jax.device_put(state, built.in_shardings[0])
+    else:
+        step_fn = jax.jit(make_train_step(model, ex), donate_argnums=(0,))
+
+    ds = SyntheticDataset(spec.model, args.global_batch, args.seq_len,
+                          seed=args.seed)
+    loop = TrainLoop(
+        train_step=step_fn,
+        batch_at=ds.batch_at,
+        place_batch=shard_batch,
+        state=state,
+        checkpoints=CheckpointManager(args.ckpt_dir, keep_n=3),
+        checkpoint_every=args.ckpt_every,
+        log_every=args.log_every,
+        guard=PreemptionGuard(install=True),
+    )
+    loop.maybe_restore()
+    result = loop.run(args.steps)
+    print(f"[done] exit={result['exit']} final_step={result['final_step']} "
+          f"stragglers={len(result['stragglers'])}")
+
+
+if __name__ == "__main__":
+    main()

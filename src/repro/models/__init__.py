@@ -1,0 +1,28 @@
+"""Model zoo substrate: functional JAX models for the ten assigned archs."""
+
+from repro.models.config import EncoderConfig, ModelConfig, MoEConfig, SSMConfig
+from repro.models.model import Model, active_params, total_params
+from repro.models.spec import (
+    TensorSpec,
+    abstract_tree,
+    count_params,
+    init_tree,
+    partition_tree,
+    tree_bytes,
+)
+
+__all__ = [
+    "EncoderConfig",
+    "Model",
+    "ModelConfig",
+    "MoEConfig",
+    "SSMConfig",
+    "TensorSpec",
+    "abstract_tree",
+    "active_params",
+    "count_params",
+    "init_tree",
+    "partition_tree",
+    "total_params",
+    "tree_bytes",
+]

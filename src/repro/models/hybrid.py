@@ -1,0 +1,173 @@
+"""Zamba2-style hybrid backbone: Mamba-2 layers + one weight-SHARED
+attention block applied every ``cfg.hybrid_attn_every`` layers.
+
+The shared block (attention + MLP, one parameter copy) fires at layers
+0, every, 2·every, ...; each *application site* has its own KV cache at
+decode time (activations differ per depth even though weights are shared).
+Zamba2's per-site LoRA adapters on the shared block are omitted — weight
+sharing itself is the architectural property the memory/roofline analysis
+cares about; noted in DESIGN.md §Known deviations.
+
+The stack is driven by one ``lax.scan`` over the stacked Mamba layer params;
+the shared-attention application is a ``lax.cond`` inside the body, with the
+site KV caches carried (constant shape) and updated via dynamic slices.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.config import ModelConfig
+from repro.models.spec import TensorSpec
+from repro.models.transformer import stack_specs
+from repro.parallel.remat import remat_wrap
+
+__all__ = [
+    "num_attn_sites",
+    "hybrid_specs",
+    "hybrid_state_specs",
+    "hybrid_apply",
+]
+
+
+def num_attn_sites(cfg: ModelConfig) -> int:
+    assert cfg.hybrid_attn_every > 0
+    return math.ceil(cfg.num_layers / cfg.hybrid_attn_every)
+
+
+def hybrid_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    return {
+        "mamba": stack_specs(
+            {"norm": L.norm_specs(cfg), "ssm": S.ssm_specs(cfg)}, cfg.num_layers
+        ),
+        "shared_attn": {
+            "attn_norm": L.norm_specs(cfg),
+            "attn": L.attn_specs(cfg),
+            "mlp_norm": L.norm_specs(cfg),
+            "mlp": L.mlp_specs(cfg),
+        },
+    }
+
+
+def hybrid_state_specs(
+    cfg: ModelConfig, batch: int, max_len: int
+) -> Dict[str, Any]:
+    """Decode state: per-layer SSM states + per-site KV caches."""
+    sites = num_attn_sites(cfg)
+    ssm_state = S.ssm_state_specs(cfg, batch, cfg.num_layers)
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    shape = (sites, batch, max_len, kv, hd)
+    axes = ("layers", "batch", "cache_seq", "kv_heads", "head_dim")
+    return {
+        "ssd": ssm_state["ssd"],
+        "conv": ssm_state["conv"],
+        "ak": TensorSpec(shape, cfg.cdtype, axes),
+        "av": TensorSpec(shape, cfg.cdtype, axes),
+    }
+
+
+def _shared_attn_block(
+    p: Dict[str, Any],
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    cache: Optional[Dict[str, jax.Array]],
+    cache_index: Optional[jax.Array],
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    h = L.norm_apply(p["attn_norm"], cfg, x)
+    attn_out, new_cache = L.attn_apply(
+        p["attn"], cfg, h, positions=positions, causal=True,
+        cache=cache, cache_index=cache_index,
+    )
+    x = x + attn_out
+    h = L.norm_apply(p["mlp_norm"], cfg, x)
+    return x + L.mlp_apply(p["mlp"], cfg, h), new_cache
+
+
+def hybrid_apply(
+    params: Dict[str, Any],
+    cfg: ModelConfig,
+    x: jax.Array,  # (B, T, d) embedded inputs
+    *,
+    positions: jax.Array,
+    state: Optional[Dict[str, jax.Array]] = None,
+    cache_index: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Run the hybrid stack.  Returns (hidden, new_state_or_None).
+
+    Modes: train (state=None) / prefill (state zero-initialized, index 0) /
+    decode (state filled, T==1).
+    """
+    every = cfg.hybrid_attn_every
+    shared = params["shared_attn"]
+    has_state = state is not None
+    use_cache = has_state  # attention sites cache KV whenever state is kept
+
+    ak = state["ak"] if use_cache else None
+    av = state["av"] if use_cache else None
+
+    def body(carry, xs):
+        h, ak_c, av_c = carry
+        p = xs["params"]
+        idx = xs["idx"]
+
+        def with_attn(h, ak_c, av_c):
+            site = idx // every
+            if use_cache:
+                cache = {
+                    "k": jax.lax.dynamic_index_in_dim(ak_c, site, 0, keepdims=False),
+                    "v": jax.lax.dynamic_index_in_dim(av_c, site, 0, keepdims=False),
+                }
+                h2, nc = _shared_attn_block(
+                    shared, cfg, h, positions, cache, cache_index
+                )
+                ak_n = jax.lax.dynamic_update_index_in_dim(ak_c, nc["k"], site, 0)
+                av_n = jax.lax.dynamic_update_index_in_dim(av_c, nc["v"], site, 0)
+                return h2, ak_n, av_n
+            h2, _ = _shared_attn_block(shared, cfg, h, positions, None, None)
+            return h2, ak_c, av_c
+
+        def without_attn(h, ak_c, av_c):
+            return h, ak_c, av_c
+
+        h, ak_c, av_c = jax.lax.cond(
+            idx % every == 0, with_attn, without_attn, h, ak_c, av_c
+        )
+
+        # Mamba-2 block (pre-norm residual).
+        hn = L.norm_apply(p["norm"], cfg, h)
+        layer_state = (
+            {"ssd": xs["ssd"], "conv": xs["conv"]} if has_state else None
+        )
+        out, new_state = S.ssm_apply(p["ssm"], cfg, hn, state=layer_state)
+        h = h + out
+
+        ys = {}
+        if has_state:
+            ys = {"ssd": new_state["ssd"], "conv": new_state["conv"]}
+        return (h, ak_c, av_c), ys
+
+    xs: Dict[str, Any] = {
+        "params": params["mamba"],
+        "idx": jnp.arange(cfg.num_layers),
+    }
+    if has_state:
+        xs["ssd"], xs["conv"] = state["ssd"], state["conv"]
+
+    if not use_cache:
+        ak = jnp.zeros((1,), cfg.cdtype)  # dummy carries (unused)
+        av = jnp.zeros((1,), cfg.cdtype)
+
+    body = remat_wrap(body, cfg.remat_policy)
+    (h, ak_f, av_f), ys = jax.lax.scan(body, (x, ak, av), xs)
+
+    new_state = None
+    if has_state:
+        new_state = {"ssd": ys["ssd"], "conv": ys["conv"], "ak": ak_f, "av": av_f}
+    return h, new_state

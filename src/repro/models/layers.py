@@ -1,0 +1,583 @@
+"""Shared neural-network layers for the model zoo (pure functional JAX).
+
+Every layer follows the same convention:
+
+  * ``<layer>_specs(cfg, ...) -> pytree[TensorSpec]`` — declarative parameter
+    description carrying shapes, dtypes, logical sharding axes and inits;
+  * ``<layer>_apply(params, cfg, x, ...) -> array`` — pure application.
+
+Logical axes used across the zoo (mapped to mesh axes by parallel/sharding):
+
+  "embed"       d_model                     — FSDP axis (sharded over data)
+  "heads"       query heads                 — tensor-parallel (model)
+  "kv_heads"    key/value heads             — tensor-parallel (model)
+  "head_dim"    per-head dim                — replicated
+  "ffn"         MLP hidden                  — tensor-parallel (model)
+  "vocab"       vocabulary                  — tensor-parallel (model)
+  "experts"     MoE expert count            — expert-parallel (model)
+  "expert_ffn"  per-expert hidden           — replicated (experts carry TP)
+  "ssm_inner"   Mamba2 inner channels       — tensor-parallel (model)
+  "ssm_state"   Mamba2 state dim            — replicated
+  "layers"      stacked scan-over-layers    — replicated (or pipeline stage)
+
+Attention supports GQA (grouped KV heads), MQA (kv=1), qk-norm (qwen3), QKV
+bias (qwen1.5), cross-attention (whisper decoder), causal/bidirectional
+masking, KV-cache prefill and single-token decode.  The flash-attention
+Pallas kernel is dispatched for the causal self-attention train/prefill path
+when ``cfg.attention_impl`` requests it; the jnp path is the oracle.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, MoEConfig
+from repro.models.spec import TensorSpec
+from repro.parallel.constraints import shard_activation
+
+__all__ = [
+    "norm_specs",
+    "norm_apply",
+    "rope_tables",
+    "apply_rope",
+    "attn_specs",
+    "attn_apply",
+    "init_kv_cache_specs",
+    "mlp_specs",
+    "mlp_apply",
+    "moe_specs",
+    "moe_apply",
+    "embedding_specs",
+    "embed_apply",
+    "unembed_apply",
+]
+
+# ---------------------------------------------------------------------------
+# Normalization
+# ---------------------------------------------------------------------------
+
+
+def norm_specs(cfg: ModelConfig, d: Optional[int] = None) -> Dict[str, TensorSpec]:
+    d = d or cfg.d_model
+    specs = {"scale": TensorSpec((d,), cfg.pdtype, ("embed",), init="ones")}
+    if cfg.norm == "layernorm":
+        specs["bias"] = TensorSpec((d,), cfg.pdtype, ("embed",), init="zeros")
+    return specs
+
+
+def norm_apply(p: Dict[str, jax.Array], cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """RMSNorm or LayerNorm with f32 statistics, output in compute dtype."""
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+        y = (xf - mean) * jax.lax.rsqrt(var + 1e-5)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + 1e-6) * p["scale"].astype(jnp.float32)
+    return y.astype(cfg.cdtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_tables(
+    positions: jax.Array, head_dim: int, theta: float
+) -> Tuple[jax.Array, jax.Array]:
+    """cos/sin tables for integer ``positions`` (any shape), f32.
+
+    Returns arrays of shape ``positions.shape + (head_dim // 2,)``.
+    """
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Rotate pairs (split-half convention).  x: (..., heads, head_dim);
+    cos/sin: broadcastable to (..., 1, head_dim//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def attn_specs(cfg: ModelConfig, *, cross: bool = False) -> Dict[str, Any]:
+    """Projection parameters for one attention block.
+
+    ``cross=True`` builds a cross-attention block (whisper decoder): the KV
+    projections consume the encoder output (same d_model here).
+    """
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    pd = cfg.pdtype
+    specs: Dict[str, Any] = {
+        "wq": TensorSpec((d, h, hd), pd, ("embed", "heads", "head_dim"),
+                         init="scaled_normal"),
+        "wk": TensorSpec((d, kv, hd), pd, ("embed", "kv_heads", "head_dim"),
+                         init="scaled_normal"),
+        "wv": TensorSpec((d, kv, hd), pd, ("embed", "kv_heads", "head_dim"),
+                         init="scaled_normal"),
+        "wo": TensorSpec((h, hd, d), pd, ("heads", "head_dim", "embed"),
+                         init="scaled_normal"),
+    }
+    if cfg.qkv_bias or cfg.use_bias:
+        specs["bq"] = TensorSpec((h, hd), pd, ("heads", "head_dim"))
+        specs["bk"] = TensorSpec((kv, hd), pd, ("kv_heads", "head_dim"))
+        specs["bv"] = TensorSpec((kv, hd), pd, ("kv_heads", "head_dim"))
+    if cfg.use_bias:
+        specs["bo"] = TensorSpec((d,), pd, ("embed",))
+    if cfg.qk_norm and not cross:
+        specs["q_norm"] = TensorSpec((hd,), pd, ("head_dim",), init="ones")
+        specs["k_norm"] = TensorSpec((hd,), pd, ("head_dim",), init="ones")
+    return specs
+
+
+def init_kv_cache_specs(
+    cfg: ModelConfig, batch: int, max_len: int, num_layers: int
+) -> Dict[str, TensorSpec]:
+    """Stacked-over-layers KV cache for decode.  Length axis is logical
+    "cache_seq" so long-context decode can shard it."""
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    shape = (num_layers, batch, max_len, kv, hd)
+    axes = ("layers", "batch", "cache_seq", "kv_heads", "head_dim")
+    return {
+        "k": TensorSpec(shape, cfg.cdtype, axes),
+        "v": TensorSpec(shape, cfg.cdtype, axes),
+    }
+
+
+def _rms_head_norm(x: jax.Array, scale: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + 1e-6) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _project_qkv(
+    p: Dict[str, jax.Array], cfg: ModelConfig, xq: jax.Array, xkv: jax.Array
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    cd = cfg.cdtype
+    q = jnp.einsum("btd,dhk->bthk", xq, p["wq"].astype(cd))
+    k = jnp.einsum("bsd,dhk->bshk", xkv, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", xkv, p["wv"].astype(cd))
+    q = shard_activation(q, ("batch", "seq", "heads", "head_dim"))
+    k = shard_activation(k, ("batch", "seq", "kv_heads", "head_dim"))
+    v = shard_activation(v, ("batch", "seq", "kv_heads", "head_dim"))
+    if "bq" in p:
+        q = q + p["bq"].astype(cd)
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    if "q_norm" in p:
+        q = _rms_head_norm(q, p["q_norm"])
+        k = _rms_head_norm(k, p["k_norm"])
+    return q, k, v
+
+
+def _sdpa(
+    q: jax.Array,  # (B, T, H, hd)
+    k: jax.Array,  # (B, S, KV, hd)
+    v: jax.Array,  # (B, S, KV, hd)
+    *,
+    causal: bool,
+    q_offset: Optional[jax.Array] = None,
+    kv_len: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Grouped-query scaled-dot-product attention, f32 softmax.
+
+    ``q_offset``: absolute position of query 0 (for cached decode/prefill
+    continuation) — causal mask compares (i + q_offset) ≥ j.
+    ``kv_len``: only the first ``kv_len`` cache slots are valid.
+    """
+    b, t, h, hd = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    group = h // kv
+    qg = q.reshape(b, t, kv, group, hd)
+    scale = 1.0 / math.sqrt(hd)
+    logits = jnp.einsum("btkgh,bskh->bkgts", qg, k).astype(jnp.float32) * scale
+
+    mask = None
+    if causal:
+        qpos = jnp.arange(t)[:, None] + (q_offset if q_offset is not None else 0)
+        kpos = jnp.arange(s)[None, :]
+        mask = qpos >= kpos  # (t, s)
+    if kv_len is not None:
+        valid = jnp.arange(s)[None, :] < kv_len
+        mask = valid if mask is None else (mask & valid)
+    if mask is not None:
+        logits = jnp.where(mask[None, None, None, :, :], logits, -1e30)
+
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgts,bskh->btkgh", probs.astype(v.dtype), v)
+    return out.reshape(b, t, h, hd)
+
+
+def _chunked_sdpa(
+    q: jax.Array,  # (B, T, H, hd)
+    k: jax.Array,  # (B, S, KV, hd)
+    v: jax.Array,  # (B, S, KV, hd)
+    *,
+    causal: bool,
+    chunk: int,
+    q_offset: Optional[jax.Array] = None,
+    kv_len: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Online-softmax attention scanned over KV chunks ("flash in XLA").
+
+    Never materializes the (T, S) score matrix: per scan step only a
+    (T, chunk) tile exists, with running-max/denominator/accumulator carried
+    in f32.  This is the §Perf memory-term lever for the 32k prefill cells —
+    HBM traffic drops by ~chunk/head_dim and the O(T·S) buffer disappears —
+    and the XLA twin of the Pallas flash kernel (same math, same tiling
+    idea, compiler-scheduled instead of hand-scheduled).
+    """
+    b, t, h, hd = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    if s % chunk:
+        # fall back on ragged tails — callers pick chunk | S
+        return _sdpa(q, k, v, causal=causal, q_offset=q_offset, kv_len=kv_len)
+    group = h // kv
+    qg = q.reshape(b, t, kv, group, hd)
+    scale = 1.0 / math.sqrt(hd)
+    nc = s // chunk
+
+    kc = jnp.moveaxis(k.reshape(b, nc, chunk, kv, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, nc, chunk, kv, hd), 1, 0)
+
+    qpos = jnp.arange(t)[:, None] + (q_offset if q_offset is not None else 0)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kb, vb, ci = xs
+        logits = jnp.einsum("btkgh,bckh->bkgtc", qg, kb).astype(jnp.float32)
+        logits = logits * scale
+        kpos = ci * chunk + jnp.arange(chunk)[None, :]
+        mask = None
+        if causal:
+            mask = qpos >= kpos
+        if kv_len is not None:
+            valid = kpos < kv_len
+            mask = valid if mask is None else (mask & valid)
+        if mask is not None:
+            logits = jnp.where(mask[None, None, None], logits, -1e30)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgtc,bckh->bkgth", p.astype(vb.dtype), vb)
+        acc_new = acc * alpha[..., None] + pv.astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kv, group, t), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, kv, group, t), jnp.float32)
+    a0 = jnp.zeros((b, kv, group, t, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kc, vc, jnp.arange(nc))
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]  # (b, kv, g, t, hd)
+    out = jnp.transpose(out, (0, 3, 1, 2, 4))  # → (b, t, kv, g, hd)
+    return out.reshape(b, t, h, hd).astype(q.dtype)
+
+
+def _use_chunked(cfg: ModelConfig, t: int, s: int) -> bool:
+    if cfg.attention_impl != "chunked":
+        return False
+    return t > 1 and s >= 2 * cfg.attention_chunk and s % cfg.attention_chunk == 0
+
+
+def attn_apply(
+    p: Dict[str, jax.Array],
+    cfg: ModelConfig,
+    x: jax.Array,  # (B, T, d) queries
+    *,
+    positions: jax.Array,  # (B, T) absolute positions (ints)
+    causal: bool = True,
+    kv_source: Optional[jax.Array] = None,  # cross-attention source (B, S, d)
+    cache: Optional[Dict[str, jax.Array]] = None,  # {"k","v"} (B, S, KV, hd)
+    cache_index: Optional[jax.Array] = None,  # scalar: valid cache length
+    use_rope: bool = True,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """One attention block.  Returns (output, updated_cache_or_None).
+
+    Modes:
+      * train / encoder:     cache=None, kv_source=None (self) or set (cross)
+      * prefill:             cache=zeros buffers, cache_index=0 → fills [0,T)
+      * decode (T small):    cache=filled buffers, cache_index=current length
+    """
+    xkv = kv_source if kv_source is not None else x
+    q, k, v = _project_qkv(p, cfg, x, xkv)
+
+    if use_rope and kv_source is None:
+        cos_q, sin_q = rope_tables(positions, cfg.head_dim, cfg.rope_theta)
+        q = apply_rope(q, cos_q[:, :, None, :], sin_q[:, :, None, :])
+        k = apply_rope(k, cos_q[:, :, None, :], sin_q[:, :, None, :])
+
+    new_cache = None
+    kv_len = None
+    q_offset = positions[:, :1] * 0  # scalar-broadcast zero default
+    if cache is not None:
+        # Write the new keys/values at [cache_index, cache_index + T).
+        idx = cache_index if cache_index is not None else jnp.int32(0)
+        k_buf = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, idx, axis=1)
+        v_buf = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, idx, axis=1)
+        cache_axes = ("batch", "cache_seq", "kv_heads", "head_dim")
+        k_buf = shard_activation(k_buf, cache_axes)
+        v_buf = shard_activation(v_buf, cache_axes)
+        new_cache = {"k": k_buf, "v": v_buf}
+        k, v = k_buf, v_buf
+        kv_len = idx + x.shape[1]
+        q_offset = idx
+
+    if cache is None and kv_source is None and causal and _use_flash(cfg, x.shape[1]):
+        from repro.kernels.flash_attention import ops as flash_ops
+
+        out = flash_ops.flash_attention(q, k, v, causal=True)
+    elif kv_source is None and _use_chunked(cfg, x.shape[1], k.shape[1]):
+        out = _chunked_sdpa(
+            q, k, v, causal=causal, chunk=cfg.attention_chunk,
+            q_offset=q_offset if cache is not None else None,
+            kv_len=kv_len,
+        )
+    else:
+        out = _sdpa(q, k, v, causal=causal and kv_source is None,
+                    q_offset=q_offset if cache is not None else None,
+                    kv_len=kv_len)
+
+    out = shard_activation(out, ("batch", "seq", "heads", "head_dim"))
+    y = jnp.einsum("bthk,hkd->btd", out, p["wo"].astype(cfg.cdtype))
+    if "bo" in p:
+        y = y + p["bo"].astype(cfg.cdtype)
+    return y, new_cache
+
+
+def _use_flash(cfg: ModelConfig, seq_len: int) -> bool:
+    if cfg.attention_impl == "pallas":
+        return True
+    if cfg.attention_impl == "auto":
+        # Kernel path only on real TPUs (the CPU container lowers the jnp
+        # oracle; the kernel itself is validated in interpret mode by tests).
+        return jax.default_backend() == "tpu" and seq_len % 128 == 0
+    return False
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_specs(cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict[str, TensorSpec]:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    pd = cfg.pdtype
+    if cfg.mlp_act == "swiglu":
+        specs = {
+            "wi_gate": TensorSpec((d, f), pd, ("embed", "ffn"), init="scaled_normal"),
+            "wi_up": TensorSpec((d, f), pd, ("embed", "ffn"), init="scaled_normal"),
+            "wo": TensorSpec((f, d), pd, ("ffn", "embed"), init="scaled_normal"),
+        }
+    else:  # gelu
+        specs = {
+            "wi": TensorSpec((d, f), pd, ("embed", "ffn"), init="scaled_normal"),
+            "wo": TensorSpec((f, d), pd, ("ffn", "embed"), init="scaled_normal"),
+        }
+        if cfg.use_bias:
+            specs["bi"] = TensorSpec((f,), pd, ("ffn",))
+            specs["bo"] = TensorSpec((d,), pd, ("embed",))
+    return specs
+
+
+def mlp_apply(p: Dict[str, jax.Array], cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    cd = cfg.cdtype
+    ffn_axes = ("batch", "seq", "ffn")
+    if cfg.mlp_act == "swiglu":
+        gate = jnp.einsum("btd,df->btf", x, p["wi_gate"].astype(cd))
+        up = jnp.einsum("btd,df->btf", x, p["wi_up"].astype(cd))
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(cd) * up
+        h = shard_activation(h, ffn_axes)
+        return jnp.einsum("btf,fd->btd", h, p["wo"].astype(cd))
+    h = jnp.einsum("btd,df->btf", x, p["wi"].astype(cd))
+    if "bi" in p:
+        h = h + p["bi"].astype(cd)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(cd)
+    h = shard_activation(h, ffn_axes)
+    y = jnp.einsum("btf,fd->btd", h, p["wo"].astype(cd))
+    if "bo" in p:
+        y = y + p["bo"].astype(cd)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+# ---------------------------------------------------------------------------
+
+
+def moe_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    assert cfg.moe is not None
+    moe, d, pd = cfg.moe, cfg.d_model, cfg.pdtype
+    e, f = moe.num_experts, moe.d_ff_expert
+    specs: Dict[str, Any] = {
+        "router": TensorSpec((d, e), jnp.float32, ("embed", "experts"),
+                             init="scaled_normal"),
+        "wi_gate": TensorSpec((e, d, f), pd, ("experts", "embed", "expert_ffn"),
+                              init="scaled_normal"),
+        "wi_up": TensorSpec((e, d, f), pd, ("experts", "embed", "expert_ffn"),
+                            init="scaled_normal"),
+        "wo": TensorSpec((e, f, d), pd, ("experts", "expert_ffn", "embed"),
+                         init="scaled_normal"),
+    }
+    if moe.shared_experts:
+        sf = f * moe.shared_experts
+        specs["shared"] = {
+            "wi_gate": TensorSpec((d, sf), pd, ("embed", "ffn"), init="scaled_normal"),
+            "wi_up": TensorSpec((d, sf), pd, ("embed", "ffn"), init="scaled_normal"),
+            "wo": TensorSpec((sf, d), pd, ("ffn", "embed"), init="scaled_normal"),
+        }
+    if moe.dense_residual:
+        specs["dense"] = mlp_specs(cfg, d_ff=cfg.d_ff)
+    return specs
+
+
+def _expert_capacity(tokens: int, moe: MoEConfig) -> int:
+    cap = int(math.ceil(tokens * moe.top_k * moe.capacity_factor / moe.num_experts))
+    return max(cap, moe.top_k)
+
+
+def moe_apply(
+    p: Dict[str, Any], cfg: ModelConfig, x: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Top-k capacity-limited MoE.  Returns (output, aux_loss).
+
+    Two dispatch paths share the routing math:
+
+      * **expert-parallel shard_map** (distributed runs): tokens data-sharded,
+        experts model-sharded, one psum combine — see
+        ``parallel.expert_parallel`` for why GSPMD can't be trusted here;
+      * **local scatter/gather** (single device / smoke tests): tokens are
+        scattered into a per-expert slot buffer (E·C, d) by a flat slot id
+        (expert·C + position-in-expert), run through the stacked expert
+        matmuls, and gathered back.  (GShard's O(T·E·C) one-hot dispatch
+        einsum is infeasible at E=384.)
+
+    Deterministic shapes; tokens beyond capacity are dropped (their residual
+    path passes through).
+    """
+    from repro.parallel.expert_parallel import (
+        moe_apply_shard_map,
+        moe_shard_map_available,
+    )
+
+    if moe_shard_map_available(cfg, x.shape):
+        y, aux = moe_apply_shard_map(p, cfg, x)
+        if "shared" in p:
+            y = y + mlp_apply(p["shared"], cfg.replace(mlp_act="swiglu"), x)
+        if "dense" in p:
+            y = y + mlp_apply(p["dense"], cfg, x)
+        return y, aux
+
+    assert cfg.moe is not None
+    moe, cd = cfg.moe, cfg.cdtype
+    b, t, d = x.shape
+    n = b * t
+    e, k = moe.num_experts, moe.top_k
+    cap = _expert_capacity(n, moe)
+
+    xf = x.reshape(n, d)
+    router_logits = (xf.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(router_logits, axis=-1)  # (n, e)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)  # (n, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    # Load-balancing auxiliary loss (Switch-style): e * sum_e f_e * p_e.
+    me = jnp.mean(probs, axis=0)
+    one_hot_top1 = jax.nn.one_hot(expert_ids[:, 0], e, dtype=jnp.float32)
+    ce = jnp.mean(one_hot_top1, axis=0)
+    aux_loss = moe.router_aux_weight * e * jnp.sum(me * ce)
+
+    # Position-in-expert over the flattened (k-major) routing pairs so lower
+    # k-slots win capacity first, GShard-style.
+    flat_ids = expert_ids.T.reshape(-1)  # (k*n,) k-major
+    flat_gates = gate_vals.T.reshape(-1)
+    oh = jax.nn.one_hot(flat_ids, e, dtype=jnp.int32)  # (k*n, e)
+    pos_in_expert = jnp.cumsum(oh, axis=0) - oh  # exclusive per-expert rank
+    pos = jnp.sum(pos_in_expert * oh, axis=-1)  # (k*n,)
+    keep = pos < cap
+    slot = jnp.where(keep, flat_ids * cap + pos, e * cap)  # drop → overflow row
+
+    # Scatter tokens (scaled later at combine) into the slot buffer.
+    xk = jnp.tile(xf, (k, 1))  # (k*n, d), k-major to match flat_ids
+    buf = jnp.zeros((e * cap + 1, d), cd).at[slot].add(xk.astype(cd))
+    buf = buf[: e * cap].reshape(e, cap, d)
+    buf = shard_activation(buf, ("experts", "capacity", "act_embed"))
+
+    # Expert computation (stacked SwiGLU), experts sharded over "model".
+    gate = jnp.einsum("ecd,edf->ecf", buf, p["wi_gate"].astype(cd))
+    up = jnp.einsum("ecd,edf->ecf", buf, p["wi_up"].astype(cd))
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(cd) * up
+    h = shard_activation(h, ("experts", "capacity", "expert_ffn"))
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(cd))
+    out_buf = shard_activation(out_buf, ("experts", "capacity", "act_embed"))
+
+    # Gather back and combine with gates.
+    out_flat = out_buf.reshape(e * cap, d)
+    gathered = jnp.where(
+        keep[:, None], out_flat[jnp.minimum(slot, e * cap - 1)], 0.0
+    )  # (k*n, d)
+    combined = jnp.sum(
+        (gathered * flat_gates[:, None].astype(cd)).reshape(k, n, d), axis=0
+    )
+    y = shard_activation(combined.reshape(b, t, d), ("batch", "seq", "act_embed"))
+
+    if "shared" in p:
+        shared_cfg = cfg.replace(mlp_act="swiglu")
+        y = y + mlp_apply(p["shared"], shared_cfg, x)
+    if "dense" in p:
+        y = y + mlp_apply(p["dense"], cfg, x)
+    return y, aux_loss
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embedding_specs(cfg: ModelConfig) -> Dict[str, TensorSpec]:
+    specs = {
+        "embedding": TensorSpec(
+            (cfg.vocab_size, cfg.d_model), cfg.pdtype, ("vocab", "embed"),
+            init="normal", init_scale=0.02,
+        )
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = TensorSpec(
+            (cfg.d_model, cfg.vocab_size), cfg.pdtype, ("embed", "vocab"),
+            init="scaled_normal",
+        )
+    return specs
+
+
+def embed_apply(p: Dict[str, jax.Array], cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    emb = p["embedding"].astype(cfg.cdtype)[tokens]
+    return shard_activation(emb, ("batch", "seq", "act_embed"))
+
+
+def unembed_apply(p: Dict[str, jax.Array], cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Final logits in f32 (softmax stability at 152k vocabs)."""
+    if cfg.tie_embeddings:
+        w = p["embedding"].astype(cfg.cdtype).T
+    else:
+        w = p["unembed"].astype(cfg.cdtype)
+    logits = jnp.einsum("btd,dv->btv", x, w).astype(jnp.float32)
+    return shard_activation(logits, ("batch", "seq", "vocab"))

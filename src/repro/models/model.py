@@ -1,0 +1,333 @@
+"""Unified model facade over the six architecture families.
+
+``Model(cfg)`` exposes the same five entry points for every family —
+dense / moe / ssm / hybrid / encdec / vlm — so the launcher, dry-run,
+tuner and tests never special-case architectures:
+
+  * ``param_specs()``               parameter TensorSpec tree
+  * ``forward(params, batch)``      teacher-forced logits over text positions
+  * ``loss_fn(params, batch)``      scalar loss + metrics (CE + MoE aux + z)
+  * ``cache_specs(batch, max_len)`` decode-cache TensorSpec tree
+  * ``prefill(params, batch, cache)`` / ``decode_step(params, cache, tokens, index)``
+
+Batch convention: ``{"tokens": (B,T) int32}`` plus per-modality stubs —
+``frames`` (B,S_enc,d) for encdec, ``patches`` (B,P,d) for vlm (precomputed
+embeddings; the conv/vision frontends are STUBS per the assignment).  Loss
+shifts internally (position i predicts token i+1) and respects an optional
+``loss_mask``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import hybrid as H
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.models.spec import TensorSpec, count_params, is_spec
+
+__all__ = ["Model", "total_params", "active_params"]
+
+
+# ---------------------------------------------------------------------------
+# Parameter accounting (roofline MODEL_FLOPS needs N and N_active)
+# ---------------------------------------------------------------------------
+
+
+def total_params(cfg: ModelConfig) -> int:
+    return count_params(Model(cfg).param_specs())
+
+
+def active_params(cfg: ModelConfig) -> int:
+    """Parameters touched per token (= N for dense; routed subset for MoE)."""
+    n = total_params(cfg)
+    if cfg.family != "moe" or cfg.moe is None:
+        return n
+    moe = cfg.moe
+    per_expert = 3 * cfg.d_model * moe.d_ff_expert
+    inactive = (moe.num_experts - moe.top_k) * per_expert * cfg.num_layers
+    return n - inactive
+
+
+# ---------------------------------------------------------------------------
+# The facade
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # -- parameters ---------------------------------------------------------
+
+    def param_specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        cfg.validate()
+        specs: Dict[str, Any] = {"embed": L.embedding_specs(cfg)}
+        if cfg.pos_emb == "learned":
+            assert cfg.max_position > 0, "learned pos-emb needs max_position"
+            specs["pos_table"] = TensorSpec(
+                (cfg.max_position, cfg.d_model), cfg.pdtype, (None, "embed"),
+                init="normal", init_scale=0.02,
+            )
+        if cfg.family in ("dense", "moe", "vlm"):
+            specs["layers"] = T.decoder_stack_specs(cfg)
+        elif cfg.family == "encdec":
+            specs["encoder"] = T.encoder_stack_specs(cfg)
+            specs["layers"] = T.decoder_stack_specs(cfg, cross=True)
+        elif cfg.family == "ssm":
+            specs["layers"] = T.stack_specs(
+                {"norm": L.norm_specs(cfg), "ssm": S.ssm_specs(cfg)},
+                cfg.num_layers,
+            )
+        elif cfg.family == "hybrid":
+            specs["hybrid"] = H.hybrid_specs(cfg)
+        else:
+            raise ValueError(f"unknown family {cfg.family}")
+        specs["final_norm"] = L.norm_specs(cfg)
+        return specs
+
+    # -- embedding helpers ----------------------------------------------------
+
+    def _embed_inputs(
+        self, params: Dict[str, Any], batch: Dict[str, jax.Array],
+        positions: jax.Array,
+    ) -> jax.Array:
+        """Token embeddings (+ learned positions, + modality prefixes)."""
+        cfg = self.cfg
+        x = L.embed_apply(params["embed"], cfg, batch["tokens"])
+        if cfg.family == "vlm" and "patches" in batch:
+            x = jnp.concatenate([batch["patches"].astype(cfg.cdtype), x], axis=1)
+        if cfg.pos_emb == "learned":
+            x = x + params["pos_table"].astype(cfg.cdtype)[positions]
+        return x
+
+    def _positions(self, batch: Dict[str, jax.Array]) -> jax.Array:
+        b, t = batch["tokens"].shape
+        if self.cfg.family == "vlm" and "patches" in batch:
+            t = t + batch["patches"].shape[1]
+        return jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None, :], (b, t))
+
+    # -- forward (teacher-forced) --------------------------------------------
+
+    def forward(
+        self, params: Dict[str, Any], batch: Dict[str, jax.Array]
+    ) -> Tuple[jax.Array, jax.Array]:
+        """Returns (logits aligned with batch["tokens"], aux_loss)."""
+        cfg = self.cfg
+        positions = self._positions(batch)
+        x = self._embed_inputs(params, batch, positions)
+        aux = jnp.zeros((), jnp.float32)
+
+        if cfg.family in ("dense", "moe", "vlm"):
+            h, aux, _ = T.decoder_stack_apply(
+                params["layers"], cfg, x, positions=positions
+            )
+        elif cfg.family == "encdec":
+            enc = T.encoder_stack_apply(params["encoder"], cfg, batch["frames"])
+            h, aux, _ = T.decoder_stack_apply(
+                params["layers"], cfg, x, positions=positions, cross_source=enc
+            )
+        elif cfg.family == "ssm":
+            h = self._ssm_forward(params, x)
+        elif cfg.family == "hybrid":
+            h, _ = H.hybrid_apply(params["hybrid"], cfg, x, positions=positions)
+        else:
+            raise ValueError(cfg.family)
+
+        h = L.norm_apply(params["final_norm"], cfg, h)
+        if cfg.family == "vlm" and "patches" in batch:
+            h = h[:, batch["patches"].shape[1] :]  # logits over text positions
+        logits = L.unembed_apply(params["embed"] | _unembed(params), cfg, h)
+        return logits, aux
+
+    def _ssm_forward(self, params: Dict[str, Any], x: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        from repro.parallel.remat import remat_wrap
+
+        def body(h, p):
+            hn = L.norm_apply(p["norm"], cfg, h)
+            out, _ = S.ssm_apply(p["ssm"], cfg, hn)
+            return h + out, None
+
+        h, _ = jax.lax.scan(remat_wrap(body, cfg.remat_policy), x, params["layers"])
+        return h
+
+    # -- loss -----------------------------------------------------------------
+
+    def loss_fn(
+        self, params: Dict[str, Any], batch: Dict[str, jax.Array]
+    ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """Shifted cross-entropy (f32) + z-loss + MoE aux."""
+        logits, aux = self.forward(params, batch)
+        tokens = batch["tokens"]
+        targets = tokens[:, 1:]
+        logits = logits[:, :-1]
+        mask = jnp.ones(targets.shape, jnp.float32)
+        if "loss_mask" in batch:
+            mask = mask * batch["loss_mask"][:, 1:].astype(jnp.float32)
+
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        tgt_logit = jnp.take_along_axis(
+            logits, targets[..., None], axis=-1
+        )[..., 0]
+        nll = logz - tgt_logit
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        ce = jnp.sum(nll * mask) / denom
+        z_loss = 1e-4 * jnp.sum(jnp.square(logz) * mask) / denom
+        loss = ce + z_loss + aux
+        metrics = {
+            "loss": loss,
+            "ce": ce,
+            "z_loss": z_loss,
+            "aux_loss": aux,
+            "tokens": jnp.sum(mask),
+        }
+        return loss, metrics
+
+    # -- decode cache ---------------------------------------------------------
+
+    def cache_specs(self, batch: int, max_len: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        if cfg.family in ("dense", "moe", "vlm"):
+            return L.init_kv_cache_specs(cfg, batch, max_len, cfg.num_layers)
+        if cfg.family == "encdec":
+            assert cfg.encoder is not None
+            self_kv = L.init_kv_cache_specs(cfg, batch, max_len, cfg.num_layers)
+            src = cfg.encoder.source_len
+            cross_shape = (cfg.num_layers, batch, src, cfg.num_kv_heads, cfg.head_dim)
+            axes = ("layers", "batch", None, "kv_heads", "head_dim")
+            return {
+                "k": self_kv["k"],
+                "v": self_kv["v"],
+                "xk": TensorSpec(cross_shape, cfg.cdtype, axes),
+                "xv": TensorSpec(cross_shape, cfg.cdtype, axes),
+            }
+        if cfg.family == "ssm":
+            return S.ssm_state_specs(cfg, batch, cfg.num_layers)
+        if cfg.family == "hybrid":
+            return H.hybrid_state_specs(cfg, batch, max_len)
+        raise ValueError(cfg.family)
+
+    # -- prefill / decode ------------------------------------------------------
+
+    def _decoder_pass(
+        self,
+        params: Dict[str, Any],
+        batch: Dict[str, jax.Array],
+        cache: Dict[str, jax.Array],
+        index: jax.Array,
+    ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """Shared prefill/decode body: consume tokens at [index, index+T)."""
+        cfg = self.cfg
+        b, t = batch["tokens"].shape
+        pos = index + jnp.arange(t, dtype=jnp.int32)
+        positions = jnp.broadcast_to(pos[None, :], (b, t))
+        if cfg.family == "vlm" and "patches" in batch:
+            tp = batch["patches"].shape[1] + t
+            pos = index + jnp.arange(tp, dtype=jnp.int32)
+            positions = jnp.broadcast_to(pos[None, :], (b, tp))
+        x = self._embed_inputs(params, batch, positions)
+
+        if cfg.family in ("dense", "moe", "vlm"):
+            h, _, new_cache = T.decoder_stack_apply(
+                params["layers"], cfg, x, positions=positions,
+                caches={"k": cache["k"], "v": cache["v"]}, cache_index=index,
+            )
+        elif cfg.family == "encdec":
+            h, _, new_self = T.decoder_stack_apply(
+                params["layers"], cfg, x, positions=positions,
+                caches={"k": cache["k"], "v": cache["v"]}, cache_index=index,
+                cross_caches={"k": cache["xk"], "v": cache["xv"]},
+            )
+            new_cache = new_self | {"xk": cache["xk"], "xv": cache["xv"]}
+        elif cfg.family == "ssm":
+            h, new_cache = self._ssm_pass(params, x, cache)
+        elif cfg.family == "hybrid":
+            h, new_cache = H.hybrid_apply(
+                params["hybrid"], cfg, x, positions=positions,
+                state=cache, cache_index=index,
+            )
+        else:
+            raise ValueError(cfg.family)
+
+        h = L.norm_apply(params["final_norm"], cfg, h)
+        logits = L.unembed_apply(params["embed"] | _unembed(params), cfg, h)
+        return logits, new_cache
+
+    def _ssm_pass(
+        self, params: Dict[str, Any], x: jax.Array, cache: Dict[str, jax.Array]
+    ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        cfg = self.cfg
+
+        def body(h, xs):
+            p = xs["params"]
+            hn = L.norm_apply(p["norm"], cfg, h)
+            out, new_state = S.ssm_apply(
+                p["ssm"], cfg, hn, state={"ssd": xs["ssd"], "conv": xs["conv"]}
+            )
+            return h + out, {"ssd": new_state["ssd"], "conv": new_state["conv"]}
+
+        xs = {"params": params["layers"], "ssd": cache["ssd"], "conv": cache["conv"]}
+        h, ys = jax.lax.scan(body, x, xs)
+        return h, {"ssd": ys["ssd"], "conv": ys["conv"]}
+
+    def prefill(
+        self,
+        params: Dict[str, Any],
+        batch: Dict[str, jax.Array],
+        cache: Dict[str, jax.Array],
+    ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """Fill the cache from position 0; returns (last-pos logits, cache).
+
+        For encdec the encoder runs here and the cross K/V caches are built.
+        """
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            enc = T.encoder_stack_apply(params["encoder"], cfg, batch["frames"])
+            cache = cache | _build_cross_caches(params["layers"], cfg, enc)
+        logits, new_cache = self._decoder_pass(
+            params, batch, cache, jnp.int32(0)
+        )
+        return logits[:, -1:], new_cache
+
+    def decode_step(
+        self,
+        params: Dict[str, Any],
+        cache: Dict[str, jax.Array],
+        tokens: jax.Array,  # (B, 1)
+        index: jax.Array,  # scalar int32: current cache length
+    ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """One-token decode.  Returns (logits (B,1,V), updated cache)."""
+        batch = {"tokens": tokens}
+        return self._decoder_pass(params, batch, cache, index)
+
+
+def _unembed(params: Dict[str, Any]) -> Dict[str, jax.Array]:
+    # The unembedding lives inside the "embed" group; helper for clarity.
+    return {}
+
+
+def _build_cross_caches(
+    stacked: Dict[str, Any], cfg: ModelConfig, enc: jax.Array
+) -> Dict[str, jax.Array]:
+    """Project encoder output through every decoder layer's cross K/V."""
+
+    def body(carry, p):
+        cd = cfg.cdtype
+        k = jnp.einsum("bsd,dhk->bshk", enc, p["cross_attn"]["wk"].astype(cd))
+        v = jnp.einsum("bsd,dhk->bshk", enc, p["cross_attn"]["wv"].astype(cd))
+        if "bk" in p["cross_attn"]:
+            k = k + p["cross_attn"]["bk"].astype(cd)
+            v = v + p["cross_attn"]["bv"].astype(cd)
+        return carry, {"xk": k, "xv": v}
+
+    _, ys = jax.lax.scan(body, None, stacked)
+    return {"xk": ys["xk"], "xv": ys["xv"]}

@@ -1,0 +1,128 @@
+"""Parameter/state specification trees.
+
+Every model in the zoo describes its parameters once, as a pytree of
+``TensorSpec`` (shape, dtype, logical axes, initializer).  The same spec tree
+is then *materialized* three ways:
+
+  * ``init_tree(key, specs)``        → real arrays (smoke tests, examples);
+  * ``abstract_tree(specs)``         → ``jax.ShapeDtypeStruct`` stand-ins for
+                                       AOT ``lower().compile()`` dry-runs —
+                                       zero allocation, exactly the
+                                       shannon/kernels pattern;
+  * ``partition_tree(specs, rules)`` → ``PartitionSpec`` per leaf, by mapping
+                                       each logical axis through the active
+                                       sharding rules (see parallel/sharding).
+
+Keeping shapes, dtypes and logical axes in ONE place removes the classic
+"params and shardings drifted apart" failure mode of hand-rolled frameworks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+__all__ = [
+    "TensorSpec",
+    "is_spec",
+    "init_tree",
+    "abstract_tree",
+    "partition_tree",
+    "count_params",
+    "tree_bytes",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorSpec:
+    """Declarative description of one parameter / state tensor."""
+
+    shape: Tuple[int, ...]
+    dtype: Any = jnp.float32
+    # One logical axis name (or None) per dimension, e.g. ("embed", "ffn").
+    axes: Tuple[Optional[str], ...] = ()
+    init: str = "zeros"  # zeros | normal | scaled_normal | ones
+    init_scale: float = 1.0
+
+    def __post_init__(self) -> None:
+        if self.axes and len(self.axes) != len(self.shape):
+            raise ValueError(
+                f"axes {self.axes} do not match shape {self.shape}"
+            )
+
+
+def is_spec(x: Any) -> bool:
+    return isinstance(x, TensorSpec)
+
+
+def _initializer(spec: TensorSpec) -> Callable[[jax.Array], jax.Array]:
+    if spec.init == "zeros":
+        return lambda key: jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return lambda key: jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "normal":
+        return lambda key: (
+            jax.random.normal(key, spec.shape, jnp.float32) * spec.init_scale
+        ).astype(spec.dtype)
+    if spec.init == "scaled_normal":
+        # Fan-in scaled (LeCun) init: scale / sqrt(fan_in).
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        std = spec.init_scale / math.sqrt(max(fan_in, 1))
+        return lambda key: (
+            jax.random.normal(key, spec.shape, jnp.float32) * std
+        ).astype(spec.dtype)
+    raise ValueError(f"unknown init {spec.init!r}")
+
+
+def init_tree(key: jax.Array, specs: Any) -> Any:
+    """Materialize a spec tree into real arrays with per-leaf RNG streams."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    arrays = [_initializer(s)(k) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, arrays)
+
+
+def abstract_tree(specs: Any) -> Any:
+    """ShapeDtypeStruct stand-ins (no allocation) for AOT lowering."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs, is_leaf=is_spec
+    )
+
+
+def partition_tree(specs: Any, rules: dict) -> Any:
+    """Map logical axes → mesh axes through ``rules`` (None = replicated).
+
+    A rule value may be a mesh-axis name, a tuple of mesh axes, or None.
+    Axes missing from ``rules`` are replicated.
+    """
+
+    def leaf_pspec(s: TensorSpec) -> PartitionSpec:
+        if not s.axes:
+            return PartitionSpec()
+        entries = []
+        for ax in s.axes:
+            r = rules.get(ax) if ax is not None else None
+            entries.append(r)
+        # Trim trailing Nones for tidier specs.
+        while entries and entries[-1] is None:
+            entries.pop()
+        return PartitionSpec(*entries)
+
+    return jax.tree.map(leaf_pspec, specs, is_leaf=is_spec)
+
+
+def count_params(specs: Any) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=is_spec)
+    return sum(math.prod(s.shape) for s in leaves)
+
+
+def tree_bytes(specs: Any) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=is_spec)
+    return sum(
+        math.prod(s.shape) * jnp.dtype(s.dtype).itemsize for s in leaves
+    )

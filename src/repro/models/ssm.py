@@ -1,0 +1,356 @@
+"""Mamba-2 SSD (state-space duality) layer — chunked scan + O(1) decode.
+
+Follows Dao & Gu, "Transformers are SSMs" (arXiv:2405.21060).  The layer:
+
+    u (B,L,d) ──in-projections──► z, x, B, C, dt
+    x,B,C    ──causal depthwise conv (width d_conv) + silu
+    y  = SSD(x·dt, A·dt, B, C)  + D ⊙ x          (selective state space)
+    out = out_proj( RMSNorm(y ⊙ silu(z)) )
+
+SSD semantics per head h with state N and head dim P:
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t · B_t x_tᵀ      h ∈ R^{N×P}
+    y_t = C_tᵀ h_t + D x_t
+
+computed in O(L·Q) time by splitting L into chunks of Q (``chunk_size``):
+an intra-chunk attention-like term (masked by the decay segment-sum) plus an
+inter-chunk recurrence over per-chunk states (``jax.lax.scan``).  The
+intra-chunk term is the compute hot-spot; ``repro.kernels.ssd`` provides the
+Pallas TPU kernel for it, and this module is its jnp oracle.
+
+Projections are kept separate (wz/wx/wB/wC/wdt) rather than fused so each
+piece carries clean logical sharding axes (heads → tensor-parallel).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.spec import TensorSpec
+from repro.parallel.constraints import shard_activation
+
+__all__ = [
+    "ssm_specs",
+    "ssm_state_specs",
+    "ssm_apply",
+    "ssd_chunked",
+    "ssd_decode_step",
+]
+
+
+# ---------------------------------------------------------------------------
+# Parameters / state
+# ---------------------------------------------------------------------------
+
+
+def ssm_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    assert cfg.ssm is not None
+    s, d, pd = cfg.ssm, cfg.d_model, cfg.pdtype
+    di = s.d_inner(d)
+    h = s.num_heads(d)
+    gn = s.n_groups * s.d_state
+    return {
+        "wz": TensorSpec((d, di), pd, ("embed", "ssm_inner"), init="scaled_normal"),
+        "wx": TensorSpec((d, di), pd, ("embed", "ssm_inner"), init="scaled_normal"),
+        "wB": TensorSpec((d, gn), pd, ("embed", None), init="scaled_normal"),
+        "wC": TensorSpec((d, gn), pd, ("embed", None), init="scaled_normal"),
+        "wdt": TensorSpec((d, h), pd, ("embed", "heads"), init="scaled_normal"),
+        "conv_x": TensorSpec((s.d_conv, di), pd, (None, "ssm_inner"),
+                             init="normal", init_scale=0.1),
+        "conv_B": TensorSpec((s.d_conv, gn), pd, (None, None),
+                             init="normal", init_scale=0.1),
+        "conv_C": TensorSpec((s.d_conv, gn), pd, (None, None),
+                             init="normal", init_scale=0.1),
+        "conv_bias_x": TensorSpec((di,), pd, ("ssm_inner",)),
+        "conv_bias_B": TensorSpec((gn,), pd, (None,)),
+        "conv_bias_C": TensorSpec((gn,), pd, (None,)),
+        # A_log init ~ log(uniform[1,16]) in real mamba2; a fixed spread here.
+        "A_log": TensorSpec((h,), jnp.float32, ("heads",), init="ones"),
+        "D": TensorSpec((h,), jnp.float32, ("heads",), init="ones"),
+        "dt_bias": TensorSpec((h,), jnp.float32, ("heads",), init="zeros"),
+        "norm_scale": TensorSpec((di,), pd, ("ssm_inner",), init="ones"),
+        "out_proj": TensorSpec((di, d), pd, ("ssm_inner", "embed"),
+                               init="scaled_normal"),
+    }
+
+
+def ssm_state_specs(
+    cfg: ModelConfig, batch: int, num_layers: int
+) -> Dict[str, TensorSpec]:
+    """Decode-time recurrent state, stacked over layers.
+
+    ``ssd``:  (layers, B, H, N, P) recurrent state — O(1) in sequence length.
+    ``conv``: (layers, B, d_conv-1, channels) rolling conv inputs.
+    """
+    s = cfg.ssm
+    assert s is not None
+    di = s.d_inner(cfg.d_model)
+    h = s.num_heads(cfg.d_model)
+    gn = s.n_groups * s.d_state
+    chans = di + 2 * gn
+    return {
+        "ssd": TensorSpec((num_layers, batch, h, s.d_state, s.head_dim),
+                          jnp.float32,
+                          ("layers", "batch", "heads", "ssm_state", None)),
+        "conv": TensorSpec((num_layers, batch, s.d_conv - 1, chans),
+                           cfg.cdtype, ("layers", "batch", None, "ssm_inner")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# SSD core — chunked scan (jnp oracle; kernels/ssd provides the Pallas path)
+# ---------------------------------------------------------------------------
+
+
+def _segsum(lA: jax.Array) -> jax.Array:
+    """Lower-triangular segment sums: out[..., i, j] = Σ_{l=j+1..i} lA[..., l].
+
+    lA: (..., Q) log-decays.  Returns (..., Q, Q) with -inf above diagonal.
+    """
+    q = lA.shape[-1]
+    cs = jnp.cumsum(lA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # Σ_{l=j+1..i}
+    ii = jnp.arange(q)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, L, H, P) inputs (pre-scaled by nothing; dt applied here)
+    dt: jax.Array,  # (B, L, H) positive step sizes
+    A: jax.Array,  # (H,) negative decay rates
+    B_: jax.Array,  # (B, L, G, N)
+    C_: jax.Array,  # (B, L, G, N)
+    *,
+    chunk_size: int,
+    initial_state: Optional[jax.Array] = None,  # (B, H, N, P)
+    use_kernel: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD.  Returns (y (B,L,H,P), final_state (B,H,N,P)).
+
+    Heads are grouped: head h uses B/C group ``h // (H // G)``.
+    """
+    b, l, h, p = x.shape
+    g, n = B_.shape[2], B_.shape[3]
+    q = min(chunk_size, l)
+    if l % q:
+        # Pad to a chunk multiple with dt=0 steps: decay exp(0·A)=1 and the
+        # input contribution dt·Bx = 0, so padding is exactly inert.
+        pad = q - l % q
+        y, st = ssd_chunked(
+            jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            jnp.pad(dt, ((0, 0), (0, pad), (0, 0))),
+            A,
+            jnp.pad(B_, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            jnp.pad(C_, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            chunk_size=chunk_size,
+            initial_state=initial_state,
+            use_kernel=use_kernel,
+        )
+        return y[:, :l], st
+    nc = l // q
+    rep = h // g
+
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = jnp.repeat(B_.astype(jnp.float32), rep, axis=2)  # (B,L,H,N)
+    Cf = jnp.repeat(C_.astype(jnp.float32), rep, axis=2)
+
+    # Chunked views: (B, nc, Q, ...)
+    xc = xf.reshape(b, nc, q, h, p)
+    dtc = dtf.reshape(b, nc, q, h)
+    Bc = Bf.reshape(b, nc, q, h, n)
+    Cc = Cf.reshape(b, nc, q, h, n)
+    lA = dtc * A  # (B, nc, Q, H) log decay per step
+
+    # ----- intra-chunk (diagonal) term -------------------------------------
+    if use_kernel:
+        from repro.kernels.ssd import ops as ssd_ops
+
+        y_diag = ssd_ops.ssd_diag_chunk(xc, dtc, lA, Bc, Cc)
+    else:
+        seg = _segsum(jnp.moveaxis(lA, -1, -2))  # (B, nc, H, Q, Q)
+        decay = jnp.exp(seg)
+        scores = jnp.einsum("bcqhn,bckhn->bchqk", Cc, Bc)
+        y_diag = jnp.einsum(
+            "bchqk,bckh,bckhp->bcqhp", scores * decay, dtc, xc
+        )
+
+    # ----- inter-chunk recurrence ------------------------------------------
+    cum_lA = jnp.cumsum(lA, axis=2)  # (B, nc, Q, H)
+    total_lA = cum_lA[:, :, -1, :]  # (B, nc, H)
+    # State contributed by each chunk: decay from step j to chunk end.
+    decay_to_end = jnp.exp(total_lA[:, :, None, :] - cum_lA)  # (B,nc,Q,H)
+    chunk_states = jnp.einsum(
+        "bcqh,bcqhn,bcqhp->bchnp", decay_to_end * dtc, Bc, xc
+    )  # (B, nc, H, N, P)
+
+    init = (
+        initial_state.astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((b, h, n, p), jnp.float32)
+    )
+
+    def step(carry, inp):
+        tot, st = inp  # (B,H), (B,H,N,P)
+        new = jnp.exp(tot)[..., None, None] * carry + st
+        return new, carry  # emit the state *entering* this chunk
+
+    final_state, prev_states = jax.lax.scan(
+        step,
+        init,
+        (jnp.moveaxis(total_lA, 1, 0), jnp.moveaxis(chunk_states, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (B, nc, H, N, P)
+
+    # Off-diagonal: queries read the state entering their chunk.
+    decay_from_start = jnp.exp(cum_lA)  # (B,nc,Q,H) — includes own dt·A
+    y_off = jnp.einsum(
+        "bcqhn,bcqh,bchnp->bcqhp", Cc, decay_from_start, prev_states
+    )
+
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y, final_state
+
+
+def ssd_decode_step(
+    state: jax.Array,  # (B, H, N, P) f32
+    x: jax.Array,  # (B, H, P)
+    dt: jax.Array,  # (B, H)
+    A: jax.Array,  # (H,)
+    B_: jax.Array,  # (B, G, N)
+    C_: jax.Array,  # (B, G, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """One recurrent step.  Returns (y (B,H,P), new_state)."""
+    b, h, n, p = state.shape
+    g = B_.shape[1]
+    rep = h // g
+    Bf = jnp.repeat(B_.astype(jnp.float32), rep, axis=1)  # (B,H,N)
+    Cf = jnp.repeat(C_.astype(jnp.float32), rep, axis=1)
+    dtf = dt.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    decay = jnp.exp(dtf * A)  # (B,H)
+    new_state = decay[..., None, None] * state + jnp.einsum(
+        "bh,bhn,bhp->bhnp", dtf, Bf, xf
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", Cf, new_state)
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# Full layer
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv(
+    seq: jax.Array,  # (B, L, C)
+    w: jax.Array,  # (K, C) depthwise taps
+    bias: jax.Array,  # (C,)
+    prev: Optional[jax.Array] = None,  # (B, K-1, C) rolling inputs
+) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv.  Returns (out (B,L,C), new_prev (B,K-1,C))."""
+    k = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((seq.shape[0], k - 1, seq.shape[2]), seq.dtype)
+    ext = jnp.concatenate([prev, seq], axis=1)  # (B, K-1+L, C)
+    out = jnp.zeros_like(seq, dtype=jnp.float32)
+    for i in range(k):
+        out = out + ext[:, i : i + seq.shape[1], :].astype(jnp.float32) * w[i].astype(
+            jnp.float32
+        )
+    out = out + bias.astype(jnp.float32)
+    new_prev = ext[:, -(k - 1) :, :] if k > 1 else prev
+    return out.astype(seq.dtype), new_prev
+
+
+def _gated_norm(y: jax.Array, z: jax.Array, scale: jax.Array) -> jax.Array:
+    """RMSNorm(y * silu(z)) — mamba2's gated output norm (f32 stats)."""
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(ms + 1e-6) * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def ssm_apply(
+    p: Dict[str, jax.Array],
+    cfg: ModelConfig,
+    u: jax.Array,  # (B, T, d)
+    *,
+    state: Optional[Dict[str, jax.Array]] = None,  # decode: {"ssd","conv"}
+    use_kernel: bool = False,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """One Mamba-2 block.  ``state=None`` → train/prefill-from-scratch path
+    (returns final state for cache handoff); state given + T==1 → decode."""
+    s = cfg.ssm
+    assert s is not None
+    cd = cfg.cdtype
+    b, t, d = u.shape
+    di = s.d_inner(d)
+    h = s.num_heads(d)
+    g, n = s.n_groups, s.d_state
+    pdim = s.head_dim
+
+    z = jnp.einsum("btd,de->bte", u, p["wz"].astype(cd))
+    x = jnp.einsum("btd,de->bte", u, p["wx"].astype(cd))
+    z = shard_activation(z, ("batch", "seq", "ssm_inner"))
+    x = shard_activation(x, ("batch", "seq", "ssm_inner"))
+    Braw = jnp.einsum("btd,de->bte", u, p["wB"].astype(cd))
+    Craw = jnp.einsum("btd,de->bte", u, p["wC"].astype(cd))
+    dt_raw = jnp.einsum("btd,dh->bth", u, p["wdt"].astype(cd))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])  # (H,) strictly negative
+
+    decode = state is not None and t == 1
+    conv_prev = None
+    if state is not None:
+        cp = state["conv"]
+        conv_prev = (
+            cp[:, :, :di],
+            cp[:, :, di : di + g * n],
+            cp[:, :, di + g * n :],
+        )
+
+    x, cpx = _causal_conv(x, p["conv_x"], p["conv_bias_x"],
+                          conv_prev[0] if conv_prev else None)
+    Braw, cpb = _causal_conv(Braw, p["conv_B"], p["conv_bias_B"],
+                             conv_prev[1] if conv_prev else None)
+    Craw, cpc = _causal_conv(Craw, p["conv_C"], p["conv_bias_C"],
+                             conv_prev[2] if conv_prev else None)
+    x = jax.nn.silu(x.astype(jnp.float32)).astype(cd)
+    Braw = jax.nn.silu(Braw.astype(jnp.float32)).astype(cd)
+    Craw = jax.nn.silu(Craw.astype(jnp.float32)).astype(cd)
+
+    xh = x.reshape(b, t, h, pdim)
+    Bh = Braw.reshape(b, t, g, n)
+    Ch = Craw.reshape(b, t, g, n)
+
+    if decode:
+        y1, new_ssd = ssd_decode_step(
+            state["ssd"], xh[:, 0], dt[:, 0], A, Bh[:, 0], Ch[:, 0]
+        )
+        y = y1[:, None]  # (B,1,H,P)
+    else:
+        init = state["ssd"] if state is not None else None
+        y, new_ssd = ssd_chunked(
+            xh, dt, A, Bh, Ch, chunk_size=s.chunk_size,
+            initial_state=init, use_kernel=use_kernel,
+        )
+
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.astype(cd).reshape(b, t, di)
+    y = _gated_norm(y, z, p["norm_scale"])
+    y = shard_activation(y, ("batch", "seq", "ssm_inner"))
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"].astype(cd))
+    out = shard_activation(out, ("batch", "seq", "act_embed"))
+
+    new_state = None
+    if state is not None or not decode:
+        new_state = {
+            "ssd": new_ssd,
+            "conv": jnp.concatenate([cpx, cpb, cpc], axis=-1),
+        }
+    return out, new_state

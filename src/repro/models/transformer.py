@@ -1,0 +1,237 @@
+"""Transformer backbones: decoder-only LM and encoder–decoder (whisper).
+
+Layer stacks are built the MaxText way: per-layer parameter trees are
+*stacked* along a leading "layers" axis and the stack is traversed with
+``jax.lax.scan`` — one compiled layer body regardless of depth (61-layer
+kimi and 88-layer granite-34b compile in seconds, not minutes) — with the
+remat policy from ``parallel.remat`` applied to the body.
+
+Three block flavors share one scan driver:
+
+  * dense block:   attn → MLP                         (granite, qwen, llava)
+  * moe block:     attn → MoE (+shared/+dense paths)  (kimi, arctic)
+  * hybrid/ssm blocks live in ``models.hybrid`` / are pure-SSM scans.
+
+Caches: decode-time KV caches are stacked over layers and passed through the
+scan as xs/ys, so the same driver serves train (no cache), prefill (filling
+caches) and decode (one-token update).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.spec import TensorSpec, is_spec
+from repro.parallel.constraints import shard_activation
+from repro.parallel.remat import remat_wrap
+
+__all__ = [
+    "stack_specs",
+    "block_specs",
+    "block_apply",
+    "decoder_stack_specs",
+    "decoder_stack_apply",
+    "encoder_stack_specs",
+    "encoder_stack_apply",
+    "sinusoidal_positions",
+]
+
+
+def stack_specs(tree: Any, n: int) -> Any:
+    """Prepend a stacked "layers" axis of size ``n`` to every spec leaf."""
+
+    def stack(s: TensorSpec) -> TensorSpec:
+        axes = s.axes if s.axes else (None,) * len(s.shape)
+        return TensorSpec((n,) + s.shape, s.dtype, ("layers",) + tuple(axes),
+                          init=s.init, init_scale=s.init_scale)
+
+    return jax.tree.map(stack, tree, is_leaf=is_spec)
+
+
+# ---------------------------------------------------------------------------
+# One transformer block (dense or MoE)
+# ---------------------------------------------------------------------------
+
+
+def block_specs(cfg: ModelConfig, *, cross: bool = False) -> Dict[str, Any]:
+    specs: Dict[str, Any] = {
+        "attn_norm": L.norm_specs(cfg),
+        "attn": L.attn_specs(cfg),
+        "mlp_norm": L.norm_specs(cfg),
+    }
+    if cross:
+        specs["cross_norm"] = L.norm_specs(cfg)
+        specs["cross_attn"] = L.attn_specs(cfg, cross=True)
+    if cfg.family == "moe":
+        specs["moe"] = L.moe_specs(cfg)
+    else:
+        specs["mlp"] = L.mlp_specs(cfg)
+    return specs
+
+
+def block_apply(
+    p: Dict[str, Any],
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    positions: jax.Array,
+    causal: bool = True,
+    use_rope: bool = True,
+    cache: Optional[Dict[str, jax.Array]] = None,
+    cache_index: Optional[jax.Array] = None,
+    cross_source: Optional[jax.Array] = None,
+    cross_cache: Optional[Dict[str, jax.Array]] = None,
+) -> Tuple[jax.Array, jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Pre-norm block.  Returns (x, aux_loss, new_self_cache)."""
+    h = L.norm_apply(p["attn_norm"], cfg, x)
+    attn_out, new_cache = L.attn_apply(
+        p["attn"], cfg, h, positions=positions, causal=causal,
+        cache=cache, cache_index=cache_index, use_rope=use_rope,
+    )
+    x = x + attn_out
+
+    if cross_source is not None or cross_cache is not None:
+        h = L.norm_apply(p["cross_norm"], cfg, x)
+        if cross_cache is not None:
+            # Pre-projected encoder K/V (built once at prefill).
+            q, _, _ = L._project_qkv(p["cross_attn"], cfg, h, h)
+            out = L._sdpa(q, cross_cache["k"], cross_cache["v"], causal=False)
+            cross_out = jnp.einsum(
+                "bthk,hkd->btd", out, p["cross_attn"]["wo"].astype(cfg.cdtype)
+            )
+            if "bo" in p["cross_attn"]:
+                cross_out = cross_out + p["cross_attn"]["bo"].astype(cfg.cdtype)
+        else:
+            cross_out, _ = L.attn_apply(
+                p["cross_attn"], cfg, h, positions=positions, causal=False,
+                kv_source=cross_source, use_rope=False,
+            )
+        x = x + cross_out
+
+    h = L.norm_apply(p["mlp_norm"], cfg, x)
+    if "moe" in p:
+        mlp_out, aux = L.moe_apply(p["moe"], cfg, h)
+    else:
+        mlp_out = L.mlp_apply(p["mlp"], cfg, h)
+        aux = jnp.zeros((), jnp.float32)
+    return x + mlp_out, aux, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Decoder stack (scan over layers)
+# ---------------------------------------------------------------------------
+
+
+def decoder_stack_specs(cfg: ModelConfig, *, cross: bool = False) -> Dict[str, Any]:
+    return stack_specs(block_specs(cfg, cross=cross), cfg.num_layers)
+
+
+def decoder_stack_apply(
+    stacked: Dict[str, Any],
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    positions: jax.Array,
+    caches: Optional[Dict[str, jax.Array]] = None,  # stacked {"k","v"}
+    cache_index: Optional[jax.Array] = None,
+    cross_source: Optional[jax.Array] = None,
+    cross_caches: Optional[Dict[str, jax.Array]] = None,  # stacked
+) -> Tuple[jax.Array, jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Scan the block over stacked layer params (+ caches).
+
+    Returns (hidden, total_aux_loss, updated_caches_or_None).
+    """
+    has_cache = caches is not None
+    has_cross = cross_source is not None or cross_caches is not None
+
+    def body(carry, xs):
+        h, aux = carry
+        p = xs["params"]
+        cache = {"k": xs["ck"], "v": xs["cv"]} if has_cache else None
+        ccache = (
+            {"k": xs["xk"], "v": xs["xv"]} if cross_caches is not None else None
+        )
+        h, a, new_cache = block_apply(
+            p, cfg, h,
+            positions=positions,
+            cache=cache,
+            cache_index=cache_index,
+            cross_source=cross_source if cross_caches is None else None,
+            cross_cache=ccache,
+            use_rope=(cfg.pos_emb == "rope"),
+        )
+        h = shard_activation(h, ("batch", "seq", "act_embed"))
+        ys = {}
+        if has_cache:
+            ys = {"ck": new_cache["k"], "cv": new_cache["v"]}
+        return (h, aux + a), ys
+
+    xs: Dict[str, Any] = {"params": stacked}
+    if has_cache:
+        xs["ck"], xs["cv"] = caches["k"], caches["v"]
+    if cross_caches is not None:
+        xs["xk"], xs["xv"] = cross_caches["k"], cross_caches["v"]
+
+    body = remat_wrap(body, cfg.remat_policy)
+    (h, aux), ys = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+    new_caches = {"k": ys["ck"], "v": ys["cv"]} if has_cache else None
+    return h, aux, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Encoder stack (whisper) — bidirectional, sinusoidal positions
+# ---------------------------------------------------------------------------
+
+
+def sinusoidal_positions(length: int, d: int) -> jax.Array:
+    """Fixed sinusoidal table (length, d), f32."""
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, 2.0 * dim / d)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+def encoder_stack_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    assert cfg.encoder is not None
+    enc_cfg = cfg.replace(family="dense")  # encoder blocks are dense
+    tree = {
+        "attn_norm": L.norm_specs(enc_cfg),
+        "attn": L.attn_specs(enc_cfg),
+        "mlp_norm": L.norm_specs(enc_cfg),
+        "mlp": L.mlp_specs(enc_cfg),
+    }
+    return {
+        "layers": stack_specs(tree, cfg.encoder.num_layers),
+        "final_norm": L.norm_specs(cfg),
+    }
+
+
+def encoder_stack_apply(
+    params: Dict[str, Any], cfg: ModelConfig, frames: jax.Array
+) -> jax.Array:
+    """frames: (B, S, d) precomputed frame embeddings (conv frontend STUB)."""
+    enc_cfg = cfg.replace(family="dense")
+    b, s, d = frames.shape
+    x = frames.astype(cfg.cdtype) + sinusoidal_positions(s, d).astype(cfg.cdtype)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    def body(carry, p):
+        h = carry
+        h2 = L.norm_apply(p["attn_norm"], enc_cfg, h)
+        attn_out, _ = L.attn_apply(
+            p["attn"], enc_cfg, h2, positions=positions, causal=False,
+            use_rope=False,
+        )
+        h = h + attn_out
+        h2 = L.norm_apply(p["mlp_norm"], enc_cfg, h)
+        h = h + L.mlp_apply(p["mlp"], enc_cfg, h2)
+        return shard_activation(h, ("batch", "seq", "act_embed")), None
+
+    body = remat_wrap(body, cfg.remat_policy)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return L.norm_apply(params["final_norm"], cfg, x)

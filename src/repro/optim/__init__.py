@@ -1,0 +1,24 @@
+"""Optimizers (AdamW, Adafactor) and LR schedules, pure JAX."""
+
+from repro.optim.optimizers import (
+    OptState,
+    Optimizer,
+    adamw,
+    adafactor,
+    make_optimizer,
+    global_norm,
+    clip_by_global_norm,
+)
+from repro.optim.schedules import cosine_schedule, linear_warmup_cosine
+
+__all__ = [
+    "OptState",
+    "Optimizer",
+    "adafactor",
+    "adamw",
+    "clip_by_global_norm",
+    "cosine_schedule",
+    "global_norm",
+    "linear_warmup_cosine",
+    "make_optimizer",
+]

@@ -1,0 +1,230 @@
+"""Optimizers as (init, update) pairs over parameter pytrees.
+
+Two families, chosen per architecture by ``ExecConfig.optimizer``:
+
+  * ``adamw``     — AdamW with f32 moments; the default for ≤100 B models.
+  * ``adafactor`` — factored second moment (row/col statistics for ≥2-D
+                    tensors), no momentum, update-norm clipping — the
+                    memory-frugal choice for the trillion-parameter MoE
+                    cells (state ≈ bytes(params)/min(dims) instead of
+                    8 bytes/param).
+
+Optimizer state tensors inherit the *logical axes* of their parameters, so
+``parallel.sharding`` shards them identically (ZeRO-style placement comes
+from the same rule set — no separate partitioning logic to drift).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "OptState",
+    "Optimizer",
+    "adamw",
+    "adafactor",
+    "make_optimizer",
+    "global_norm",
+    "clip_by_global_norm",
+]
+
+
+class OptState(NamedTuple):
+    step: jax.Array  # scalar int32
+    inner: Any  # optimizer-specific pytree
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], OptState]
+    update: Callable[[Any, OptState, Any, jax.Array], Tuple[Any, OptState]]
+    # state_specs mirrors param TensorSpecs so sharding rules apply to state.
+    state_specs: Callable[[Any], Any]
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw(
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+) -> Optimizer:
+    def init(params: Any) -> OptState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            inner={
+                "mu": jax.tree.map(zeros, params),
+                "nu": jax.tree.map(zeros, params),
+            },
+        )
+
+    def update(params: Any, state: OptState, grads: Any, lr: jax.Array):
+        step = state.step + 1
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, mu, nu):
+            g = g.astype(jnp.float32)
+            mu = b1 * mu + (1 - b1) * g
+            nu = b2 * nu + (1 - b2) * jnp.square(g)
+            mhat = mu / bc1
+            nhat = nu / bc2
+            delta = mhat / (jnp.sqrt(nhat) + eps) + weight_decay * p.astype(
+                jnp.float32
+            )
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_mu = jax.tree.leaves(state.inner["mu"])
+        flat_nu = jax.tree.leaves(state.inner["nu"])
+        new = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+        new_params = jax.tree.unflatten(treedef, [t[0] for t in new])
+        mu = jax.tree.unflatten(treedef, [t[1] for t in new])
+        nu = jax.tree.unflatten(treedef, [t[2] for t in new])
+        return new_params, OptState(step=step, inner={"mu": mu, "nu": nu})
+
+    def state_specs(param_specs: Any) -> Any:
+        from repro.models.spec import TensorSpec, is_spec
+
+        f32 = lambda s: TensorSpec(s.shape, jnp.float32, s.axes)
+        return {
+            "mu": jax.tree.map(f32, param_specs, is_leaf=is_spec),
+            "nu": jax.tree.map(f32, param_specs, is_leaf=is_spec),
+        }
+
+    return Optimizer(init=init, update=update, state_specs=state_specs)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern, 2018) — factored second moment, no momentum
+# ---------------------------------------------------------------------------
+
+
+def _factored_dims(shape: Tuple[int, ...]) -> Optional[Tuple[int, int]]:
+    """Last two non-trivial dims to factor over, or None for <2-D tensors."""
+    if len(shape) < 2:
+        return None
+    return len(shape) - 2, len(shape) - 1
+
+
+def adafactor(
+    *,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    def init(params: Any) -> OptState:
+        def zero_state(p):
+            dims = _factored_dims(p.shape)
+            if dims is None:
+                return {"v": jnp.zeros(p.shape, jnp.float32)}
+            r, c = dims
+            row_shape = tuple(d for i, d in enumerate(p.shape) if i != c)
+            col_shape = tuple(d for i, d in enumerate(p.shape) if i != r)
+            return {
+                "vr": jnp.zeros(row_shape, jnp.float32),
+                "vc": jnp.zeros(col_shape, jnp.float32),
+            }
+
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            inner=jax.tree.map(
+                zero_state, params, is_leaf=lambda x: isinstance(x, jax.Array)
+            ),
+        )
+
+    def update(params: Any, state: OptState, grads: Any, lr: jax.Array):
+        step = state.step + 1
+        # Step-dependent decay (Adafactor's \hat{beta2_t}).
+        beta2t = 1.0 - step.astype(jnp.float32) ** (-decay)
+
+        def upd(p, g, st):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            dims = _factored_dims(p.shape)
+            if dims is None:
+                v = beta2t * st["v"] + (1 - beta2t) * g2
+                new_st = {"v": v}
+                precond = g * jax.lax.rsqrt(v + eps)
+            else:
+                r, c = dims
+                vr = beta2t * st["vr"] + (1 - beta2t) * jnp.mean(g2, axis=c)
+                vc = beta2t * st["vc"] + (1 - beta2t) * jnp.mean(g2, axis=r)
+                new_st = {"vr": vr, "vc": vc}
+                row_mean = jnp.mean(vr, axis=-1, keepdims=True)
+                rfac = jax.lax.rsqrt(jnp.expand_dims(vr / jnp.maximum(row_mean, eps), c))
+                cfac = jax.lax.rsqrt(jnp.expand_dims(vc, r))
+                precond = g * rfac * cfac
+            # Update-norm clipping (RMS ≤ clip_threshold).
+            rms = jnp.sqrt(jnp.mean(jnp.square(precond)) + 1e-30)
+            precond = precond / jnp.maximum(1.0, rms / clip_threshold)
+            newp = p.astype(jnp.float32) - lr * (
+                precond + weight_decay * p.astype(jnp.float32)
+            )
+            return newp.astype(p.dtype), new_st
+
+        is_state_leaf = lambda x: isinstance(x, dict) and (
+            "v" in x or "vr" in x
+        )
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_s = treedef.flatten_up_to(state.inner)
+        new = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        new_params = jax.tree.unflatten(treedef, [t[0] for t in new])
+        new_state = jax.tree.unflatten(treedef, [t[1] for t in new])
+        return new_params, OptState(step=step, inner=new_state)
+
+    def state_specs(param_specs: Any) -> Any:
+        from repro.models.spec import TensorSpec, is_spec
+
+        def spec_state(s: TensorSpec):
+            dims = _factored_dims(s.shape)
+            axes = s.axes if s.axes else (None,) * len(s.shape)
+            if dims is None:
+                return {"v": TensorSpec(s.shape, jnp.float32, axes)}
+            r, c = dims
+            row_shape = tuple(d for i, d in enumerate(s.shape) if i != c)
+            row_axes = tuple(a for i, a in enumerate(axes) if i != c)
+            col_shape = tuple(d for i, d in enumerate(s.shape) if i != r)
+            col_axes = tuple(a for i, a in enumerate(axes) if i != r)
+            return {
+                "vr": TensorSpec(row_shape, jnp.float32, row_axes),
+                "vc": TensorSpec(col_shape, jnp.float32, col_axes),
+            }
+
+        return jax.tree.map(spec_state, param_specs, is_leaf=is_spec)
+
+    return Optimizer(init=init, update=update, state_specs=state_specs)
+
+
+def make_optimizer(name: str, *, weight_decay: float = 0.01) -> Optimizer:
+    if name == "adamw":
+        return adamw(weight_decay=weight_decay)
+    if name == "adafactor":
+        return adafactor(weight_decay=weight_decay)
+    raise ValueError(f"unknown optimizer {name!r}")

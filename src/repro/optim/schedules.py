@@ -1,0 +1,27 @@
+"""Learning-rate schedules (scalar step → scalar lr, jittable)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["cosine_schedule", "linear_warmup_cosine"]
+
+
+def cosine_schedule(step, base_lr: float, total_steps: int, final_frac: float = 0.1):
+    t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return base_lr * (final_frac + (1.0 - final_frac) * cos)
+
+
+def linear_warmup_cosine(
+    step, base_lr: float, warmup_steps: int, total_steps: int,
+    final_frac: float = 0.1,
+):
+    warm = base_lr * jnp.minimum(step / max(warmup_steps, 1), 1.0)
+    decay = cosine_schedule(
+        jnp.maximum(step - warmup_steps, 0),
+        base_lr,
+        max(total_steps - warmup_steps, 1),
+        final_frac,
+    )
+    return jnp.where(step < warmup_steps, warm, decay)

@@ -1,0 +1,23 @@
+"""Distribution layer: sharding rules, remat policies, microbatching."""
+
+from repro.parallel.remat import remat_wrap
+from repro.parallel.sharding import (
+    ShardingRules,
+    default_rules,
+    resolve_pspec,
+    resolve_tree,
+    named_sharding_tree,
+)
+from repro.parallel.microbatch import accumulate_gradients
+from repro.parallel.pipeline import pipeline_apply
+
+__all__ = [
+    "ShardingRules",
+    "accumulate_gradients",
+    "default_rules",
+    "named_sharding_tree",
+    "pipeline_apply",
+    "remat_wrap",
+    "resolve_pspec",
+    "resolve_tree",
+]

@@ -1,0 +1,63 @@
+"""Microbatched gradient accumulation (lax.scan over microbatches).
+
+Splits the per-step global batch into ``num_microbatches`` slices, runs the
+loss/grad computation per slice, and accumulates gradients (and the scalar
+metrics) across slices.  The accumulator dtype is configurable: bf16
+accumulation halves the gradient-buffer footprint — one of the §Perf /
+memory levers for the trillion-parameter MoE cells.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["accumulate_gradients"]
+
+
+def accumulate_gradients(
+    grad_fn: Callable[[Any, Any], Tuple[Any, Any]],
+    params: Any,
+    batch: Any,
+    num_microbatches: int,
+    *,
+    accum_dtype: Optional[Any] = None,
+) -> Tuple[Any, Any]:
+    """Run ``grad_fn(params, microbatch) -> (grads, metrics)`` over slices.
+
+    ``batch`` leaves must have a leading batch dimension divisible by
+    ``num_microbatches``.  Returns (mean grads, mean metrics).
+    """
+    if num_microbatches <= 1:
+        return grad_fn(params, batch)
+
+    def reshape(x: jax.Array) -> jax.Array:
+        b = x.shape[0]
+        if b % num_microbatches:
+            raise ValueError(
+                f"batch {b} not divisible by microbatches {num_microbatches}"
+            )
+        return x.reshape((num_microbatches, b // num_microbatches) + x.shape[1:])
+
+    micro = jax.tree.map(reshape, batch)
+
+    def to_accum(g: jax.Array) -> jax.Array:
+        return g.astype(accum_dtype) if accum_dtype is not None else g
+
+    def body(carry, mb):
+        acc_g, acc_m = carry
+        g, m = grad_fn(params, mb)
+        acc_g = jax.tree.map(lambda a, b: a + to_accum(b), acc_g, g)
+        acc_m = jax.tree.map(lambda a, b: a + b, acc_m, m)
+        return (acc_g, acc_m), None
+
+    g0, m0 = grad_fn(params, jax.tree.map(lambda x: x[0], micro))
+    g0 = jax.tree.map(to_accum, g0)
+    rest = jax.tree.map(lambda x: x[1:], micro)
+    (gs, ms), _ = jax.lax.scan(body, (g0, m0), rest)
+    inv = 1.0 / num_microbatches
+    grads = jax.tree.map(lambda g: (g * inv).astype(g.dtype), gs)
+    metrics = jax.tree.map(lambda m: m * inv, ms)
+    return grads, metrics

@@ -1,0 +1,31 @@
+"""Activation-checkpoint (remat) policies for scan-over-layers bodies.
+
+Policies (selected per config, iterated during §Perf):
+
+  "none"  — save everything XLA wants to save (fastest, most memory);
+  "dots"  — save only matmul outputs with no batch dims (weights-stationary
+            checkpointing: recompute elementwise/softmax, keep GEMM results);
+  "full"  — save only the layer boundary (minimum memory, recompute all).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+
+__all__ = ["remat_wrap", "POLICIES"]
+
+POLICIES = ("none", "dots", "full")
+
+
+def remat_wrap(fn: Callable, policy: str) -> Callable:
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    if policy == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    raise ValueError(f"unknown remat policy {policy!r}; expected one of {POLICIES}")

@@ -1,0 +1,15 @@
+"""Training/serving runtime: step factories, fault-tolerant loops."""
+
+from repro.runtime.steps import TrainState, make_train_step, make_serve_steps
+from repro.runtime.loop import TrainLoop, StragglerMonitor, PreemptionGuard
+from repro.runtime.serve import ServeLoop
+
+__all__ = [
+    "PreemptionGuard",
+    "ServeLoop",
+    "StragglerMonitor",
+    "TrainLoop",
+    "TrainState",
+    "make_serve_steps",
+    "make_train_step",
+]

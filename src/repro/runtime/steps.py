@@ -1,0 +1,119 @@
+"""Step-function factories: ``train_step`` and ``serve_step``s.
+
+These are the functions the launcher jits (with shardings and donation) and
+the dry-run AOT-lowers.  They are pure: ``(state, batch) -> (state, metrics)``
+and ``(params, cache, tokens, index) -> (logits, cache)``.
+
+Distributed-optimization knobs applied here (all per-arch ExecConfig):
+  * microbatch gradient accumulation (lax.scan) with optional bf16 accumulator
+  * bf16 gradient reduction: grads cast to bf16 *inside* the per-microbatch
+    grad fn, so the cross-device reduce-scatter/all-reduce XLA inserts for
+    data parallelism moves half the bytes
+  * global-norm clipping, LR schedule, AdamW or Adafactor update
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ExecConfig
+from repro.models.model import Model
+from repro.optim import (
+    OptState,
+    clip_by_global_norm,
+    linear_warmup_cosine,
+    make_optimizer,
+)
+
+__all__ = ["TrainState", "make_train_step", "make_serve_steps"]
+
+TrainState = Dict[str, Any]  # {"params": pytree, "opt": OptState}
+
+
+def make_train_step(
+    model: Model, exec_cfg: ExecConfig
+) -> Callable[[TrainState, Dict[str, jax.Array]], Tuple[TrainState, Dict]]:
+    """Build the jittable training step for (model, exec config)."""
+    optimizer = make_optimizer(
+        exec_cfg.optimizer, weight_decay=exec_cfg.weight_decay
+    )
+    from repro.parallel.microbatch import accumulate_gradients
+
+    accum_dtype = (
+        jnp.dtype(exec_cfg.accum_dtype) if exec_cfg.accum_dtype else None
+    )
+
+    def grad_fn(params, mb):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss_fn, has_aux=True
+        )(params, mb)
+        if exec_cfg.bf16_grad_reduce:
+            grads = jax.tree.map(
+                lambda g: g.astype(jnp.bfloat16)
+                if g.dtype == jnp.float32
+                else g,
+                grads,
+            )
+        return grads, metrics
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        params, opt = state["params"], state["opt"]
+        grads, metrics = accumulate_gradients(
+            grad_fn, params, batch, exec_cfg.num_microbatches,
+            accum_dtype=accum_dtype,
+        )
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        grads, grad_norm = clip_by_global_norm(grads, exec_cfg.grad_clip)
+        lr = linear_warmup_cosine(
+            opt.step + 1, exec_cfg.learning_rate, exec_cfg.warmup_steps,
+            exec_cfg.total_steps,
+        )
+        new_params, new_opt = optimizer.update(params, opt, grads, lr)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = grad_norm
+        metrics["lr"] = lr
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def init_train_state(model: Model, exec_cfg: ExecConfig, key: jax.Array) -> TrainState:
+    from repro.models.spec import init_tree
+
+    optimizer = make_optimizer(
+        exec_cfg.optimizer, weight_decay=exec_cfg.weight_decay
+    )
+    params = init_tree(key, model.param_specs())
+    return {"params": params, "opt": optimizer.init(params)}
+
+
+def train_state_specs(model: Model, exec_cfg: ExecConfig) -> Any:
+    """TensorSpec tree matching ``init_train_state`` — for sharding/dry-run."""
+    from repro.models.spec import TensorSpec
+
+    optimizer = make_optimizer(
+        exec_cfg.optimizer, weight_decay=exec_cfg.weight_decay
+    )
+    pspecs = model.param_specs()
+    return {
+        "params": pspecs,
+        "opt": OptState(
+            step=TensorSpec((), jnp.int32, ()),
+            inner=optimizer.state_specs(pspecs),
+        ),
+    }
+
+
+def make_serve_steps(model: Model):
+    """(prefill_step, decode_step) pair for the serving path."""
+
+    def prefill_step(params, batch, cache):
+        return model.prefill(params, batch, cache)
+
+    def decode_step(params, cache, tokens, index):
+        return model.decode_step(params, cache, tokens, index)
+
+    return prefill_step, decode_step

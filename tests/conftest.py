@@ -1,0 +1,41 @@
+"""Pytest config: make `repro` importable without install; keep 1 CPU device.
+
+Tests that need many devices (sharding equivalence, tiny-mesh dry-runs)
+spawn subprocesses with their own XLA_FLAGS — the main test process must NOT
+set xla_force_host_platform_device_count (per the dry-run contract).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+if SRC not in sys.path:
+    sys.path.insert(0, os.path.abspath(SRC))
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout: int = 560) -> str:
+    """Run a python snippet in a subprocess with N fake host devices.
+
+    The snippet should print its assertions' evidence; raises on failure.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.abspath(SRC)
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\nSTDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr[-3000:]}"
+        )
+    return proc.stdout
+
+
+@pytest.fixture
+def devices_runner():
+    return run_with_devices

@@ -1,0 +1,58 @@
+"""TPU-autotuner components that run without compiles: the variant space,
+feature encoding, and the §III-D split over predicted peaks."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.launch.autotune import ExecVariant, HBM_PER_CHIP, variant_space
+
+
+class TestVariantSpace:
+    def test_train_space_is_full_grid(self):
+        space = variant_space("train")
+        assert len(space) == 5 * 3 * 2 * 2
+        names = [v.name for v in space]
+        assert len(set(names)) == len(names)  # unique
+
+    def test_serve_space_is_sharding_only(self):
+        space = variant_space("decode")
+        assert len(space) == 4
+        assert all(v.num_microbatches == 1 for v in space)
+
+    def test_features_are_principal_axes(self):
+        v = ExecVariant(8, "full", True, False)
+        f = v.features()
+        assert f[0] == pytest.approx(math.log2(8))
+        assert f[1] == 2.0  # remat level
+        assert f[2] == 1.0 and f[3] == 0.0
+
+
+class TestMemoryAwareSplit:
+    def test_predicted_fit_prioritized(self):
+        """Configs predicted under the HBM line go in the priority group —
+        the §III-D split with requirement-per-config instead of
+        memory-per-config (DESIGN.md §2.1)."""
+        space = variant_space("train")
+        # synthetic linear prediction: peak = flat + act/(microbatches)
+        flat = 6 * 2**30
+        act1 = 40 * 2**30
+        preds = {
+            v.name: flat + act1 / v.num_microbatches *
+            (0.5 if v.remat == "full" else 1.0) *
+            (0.25 if v.seq_shard else 1.0)
+            for v in space
+        }
+        prio = [i for i, v in enumerate(space)
+                if preds[v.name] <= HBM_PER_CHIP * 1.05]
+        rest = [i for i in range(len(space)) if i not in prio]
+        assert prio and rest
+        # every high-microbatch + full-remat + seq-shard config fits
+        for i, v in enumerate(space):
+            if v.num_microbatches >= 8 and v.remat == "full" and v.seq_shard:
+                assert i in prio
+        # micro=1, no remat, no seq-shard cannot fit
+        for i, v in enumerate(space):
+            if v.num_microbatches == 1 and v.remat == "none" and not v.seq_shard:
+                assert i in rest

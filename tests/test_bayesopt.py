@@ -1,0 +1,132 @@
+"""Bayesian-optimization engine tests: fast path vs readable reference,
+convergence behavior, and the Ruya two-phase search semantics."""
+
+import numpy as np
+import pytest
+
+from repro.core import fast_bo
+from repro.core.acquisition import expected_improvement
+from repro.core.bayesopt import BOSettings, cherrypick_search, ruya_search
+from repro.core.gp import fit_gp, gp_predict
+from repro.core.search_space import Configuration, SearchSpace
+
+import jax.numpy as jnp
+
+
+def quad_space(n=25):
+    # 1-D quadratic cost surface over n configs; optimum in the middle.
+    return SearchSpace(
+        [
+            Configuration(name=f"c{i}", features=(float(i),), total_memory=float(i))
+            for i in range(n)
+        ]
+    )
+
+
+def quad_cost(n=25, optimum=12):
+    def fn(i):
+        return 1.0 + 0.05 * (i - optimum) ** 2
+
+    return fn
+
+
+class TestFastBOAgainstReference:
+    def test_posterior_matches_readable_gp(self):
+        rng = np.random.default_rng(0)
+        space = quad_space(20)
+        x = np.asarray(space.encoded(), np.float32)
+        obs_idx = [2, 7, 11, 15]
+        cost = quad_cost(20)
+        y_obs = np.array([cost(i) for i in obs_idx], np.float32)
+
+        obs_mask = np.zeros(20, bool)
+        obs_mask[obs_idx] = True
+        y_full = np.zeros(20, np.float32)
+        y_full[obs_idx] = y_obs
+
+        pick, max_ei, best = fast_bo.bo_step(x, obs_mask, y_full, ~obs_mask)
+        assert 0 <= int(pick) < 20 and not obs_mask[int(pick)]
+        assert float(best) == pytest.approx(y_obs.min())
+
+        # Reference: readable gp.py + acquisition.py — EI argmax must agree
+        # on the pick under the same hyperparameter grid.
+        post = fit_gp(jnp.asarray(x[obs_idx]), jnp.asarray(y_obs))
+        mean, std = gp_predict(post, jnp.asarray(x))
+        ei = np.array(
+            expected_improvement(mean, std, jnp.asarray(y_obs.min()))
+        )
+        ei[obs_mask] = -np.inf
+        assert int(np.argmax(ei)) == int(pick)
+
+    def test_ei_positive_only_where_improvement_plausible(self):
+        mean = jnp.array([1.0, 2.0, 0.5])
+        std = jnp.array([0.1, 0.1, 0.1])
+        ei = expected_improvement(mean, std, jnp.asarray(1.0))
+        assert float(ei[1]) < 1e-6  # far above best
+        assert float(ei[2]) > 0.4  # clearly below best
+
+
+class TestSearchers:
+    def test_cherrypick_finds_optimum_to_exhaustion(self):
+        space = quad_space()
+        tr = cherrypick_search(
+            space, quad_cost(), np.random.default_rng(0), to_exhaustion=True
+        )
+        assert sorted(tr.tried) == list(range(25))  # covered everything
+        assert tr.best_cost == pytest.approx(1.0)
+        assert len(set(tr.tried)) == len(tr.tried)  # no re-evaluations
+
+    def test_cherrypick_beats_random_on_average(self):
+        space = quad_space()
+        cost = quad_cost()
+        bo_iters, rnd_iters = [], []
+        for seed in range(20):
+            tr = cherrypick_search(
+                space, cost, np.random.default_rng(seed), to_exhaustion=True
+            )
+            bo_iters.append(tr.iterations_until(1.0))
+            order = np.random.default_rng(1000 + seed).permutation(25)
+            rnd_iters.append(1 + int(np.argmax(order == 12)))
+        assert np.mean(bo_iters) < np.mean(rnd_iters)
+
+    def test_ruya_priority_first_then_rest(self):
+        space = quad_space()
+        prio = [10, 11, 12, 13, 14]
+        rest = [i for i in range(25) if i not in prio]
+        tr = ruya_search(
+            space, quad_cost(), np.random.default_rng(0), prio, rest,
+            to_exhaustion=True,
+        )
+        assert set(tr.tried[: len(prio)]) == set(prio)
+        assert tr.phase_boundary == len(prio)
+        # optimum (12) is inside the priority group → found very early
+        assert tr.iterations_until(1.0) <= len(prio)
+
+    def test_ruya_with_empty_rest_equals_cherrypick(self):
+        space = quad_space()
+        cost = quad_cost()
+        tr_ruya = ruya_search(
+            space, cost, np.random.default_rng(7), list(range(25)), [],
+            to_exhaustion=True,
+        )
+        tr_cp = cherrypick_search(
+            space, cost, np.random.default_rng(7), to_exhaustion=True
+        )
+        assert tr_ruya.tried == tr_cp.tried  # identical trajectories
+
+    def test_stopping_criterion_fires(self):
+        space = quad_space()
+        tr = cherrypick_search(
+            space, quad_cost(), np.random.default_rng(3),
+            settings=BOSettings(min_observations=6),
+        )
+        assert tr.stop_iteration is not None
+        assert len(tr.tried) == tr.stop_iteration
+
+    def test_max_iters_respected(self):
+        space = quad_space()
+        tr = cherrypick_search(
+            space, quad_cost(), np.random.default_rng(3),
+            settings=BOSettings(max_iters=5), to_exhaustion=True,
+        )
+        assert len(tr.tried) == 5

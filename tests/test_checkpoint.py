@@ -1,0 +1,105 @@
+"""Checkpoint manager: roundtrip (incl. bf16), atomicity, keep-N, async,
+restore-latest, and structure validation."""
+
+import json
+import os
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
+
+
+def tree():
+    return {
+        "params": {
+            "w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "scale": jnp.ones((5,), jnp.bfloat16) * 1.5,
+        },
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+class TestRoundtrip:
+    def test_save_load_identity(self, tmp_path):
+        t = tree()
+        save_pytree(str(tmp_path / "ck"), t, extra={"step": 7})
+        restored, extra = load_pytree(str(tmp_path / "ck"), t)
+        assert extra["step"] == 7
+        for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+            assert a.dtype == b.dtype
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_bf16_dtype_preserved(self, tmp_path):
+        t = {"x": jnp.asarray([1.5, -2.25], jnp.bfloat16)}
+        save_pytree(str(tmp_path / "ck"), t)
+        r, _ = load_pytree(str(tmp_path / "ck"), t)
+        assert r["x"].dtype == np.dtype("bfloat16")
+        np.testing.assert_array_equal(
+            np.asarray(r["x"], np.float32), np.asarray(t["x"], np.float32)
+        )
+
+    def test_shape_mismatch_rejected(self, tmp_path):
+        save_pytree(str(tmp_path / "ck"), {"x": jnp.zeros((3,))})
+        with pytest.raises(ValueError):
+            load_pytree(str(tmp_path / "ck"), {"x": jnp.zeros((4,))})
+
+    def test_missing_leaf_rejected(self, tmp_path):
+        save_pytree(str(tmp_path / "ck"), {"x": jnp.zeros((3,))})
+        with pytest.raises(KeyError):
+            load_pytree(str(tmp_path / "ck"), {"x": jnp.zeros((3,)),
+                                               "y": jnp.zeros((1,))})
+
+    def test_no_tmp_dir_left_behind(self, tmp_path):
+        save_pytree(str(tmp_path / "ck"), tree())
+        assert not any(p.endswith(".tmp") for p in os.listdir(tmp_path))
+
+
+class TestManager:
+    def test_latest_and_restore(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep_n=10)
+        t = tree()
+        for step in (5, 10, 15):
+            t["step"] = jnp.asarray(step, jnp.int32)
+            mgr.save(step, t, extra={"step": step})
+        assert mgr.latest_step() == 15
+        restored, extra = mgr.restore(t)
+        assert extra["step"] == 15
+        assert int(restored["step"]) == 15
+        restored5, _ = mgr.restore(t, step=5)
+        assert int(restored5["step"]) == 5
+
+    def test_keep_n_retention(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep_n=2)
+        for step in range(1, 6):
+            mgr.save(step, {"x": jnp.asarray(step)})
+        assert mgr.all_steps() == [4, 5]
+
+    def test_async_save_then_wait(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep_n=3)
+        mgr.save_async(3, tree(), extra={"step": 3})
+        mgr.wait()
+        assert mgr.latest_step() == 3
+
+    def test_async_overlapping_saves_serialize(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep_n=5)
+        for s in (1, 2, 3):
+            mgr.save_async(s, {"x": jnp.ones((64, 64)) * s})
+        mgr.wait()
+        assert set(mgr.all_steps()) == {1, 2, 3}
+
+    def test_restore_empty_raises(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        with pytest.raises(FileNotFoundError):
+            mgr.restore({"x": jnp.zeros(())})
+
+    def test_manifest_is_json(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(1, tree())
+        with open(os.path.join(mgr.step_dir(1), "manifest.json")) as f:
+            manifest = json.load(f)
+        assert "entries" in manifest
+        assert all("shape" in v for v in manifest["entries"].values())

@@ -1,0 +1,111 @@
+"""Paper-faithful evaluation substrate tests: the 69-config grid, Table I
+memory categorization, the Fig. 1 memory cliff, and profiling times."""
+
+import numpy as np
+import pytest
+
+from repro.cluster import (
+    ClusterSimulator,
+    JOBS,
+    enumerate_cluster_configs,
+    make_cluster_search_space,
+)
+from repro.core import profile_job
+from repro.core.memory_model import MemoryCategory
+
+GiB = 1024**3
+
+
+class TestConfigGrid:
+    def test_exactly_69_configurations(self):
+        assert len(enumerate_cluster_configs()) == 69
+
+    def test_scaleouts_span_4_to_48(self):
+        so = [c.scale_out for c in enumerate_cluster_configs()]
+        assert min(so) == 4 and max(so) == 48
+
+    def test_max_memory_below_naivebayes_bigdata_requirement(self):
+        # Paper: none of the configs can hold the 754 GB requirement.
+        max_mem = max(c.total_memory_gb for c in enumerate_cluster_configs())
+        assert max_mem < 754.0
+
+    def test_memory_per_core_ordering(self):
+        space = make_cluster_search_space()
+        by_name = {c.name: c for c in space.configs}
+        r = by_name["r4.2xlarge" + "x4"]
+        c = by_name["c4.2xlarge" + "x4"]
+        m = by_name["m4.2xlarge" + "x4"]
+        assert r.total_memory > m.total_memory > c.total_memory
+
+
+class TestTable1Reproduction:
+    """Profiling + categorization must land every job in its paper category
+    (Table I), with linear estimates close to the paper's GB figures."""
+
+    EXPECTED = {
+        "naivebayes/spark/bigdata": ("linear", 754),
+        "naivebayes/spark/huge": ("linear", 395),
+        "kmeans/spark/bigdata": ("linear", 503),
+        "kmeans/spark/huge": ("linear", 252),
+        "pagerank/spark/bigdata": ("linear", 86),
+        "pagerank/spark/huge": ("linear", 42),
+        "logregr/spark/bigdata": ("unclear", None),
+        "logregr/spark/huge": ("unclear", None),
+        "linregr/spark/bigdata": ("unclear", None),
+        "linregr/spark/huge": ("unclear", None),
+        "join/spark/bigdata": ("flat", None),
+        "join/spark/huge": ("flat", None),
+        "pagerank/hadoop/bigdata": ("flat", None),
+        "pagerank/hadoop/huge": ("flat", None),
+        "terasort/hadoop/bigdata": ("flat", None),
+        "terasort/hadoop/huge": ("flat", None),
+    }
+
+    @pytest.mark.parametrize("key", sorted(EXPECTED))
+    def test_job_lands_in_paper_category(self, key):
+        expected_cat, expected_gb = self.EXPECTED[key]
+        sim = ClusterSimulator.for_job(key)
+        prof = profile_job(sim.profile_run_fn(), sim.job.input_gb * GiB)
+        assert prof.model.category.value == expected_cat
+        if expected_gb is not None:
+            est = prof.model.estimate(sim.job.input_gb * GiB) / GiB
+            assert est == pytest.approx(expected_gb, rel=0.10)
+
+    def test_profiling_time_corridor(self):
+        # Paper Table III: 2 to ~22 minutes, mean ≈ 10 min.
+        times = []
+        for key in sorted(JOBS):
+            sim = ClusterSimulator.for_job(key)
+            prof = profile_job(sim.profile_run_fn(), sim.job.input_gb * GiB)
+            times.append(prof.total_time_s)
+        assert min(times) > 60
+        assert max(times) < 1800
+        assert 300 < np.mean(times) < 900
+
+
+class TestCostSurface:
+    def test_memory_cliff_exists_for_linear_jobs(self):
+        """Fig. 1: for a memory-bound job, configs just below the memory
+        requirement cost drastically more than configs just above."""
+        sim = ClusterSimulator.for_job("kmeans/spark/huge")
+        req = sim.job.mem_requirement_gb
+        mems = np.array([c.meta.total_memory_gb for c in sim.space.configs])
+        below = sim.normalized[(mems > req * 0.5) & (mems < req)]
+        above = sim.normalized[mems >= req]
+        assert below.min() > above.min() * 1.5
+
+    def test_flat_jobs_have_no_cliff_and_cheap_low_memory(self):
+        sim = ClusterSimulator.for_job("terasort/hadoop/huge")
+        mems = np.array([c.meta.total_memory_gb for c in sim.space.configs])
+        # The optimum for a flat job is NOT in the high-memory half.
+        opt_mem = mems[sim.optimal_index()]
+        assert opt_mem <= np.median(mems)
+
+    def test_cost_surface_deterministic(self):
+        a = ClusterSimulator.for_job("kmeans/spark/huge").costs
+        b = ClusterSimulator.for_job("kmeans/spark/huge").costs
+        np.testing.assert_array_equal(a, b)
+
+    def test_normalized_min_is_one(self):
+        sim = ClusterSimulator.for_job("join/spark/bigdata")
+        assert sim.normalized.min() == pytest.approx(1.0)

@@ -1,0 +1,63 @@
+"""Synthetic data pipeline: determinism, shapes, modality stubs, sharding."""
+
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as C
+from repro.data import SyntheticDataset, make_batch, shard_batch
+
+
+class TestDeterminism:
+    def test_same_seed_step_same_batch(self):
+        cfg = C.smoke("granite-8b").model
+        a = make_batch(cfg, 4, 16, seed=1, step=5)
+        b = make_batch(cfg, 4, 16, seed=1, step=5)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+    def test_different_steps_differ(self):
+        cfg = C.smoke("granite-8b").model
+        a = make_batch(cfg, 4, 16, seed=1, step=5)
+        b = make_batch(cfg, 4, 16, seed=1, step=6)
+        assert not np.array_equal(a["tokens"], b["tokens"])
+
+
+class TestShapesPerFamily:
+    def test_lm_batch(self):
+        cfg = C.smoke("qwen3-8b").model
+        b = make_batch(cfg, 4, 16)
+        assert b["tokens"].shape == (4, 16)
+        assert b["loss_mask"].shape == (4, 16)
+        assert b["tokens"].dtype == np.int32
+
+    def test_vlm_batch_splits_patch_budget(self):
+        cfg = C.smoke("llava-next-mistral-7b").model
+        b = make_batch(cfg, 2, 24)
+        assert b["patches"].shape == (2, cfg.num_patch_tokens, cfg.d_model)
+        assert b["tokens"].shape == (2, 24 - cfg.num_patch_tokens)
+        assert b["patches"].dtype == np.dtype(cfg.cdtype)
+
+    def test_encdec_batch_has_frames(self):
+        cfg = C.smoke("whisper-tiny").model
+        b = make_batch(cfg, 2, 16)
+        assert b["frames"].shape == (2, cfg.encoder.source_len, cfg.d_model)
+
+    def test_tokens_within_vocab(self):
+        cfg = C.smoke("mamba2-370m").model
+        b = make_batch(cfg, 8, 64)
+        assert b["tokens"].min() >= 0
+        assert b["tokens"].max() < cfg.vocab_size
+
+    def test_zipf_head_is_heavy(self):
+        cfg = C.smoke("granite-8b").model
+        b = make_batch(cfg, 64, 64)
+        # token 0 (rank 1) must appear far more often than a mid-rank token
+        counts = np.bincount(b["tokens"].ravel(), minlength=cfg.vocab_size)
+        assert counts[0] > 5 * max(counts[100], 1)
+
+
+def test_shard_batch_places_arrays():
+    cfg = C.smoke("granite-8b").model
+    ds = SyntheticDataset(cfg, 4, 16)
+    placed = shard_batch(ds.batch_at(0))
+    assert isinstance(placed["tokens"], jnp.ndarray)
+    assert placed["tokens"].shape == (4, 16)

@@ -1,0 +1,91 @@
+"""Prefill + decode must agree with the teacher-forced forward pass for
+every architecture family (the serving path's core invariant)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.configs as C
+from repro.models import Model, init_tree
+from repro.models.spec import is_spec
+
+
+def zeros_tree(specs):
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), specs, is_leaf=is_spec
+    )
+
+
+def _uncapped(spec):
+    """Raise MoE capacity so token dropping can't differ between batch
+    shapes (forward vs decode dispatch see different token counts)."""
+    m = spec.model
+    if m.moe is not None:
+        m = m.replace(moe=dataclasses.replace(m.moe, capacity_factor=8.0))
+    return m
+
+
+@pytest.mark.parametrize("arch", C.ARCHS)
+def test_prefill_matches_forward_and_decode_continues(arch):
+    cfg = _uncapped(C.smoke(arch))
+    model = Model(cfg)
+    params = init_tree(jax.random.key(0), model.param_specs())
+    B, T, MAX = 2, 8, 32
+    key = jax.random.key(1)
+    toks = jax.random.randint(key, (B, T), 0, cfg.vocab_size)
+    batch = {"tokens": toks}
+    offset = T
+    if cfg.family == "vlm":
+        batch["patches"] = (
+            jax.random.normal(key, (B, cfg.num_patch_tokens, cfg.d_model))
+            .astype(cfg.cdtype) * 0.02
+        )
+        offset += cfg.num_patch_tokens
+    if cfg.family == "encdec":
+        batch["frames"] = (
+            jax.random.normal(key, (B, cfg.encoder.source_len, cfg.d_model))
+            .astype(cfg.cdtype) * 0.02
+        )
+
+    full, _ = model.forward(params, batch)
+    cache = zeros_tree(model.cache_specs(B, MAX))
+    last, cache = model.prefill(params, batch, cache)
+    assert last.shape == (B, 1, cfg.vocab_size)
+    assert float(jnp.max(jnp.abs(last[:, 0] - full[:, -1]))) < 0.1
+
+    # Greedy-decode two tokens; each must match a fresh forward pass.
+    toks_so_far = toks
+    index = offset
+    nxt = jnp.argmax(last[:, 0], -1).astype(jnp.int32)[:, None]
+    for _ in range(2):
+        dec, cache = model.decode_step(params, cache, nxt, jnp.int32(index))
+        toks_so_far = jnp.concatenate([toks_so_far, nxt], axis=1)
+        ref_batch = dict(batch)
+        ref_batch["tokens"] = toks_so_far
+        ref, _ = model.forward(params, ref_batch)
+        assert float(jnp.max(jnp.abs(dec[:, 0] - ref[:, -1]))) < 0.1
+        nxt = jnp.argmax(dec[:, 0], -1).astype(jnp.int32)[:, None]
+        index += 1
+
+
+@pytest.mark.parametrize("arch", ["mamba2-370m", "zamba2-1.2b"])
+def test_ssm_prefill_in_two_chunks_matches_single(arch):
+    """Prefill(A+B) must equal prefill(A) then continue(B) — the state
+    handoff property long-context serving relies on."""
+    cfg = _uncapped(C.smoke(arch))
+    model = Model(cfg)
+    params = init_tree(jax.random.key(0), model.param_specs())
+    B, T = 2, 16
+    toks = jax.random.randint(jax.random.key(2), (B, T), 0, cfg.vocab_size)
+
+    cache = zeros_tree(model.cache_specs(B, T))
+    last_full, _ = model.prefill(params, {"tokens": toks}, cache)
+
+    cache2 = zeros_tree(model.cache_specs(B, T))
+    _, cache2 = model.prefill(params, {"tokens": toks[:, : T // 2]}, cache2)
+    logits2, _ = model._decoder_pass(
+        params, {"tokens": toks[:, T // 2 :]}, cache2, jnp.int32(T // 2)
+    )
+    assert float(jnp.max(jnp.abs(logits2[:, -1] - last_full[:, 0]))) < 0.1

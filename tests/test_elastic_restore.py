@@ -1,0 +1,93 @@
+"""Elastic restore: a checkpoint written on one topology restores onto a
+different mesh with the target shardings applied (subprocess, 8 devices)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_pytree
+
+
+class TestElasticRestore:
+    def test_single_device_checkpoint_restores_sharded(self, tmp_path,
+                                                       devices_runner):
+        tree = {
+            "w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
+            "b": jnp.ones((16,), jnp.bfloat16),
+        }
+        save_pytree(str(tmp_path / "ck"), tree, extra={"step": 3})
+
+        out = devices_runner(
+            f"""
+            import jax, jax.numpy as jnp, numpy as np
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.checkpoint import load_pytree
+
+            mesh = jax.make_mesh((2, 4), ("data", "model"))
+            target = {{
+                "w": jnp.zeros((8, 8), jnp.float32),
+                "b": jnp.zeros((16,), jnp.bfloat16),
+            }}
+            shardings = {{
+                "w": NamedSharding(mesh, P("data", "model")),
+                "b": NamedSharding(mesh, P("model")),
+            }}
+            restored, extra = load_pytree(r"{tmp_path / 'ck'}", target,
+                                          shardings=shardings)
+            assert extra["step"] == 3
+            assert restored["w"].sharding == shardings["w"]
+            assert restored["b"].sharding == shardings["b"]
+            np.testing.assert_array_equal(
+                np.asarray(restored["w"]),
+                np.arange(64, dtype=np.float32).reshape(8, 8))
+            # per-device shard shape proves real 8-way placement
+            shard = restored["w"].addressable_shards[0]
+            assert shard.data.shape == (4, 2), shard.data.shape
+            print("ELASTIC OK")
+            """
+        )
+        assert "ELASTIC OK" in out
+
+    def test_train_state_roundtrip_across_meshes(self, tmp_path,
+                                                 devices_runner):
+        """Full train-state: save on a (4,2) mesh layout, restore on (2,4)."""
+        out = devices_runner(
+            f"""
+            import jax, jax.numpy as jnp, numpy as np
+            import repro.configs as C
+            from repro.checkpoint import CheckpointManager
+            from repro.launch.build import rules_for
+            from repro.launch.mesh import make_mesh
+            from repro.configs.shapes import ShapeCell
+            from repro.models import Model
+            from repro.parallel.sharding import named_sharding_tree
+            from repro.runtime.steps import (init_train_state,
+                                             train_state_specs)
+
+            spec = C.smoke("qwen3-8b")
+            model = Model(spec.model)
+            ex = spec.exec
+            cell = ShapeCell("t", 16, 8, "train")
+
+            mesh_a = make_mesh((4, 2), ("data", "model"))
+            rules_a = rules_for(spec, cell, mesh_a)
+            specs = train_state_specs(model, ex)
+            sh_a = named_sharding_tree(specs, rules_a, mesh_a)
+            state = init_train_state(model, ex, jax.random.key(0))
+            state = jax.device_put(state, sh_a)
+
+            mgr = CheckpointManager(r"{tmp_path}")
+            mgr.save(7, state, extra=dict(step=7))
+
+            mesh_b = make_mesh((2, 4), ("data", "model"))
+            rules_b = rules_for(spec, cell, mesh_b)
+            sh_b = named_sharding_tree(specs, rules_b, mesh_b)
+            restored, extra = mgr.restore(state, shardings=sh_b)
+            assert extra["step"] == 7
+            a0 = np.asarray(jax.tree.leaves(state["params"])[0])
+            b0 = np.asarray(jax.tree.leaves(restored["params"])[0])
+            np.testing.assert_array_equal(a0, b0)
+            print("CROSS-MESH OK")
+            """
+        )
+        assert "CROSS-MESH OK" in out

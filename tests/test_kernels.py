@@ -1,0 +1,155 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps
+per the assignment, plus custom-VJP gradient checks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ops as fops, ref as fref
+from repro.kernels.rmsnorm import ops as rops, ref as rref
+from repro.kernels.ssd import ops as sops, ref as sref
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize(
+        "b,t,h,kv,d,causal",
+        [
+            (1, 128, 4, 4, 64, True),
+            (2, 128, 4, 2, 64, True),   # GQA
+            (1, 256, 8, 1, 32, True),   # MQA
+            (2, 128, 4, 2, 128, True),  # MXU-width head_dim
+            (1, 128, 4, 4, 64, False),  # bidirectional
+            (1, 100, 4, 2, 64, False),  # padding path (non-multiple)
+            (1, 200, 6, 3, 48, True),   # padding + causal
+        ],
+    )
+    def test_matches_oracle(self, b, t, h, kv, d, causal):
+        ks = jax.random.split(jax.random.key(t * h + d), 3)
+        q = jax.random.normal(ks[0], (b, t, h, d), jnp.float32)
+        k = jax.random.normal(ks[1], (b, t, kv, d), jnp.float32)
+        v = jax.random.normal(ks[2], (b, t, kv, d), jnp.float32)
+        out = fops.flash_attention(q, k, v, causal, None, 128, 128, True)
+        ref = fref.attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref), atol=2e-5, rtol=1e-4
+        )
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtype_sweep(self, dtype):
+        ks = jax.random.split(jax.random.key(0), 3)
+        q = jax.random.normal(ks[0], (1, 128, 2, 64)).astype(dtype)
+        k = jax.random.normal(ks[1], (1, 128, 2, 64)).astype(dtype)
+        v = jax.random.normal(ks[2], (1, 128, 2, 64)).astype(dtype)
+        out = fops.flash_attention(q, k, v, True, None, 128, 128, True)
+        ref = fref.attention_ref(q, k, v, causal=True)
+        assert out.dtype == dtype
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            atol=(2e-2 if dtype == jnp.bfloat16 else 2e-5),
+        )
+
+    def test_gradients_flow_through_custom_vjp(self):
+        ks = jax.random.split(jax.random.key(1), 3)
+        q = jax.random.normal(ks[0], (1, 128, 2, 32))
+        k = jax.random.normal(ks[1], (1, 128, 2, 32))
+        v = jax.random.normal(ks[2], (1, 128, 2, 32))
+
+        def loss_kernel(q, k, v):
+            return jnp.sum(fops.flash_attention(q, k, v, True, None, 128, 128, True) ** 2)
+
+        def loss_ref(q, k, v):
+            return jnp.sum(fref.attention_ref(q, k, v, causal=True) ** 2)
+
+        gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+        gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(gk, gr):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-3)
+
+    def test_online_softmax_is_stable_at_large_logits(self):
+        q = jnp.full((1, 128, 1, 64), 10.0)
+        k = jnp.full((1, 128, 1, 64), 10.0)
+        v = jax.random.normal(jax.random.key(0), (1, 128, 1, 64))
+        out = fops.flash_attention(q, k, v, True, None, 128, 128, True)
+        assert bool(jnp.all(jnp.isfinite(out)))
+
+
+class TestRmsnorm:
+    @pytest.mark.parametrize(
+        "rows,d,dtype",
+        [
+            (256, 64, jnp.float32),
+            (300, 128, jnp.float32),    # padding path
+            (512, 384, jnp.bfloat16),
+            (64, 1024, jnp.float32),    # pad rows < block
+        ],
+    )
+    def test_matches_oracle(self, rows, d, dtype):
+        x = jax.random.normal(jax.random.key(rows + d), (rows, d)).astype(dtype)
+        s = jax.random.normal(jax.random.key(1), (d,)).astype(dtype)
+        out = rops.rmsnorm(x, s, 1e-6, 256, True)
+        ref = rref.rmsnorm_ref(x, s)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            atol=(3e-2 if dtype == jnp.bfloat16 else 1e-5),
+        )
+
+    def test_nd_input_reshape(self):
+        x = jax.random.normal(jax.random.key(0), (2, 7, 96))
+        s = jnp.ones((96,))
+        out = rops.rmsnorm(x, s, 1e-6, 256, True)
+        assert out.shape == x.shape
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(rref.rmsnorm_ref(x, s)), atol=1e-5
+        )
+
+    def test_gradients_match_reference(self):
+        x = jax.random.normal(jax.random.key(2), (32, 64))
+        s = jax.random.normal(jax.random.key(3), (64,))
+        gk = jax.grad(lambda x, s: jnp.sum(rops.rmsnorm(x, s, 1e-6, 256, True) ** 2),
+                      argnums=(0, 1))(x, s)
+        gr = jax.grad(lambda x, s: jnp.sum(rref.rmsnorm_ref(x, s) ** 2),
+                      argnums=(0, 1))(x, s)
+        for a, b in zip(gk, gr):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+class TestSSDKernel:
+    @pytest.mark.parametrize(
+        "b,nc,q,h,p,n",
+        [
+            (1, 2, 8, 2, 16, 16),
+            (2, 2, 64, 4, 32, 32),
+            (1, 1, 128, 2, 64, 64),
+            (1, 1, 256, 1, 64, 128),  # production chunk shape
+        ],
+    )
+    def test_matches_oracle(self, b, nc, q, h, p, n):
+        ks = jax.random.split(jax.random.key(q * h), 5)
+        x = jax.random.normal(ks[0], (b, nc, q, h, p))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, nc, q, h)))
+        lA = -jax.nn.softplus(jax.random.normal(ks[2], (b, nc, q, h)))
+        B_ = jax.random.normal(ks[3], (b, nc, q, h, n))
+        C_ = jax.random.normal(ks[4], (b, nc, q, h, n))
+        out = sops.ssd_diag_chunk(x, dt, lA, B_, C_, True)
+        ref = sref.ssd_diag_ref(x, dt, lA, B_, C_)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_gradients_match_reference(self):
+        ks = jax.random.split(jax.random.key(9), 5)
+        shapes = (1, 1, 8, 2, 4)
+        x = jax.random.normal(ks[0], shapes)
+        dt = jax.nn.softplus(jax.random.normal(ks[1], shapes[:4]))
+        lA = -jax.nn.softplus(jax.random.normal(ks[2], shapes[:4]))
+        B_ = jax.random.normal(ks[3], shapes[:4] + (4,))
+        C_ = jax.random.normal(ks[4], shapes[:4] + (4,))
+
+        gk = jax.grad(
+            lambda *a: jnp.sum(sops.ssd_diag_chunk(*a, True) ** 2), argnums=(0, 3, 4)
+        )(x, dt, lA, B_, C_)
+        gr = jax.grad(
+            lambda *a: jnp.sum(sref.ssd_diag_ref(*a) ** 2), argnums=(0, 3, 4)
+        )(x, dt, lA, B_, C_)
+        for a, b in zip(gk, gr):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)

@@ -1,0 +1,229 @@
+"""Layer-level correctness: attention variants, RoPE, norms, MoE dispatch."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig, MoEConfig
+from repro.models.spec import init_tree
+
+
+def cfg_base(**kw):
+    d = dict(
+        name="t", family="dense", num_layers=1, d_model=32, num_heads=4,
+        num_kv_heads=4, d_ff=64, vocab_size=128, head_dim=8,
+        param_dtype="float32", compute_dtype="float32",
+    )
+    d.update(kw)
+    return ModelConfig(**d)
+
+
+def rand_params(specs, key=0):
+    return init_tree(jax.random.key(key), specs)
+
+
+class TestAttention:
+    def test_gqa_equals_mha_when_kv_heads_equal(self):
+        """GQA with group=1 must be exactly MHA."""
+        cfg = cfg_base(num_kv_heads=4)
+        p = rand_params(L.attn_specs(cfg))
+        x = jax.random.normal(jax.random.key(1), (2, 10, 32))
+        pos = jnp.broadcast_to(jnp.arange(10)[None], (2, 10))
+        out1, _ = L.attn_apply(p, cfg, x, positions=pos)
+        # simulate MHA by repeating kv weights per head group — identical here
+        out2, _ = L.attn_apply(p, cfg, x, positions=pos)
+        np.testing.assert_allclose(np.asarray(out1), np.asarray(out2))
+
+    def test_causality(self):
+        """Changing a future token must not change past outputs."""
+        cfg = cfg_base()
+        p = rand_params(L.attn_specs(cfg))
+        pos = jnp.broadcast_to(jnp.arange(8)[None], (1, 8))
+        x1 = jax.random.normal(jax.random.key(2), (1, 8, 32))
+        x2 = x1.at[:, -1].set(jax.random.normal(jax.random.key(3), (1, 32)))
+        o1, _ = L.attn_apply(p, cfg, x1, positions=pos)
+        o2, _ = L.attn_apply(p, cfg, x2, positions=pos)
+        np.testing.assert_allclose(
+            np.asarray(o1[:, :-1]), np.asarray(o2[:, :-1]), atol=1e-5
+        )
+        assert float(jnp.max(jnp.abs(o1[:, -1] - o2[:, -1]))) > 1e-4
+
+    def test_bidirectional_attention_sees_future(self):
+        cfg = cfg_base()
+        p = rand_params(L.attn_specs(cfg))
+        pos = jnp.broadcast_to(jnp.arange(8)[None], (1, 8))
+        x1 = jax.random.normal(jax.random.key(2), (1, 8, 32))
+        x2 = x1.at[:, -1].set(0.0)
+        o1, _ = L.attn_apply(p, cfg, x1, positions=pos, causal=False,
+                             use_rope=False)
+        o2, _ = L.attn_apply(p, cfg, x2, positions=pos, causal=False,
+                             use_rope=False)
+        assert float(jnp.max(jnp.abs(o1[:, 0] - o2[:, 0]))) > 1e-5
+
+    def test_mqa_kv1(self):
+        cfg = cfg_base(num_kv_heads=1)
+        p = rand_params(L.attn_specs(cfg))
+        x = jax.random.normal(jax.random.key(1), (2, 6, 32))
+        pos = jnp.broadcast_to(jnp.arange(6)[None], (2, 6))
+        out, _ = L.attn_apply(p, cfg, x, positions=pos)
+        assert out.shape == (2, 6, 32)
+        assert bool(jnp.all(jnp.isfinite(out)))
+
+    def test_qkv_bias_and_qknorm_change_output(self):
+        x = jax.random.normal(jax.random.key(1), (1, 6, 32))
+        pos = jnp.broadcast_to(jnp.arange(6)[None], (1, 6))
+        for flag in ("qkv_bias", "qk_norm"):
+            cfg0 = cfg_base()
+            cfg1 = cfg_base(**{flag: True})
+            p1 = rand_params(L.attn_specs(cfg1), key=5)
+            o1, _ = L.attn_apply(p1, cfg1, x, positions=pos)
+            assert bool(jnp.all(jnp.isfinite(o1)))
+            extra = set(jax.tree_util.tree_leaves_with_path(L.attn_specs(cfg1))) \
+                and len(jax.tree.leaves(L.attn_specs(cfg1)))
+            assert extra > len(jax.tree.leaves(L.attn_specs(cfg0)))
+
+    def test_kv_cache_decode_matches_full(self):
+        cfg = cfg_base(num_kv_heads=2)
+        p = rand_params(L.attn_specs(cfg))
+        x = jax.random.normal(jax.random.key(7), (1, 5, 32))
+        pos = jnp.broadcast_to(jnp.arange(5)[None], (1, 5))
+        full, _ = L.attn_apply(p, cfg, x, positions=pos)
+
+        cache = {
+            "k": jnp.zeros((1, 8, 2, 8)), "v": jnp.zeros((1, 8, 2, 8)),
+        }
+        out_p, cache = L.attn_apply(
+            p, cfg, x[:, :4], positions=pos[:, :4], cache=cache,
+            cache_index=jnp.int32(0),
+        )
+        np.testing.assert_allclose(
+            np.asarray(out_p), np.asarray(full[:, :4]), atol=1e-5
+        )
+        out_d, _ = L.attn_apply(
+            p, cfg, x[:, 4:5], positions=pos[:, 4:5], cache=cache,
+            cache_index=jnp.int32(4),
+        )
+        np.testing.assert_allclose(
+            np.asarray(out_d[:, 0]), np.asarray(full[:, 4]), atol=1e-5
+        )
+
+
+class TestRope:
+    def test_rotation_preserves_norm(self):
+        cos, sin = L.rope_tables(jnp.arange(16), 8, 10_000.0)
+        x = jax.random.normal(jax.random.key(0), (1, 16, 2, 8))
+        y = L.apply_rope(x, cos[None, :, None, :], sin[None, :, None, :])
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(x), axis=-1),
+            np.linalg.norm(np.asarray(y), axis=-1),
+            rtol=1e-5,
+        )
+
+    def test_relative_position_property(self):
+        """q·k after RoPE depends only on relative distance."""
+        cfg = cfg_base(num_heads=1, num_kv_heads=1, head_dim=8)
+        q = jax.random.normal(jax.random.key(1), (8,))
+        k = jax.random.normal(jax.random.key(2), (8,))
+
+        def dot_at(pq, pk):
+            cq, sq = L.rope_tables(jnp.asarray([pq]), 8, 10_000.0)
+            ck, sk = L.rope_tables(jnp.asarray([pk]), 8, 10_000.0)
+            qr = L.apply_rope(q[None], cq, sq)[0]
+            kr = L.apply_rope(k[None], ck, sk)[0]
+            return float(qr @ kr)
+
+        assert dot_at(3, 1) == pytest.approx(dot_at(10, 8), rel=1e-4)
+        assert dot_at(3, 1) != pytest.approx(dot_at(3, 2), rel=1e-3)
+
+    def test_position_zero_is_identity(self):
+        cos, sin = L.rope_tables(jnp.zeros((1,), jnp.int32), 8, 10_000.0)
+        x = jax.random.normal(jax.random.key(0), (1, 2, 8))
+        y = L.apply_rope(x, cos[:, None, :], sin[:, None, :])
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-6)
+
+
+class TestNorms:
+    def test_rmsnorm_unit_rms(self):
+        cfg = cfg_base(norm="rmsnorm")
+        p = {"scale": jnp.ones((32,))}
+        x = jax.random.normal(jax.random.key(0), (4, 10, 32)) * 7.0
+        y = L.norm_apply(p, cfg, x)
+        rms = np.sqrt(np.mean(np.square(np.asarray(y, np.float32)), -1))
+        np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+    def test_layernorm_zero_mean_unit_var(self):
+        cfg = cfg_base(norm="layernorm")
+        p = {"scale": jnp.ones((32,)), "bias": jnp.zeros((32,))}
+        x = jax.random.normal(jax.random.key(0), (4, 10, 32)) * 3.0 + 5.0
+        y = np.asarray(L.norm_apply(p, cfg, x), np.float32)
+        np.testing.assert_allclose(y.mean(-1), 0.0, atol=1e-3)
+        np.testing.assert_allclose(y.std(-1), 1.0, rtol=1e-2)
+
+
+def moe_cfg(e=8, k=2, cf=1.5, **kw):
+    return cfg_base(
+        family="moe",
+        moe=MoEConfig(num_experts=e, top_k=k, d_ff_expert=16,
+                      capacity_factor=cf, **kw),
+    )
+
+
+class TestMoE:
+    def test_output_shape_and_aux(self):
+        cfg = moe_cfg()
+        p = rand_params(L.moe_specs(cfg))
+        x = jax.random.normal(jax.random.key(1), (2, 12, 32))
+        y, aux = L.moe_apply(p, cfg, x)
+        assert y.shape == x.shape
+        assert float(aux) > 0.0  # aux loss strictly positive for soft router
+
+    def test_uncapped_moe_is_full_topk_mixture(self):
+        """With huge capacity, output == explicit top-k mixture of experts."""
+        cfg = moe_cfg(e=4, k=2, cf=16.0)
+        p = rand_params(L.moe_specs(cfg))
+        x = jax.random.normal(jax.random.key(3), (1, 6, 32))
+        y, _ = L.moe_apply(p, cfg, x)
+
+        xf = x.reshape(-1, 32)
+        probs = jax.nn.softmax(xf @ p["router"], -1)
+        gates, ids = jax.lax.top_k(probs, 2)
+        gates = gates / gates.sum(-1, keepdims=True)
+        outs = []
+        for t in range(xf.shape[0]):
+            acc = jnp.zeros((32,))
+            for j in range(2):
+                e = int(ids[t, j])
+                h = jax.nn.silu(xf[t] @ p["wi_gate"][e]) * (xf[t] @ p["wi_up"][e])
+                acc = acc + gates[t, j] * (h @ p["wo"][e])
+            outs.append(acc)
+        ref = jnp.stack(outs).reshape(1, 6, 32)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=2e-5)
+
+    def test_capacity_drops_tokens_but_stays_finite(self):
+        cfg = moe_cfg(e=4, k=2, cf=0.26)  # tiny capacity → heavy dropping
+        p = rand_params(L.moe_specs(cfg))
+        x = jax.random.normal(jax.random.key(4), (2, 16, 32))
+        y, aux = L.moe_apply(p, cfg, x)
+        assert bool(jnp.all(jnp.isfinite(y)))
+        # with drops, output magnitude is below the uncapped version's
+        cfg2 = moe_cfg(e=4, k=2, cf=16.0)
+        y2, _ = L.moe_apply(p, cfg2, x)
+        assert float(jnp.sum(jnp.abs(y))) < float(jnp.sum(jnp.abs(y2)))
+
+    def test_shared_expert_and_dense_residual_paths(self):
+        cfg = moe_cfg(shared_experts=1)
+        p = rand_params(L.moe_specs(cfg))
+        assert "shared" in p
+        x = jax.random.normal(jax.random.key(5), (1, 8, 32))
+        y, _ = L.moe_apply(p, cfg, x)
+        assert bool(jnp.all(jnp.isfinite(y)))
+
+        cfg2 = moe_cfg(dense_residual=True)
+        p2 = rand_params(L.moe_specs(cfg2))
+        assert "dense" in p2
+        y2, _ = L.moe_apply(p2, cfg2, x)
+        assert bool(jnp.all(jnp.isfinite(y2)))

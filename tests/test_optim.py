@@ -1,0 +1,133 @@
+"""Optimizer tests: convergence on a quadratic, state-spec consistency,
+microbatch-accumulation equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.spec import TensorSpec, abstract_tree
+from repro.optim import (
+    adafactor,
+    adamw,
+    clip_by_global_norm,
+    global_norm,
+    linear_warmup_cosine,
+    make_optimizer,
+)
+from repro.parallel.microbatch import accumulate_gradients
+
+
+def quadratic_params():
+    return {"w": jnp.array([3.0, -2.0, 1.5]), "b": jnp.array([[1.0, -1.0]])}
+
+
+def quad_loss(params):
+    return jnp.sum(params["w"] ** 2) + jnp.sum(params["b"] ** 2)
+
+
+@pytest.mark.parametrize("name", ["adamw", "adafactor"])
+def test_optimizer_converges_on_quadratic(name):
+    opt = make_optimizer(name, weight_decay=0.0)
+    params = quadratic_params()
+    state = opt.init(params)
+    for _ in range(200):
+        grads = jax.grad(quad_loss)(params)
+        params, state = opt.update(params, state, grads, jnp.asarray(0.05))
+    assert float(quad_loss(params)) < 1e-2
+    assert int(state.step) == 200
+
+
+@pytest.mark.parametrize("name", ["adamw", "adafactor"])
+def test_state_specs_match_init_shapes(name):
+    opt = make_optimizer(name)
+    pspecs = {
+        "w": TensorSpec((8, 4), jnp.float32, ("embed", "ffn")),
+        "s": TensorSpec((4,), jnp.float32, ("ffn",)),
+    }
+    params = jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), pspecs,
+        is_leaf=lambda x: isinstance(x, TensorSpec),
+    )
+    state = opt.init(params)
+    specs = abstract_tree(opt.state_specs(pspecs))
+    real = jax.tree.map(lambda x: (x.shape, x.dtype), state.inner)
+    spec_shapes = jax.tree.map(lambda x: (x.shape, x.dtype), specs)
+    assert real == spec_shapes
+
+
+def test_adafactor_state_is_factored_and_small():
+    opt = adafactor()
+    params = {"w": jnp.zeros((128, 64))}
+    state = opt.init(params)
+    n_state = sum(x.size for x in jax.tree.leaves(state.inner))
+    assert n_state == 128 + 64  # vr + vc, not 128·64
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.ones((10,)) * 10.0}
+    clipped, norm = clip_by_global_norm(grads, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(1000.0))
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+    # below the threshold → unchanged
+    small = {"a": jnp.ones((4,)) * 0.1}
+    out, _ = clip_by_global_norm(small, 1.0)
+    np.testing.assert_allclose(np.asarray(out["a"]), 0.1)
+
+
+def test_schedule_warmup_and_decay():
+    lr0 = float(linear_warmup_cosine(jnp.asarray(0), 1e-3, 100, 1000))
+    lr_mid = float(linear_warmup_cosine(jnp.asarray(100), 1e-3, 100, 1000))
+    lr_end = float(linear_warmup_cosine(jnp.asarray(1000), 1e-3, 100, 1000))
+    assert lr0 == pytest.approx(0.0, abs=1e-9)
+    assert lr_mid == pytest.approx(1e-3, rel=1e-3)
+    assert lr_end < 0.2 * 1e-3
+
+
+class TestMicrobatchAccumulation:
+    def test_equals_single_shot(self):
+        key = jax.random.key(0)
+        w = jax.random.normal(key, (8, 4))
+        batch = {"x": jax.random.normal(jax.random.key(1), (16, 8)),
+                 "y": jax.random.normal(jax.random.key(2), (16, 4))}
+
+        def grad_fn(params, mb):
+            def loss(p):
+                pred = mb["x"] @ p
+                return jnp.mean((pred - mb["y"]) ** 2)
+
+            g = jax.grad(loss)(params)
+            return g, {"loss": loss(params)}
+
+        g1, m1 = accumulate_gradients(grad_fn, w, batch, 1)
+        g4, m4 = accumulate_gradients(grad_fn, w, batch, 4)
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g4), atol=1e-6)
+        assert float(m1["loss"]) == pytest.approx(float(m4["loss"]), rel=1e-6)
+
+    def test_rejects_indivisible_batch(self):
+        def grad_fn(p, mb):
+            return p, {"loss": jnp.zeros(())}
+
+        with pytest.raises(ValueError):
+            accumulate_gradients(
+                grad_fn, jnp.zeros(()), {"x": jnp.zeros((10, 2))}, 3
+            )
+
+    def test_bf16_accumulator_close_to_f32(self):
+        w = jax.random.normal(jax.random.key(0), (8, 4))
+        batch = {"x": jax.random.normal(jax.random.key(1), (16, 8)),
+                 "y": jax.random.normal(jax.random.key(2), (16, 4))}
+
+        def grad_fn(params, mb):
+            def loss(p):
+                return jnp.mean((mb["x"] @ p - mb["y"]) ** 2)
+
+            return jax.grad(loss)(params), {"loss": loss(params)}
+
+        g32, _ = accumulate_gradients(grad_fn, w, batch, 4)
+        gbf, _ = accumulate_gradients(
+            grad_fn, w, batch, 4, accum_dtype=jnp.bfloat16
+        )
+        np.testing.assert_allclose(
+            np.asarray(g32), np.asarray(gbf, np.float32), atol=0.05
+        )

@@ -1,0 +1,74 @@
+"""GPipe pipeline over the pod axis: forward parity with the sequential
+stack and gradient flow through the ppermute schedule (subprocess, 8 dev)."""
+
+
+class TestPipeline:
+    def test_forward_matches_sequential_and_grads_flow(self, devices_runner):
+        out = devices_runner(
+            """
+            import jax, jax.numpy as jnp, numpy as np
+            from repro.parallel.pipeline import pipeline_apply
+
+            mesh = jax.make_mesh((2, 4), ("pod", "data"))
+            L, M, B, D = 4, 3, 2, 8  # 4 layers → 2 stages of 2
+            key = jax.random.key(0)
+            w = jax.random.normal(key, (L, D, D)) * 0.3
+            xs = jax.random.normal(jax.random.key(1), (M, B, D))
+
+            def stage_fn(w_local, h):
+                def body(h, wi):
+                    return jnp.tanh(h @ wi), None
+                h, _ = jax.lax.scan(body, h, w_local)
+                return h
+
+            # sequential reference: all layers in order
+            def reference(w, xs):
+                def full(h):
+                    def body(h, wi):
+                        return jnp.tanh(h @ wi), None
+                    h, _ = jax.lax.scan(body, h, w)
+                    return h
+                return jax.vmap(full)(xs)
+
+            out_pipe = pipeline_apply(stage_fn, w, xs, mesh=mesh)
+            out_ref = reference(w, xs)
+            err = float(jnp.max(jnp.abs(out_pipe - out_ref)))
+            assert err < 1e-5, err
+
+            # gradients through the pipeline match the sequential grads
+            def loss_pipe(w):
+                return jnp.sum(pipeline_apply(stage_fn, w, xs, mesh=mesh) ** 2)
+
+            def loss_ref(w):
+                return jnp.sum(reference(w, xs) ** 2)
+
+            gp = jax.grad(loss_pipe)(w)
+            gr = jax.grad(loss_ref)(w)
+            gerr = float(jnp.max(jnp.abs(gp - gr)))
+            assert gerr < 1e-4, gerr
+            print("PIPELINE OK", err, gerr)
+            """
+        )
+        assert "PIPELINE OK" in out
+
+    def test_single_stage_degenerates_to_plain_scan(self, devices_runner):
+        out = devices_runner(
+            """
+            import jax, jax.numpy as jnp
+            from repro.parallel.pipeline import pipeline_apply
+            mesh = jax.make_mesh((1, 8), ("pod", "data"))
+            w = jax.random.normal(jax.random.key(0), (2, 4, 4)) * 0.3
+            xs = jax.random.normal(jax.random.key(1), (2, 3, 4))
+
+            def stage_fn(wl, h):
+                def body(h, wi):
+                    return jnp.tanh(h @ wi), None
+                return jax.lax.scan(body, h, wl)[0]
+
+            out = pipeline_apply(stage_fn, w, xs, mesh=mesh)
+            ref = jax.vmap(lambda x: stage_fn(w, x))(xs)
+            assert float(jnp.max(jnp.abs(out - ref))) < 1e-5
+            print("SINGLE STAGE OK")
+            """
+        )
+        assert "SINGLE STAGE OK" in out

@@ -1,0 +1,70 @@
+"""Profiling-run driver (§III-B): calibration corridor, cancel-and-restart
+accounting, sample schedule — unit + property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.profiler import profile_job, schedule_sample_sizes
+
+
+class TestSampleSchedule:
+    def test_five_equally_spaced(self):
+        sizes = schedule_sample_sizes(100.0, 5)
+        assert sizes == [20.0, 40.0, 60.0, 80.0, 100.0]
+        steps = np.diff(sizes)
+        assert np.allclose(steps, steps[0])
+
+    def test_rejects_single_sample(self):
+        with pytest.raises(ValueError):
+            schedule_sample_sizes(100.0, 1)
+
+
+def linear_job(rate_s_per_unit, mem_slope, noise=0.0, seed=0):
+    rng = np.random.default_rng(seed)
+
+    def run(size):
+        z = 1.0 + noise * rng.standard_normal()
+        return size * rate_s_per_unit, mem_slope * size * z
+
+    return run
+
+
+class TestCalibration:
+    @given(rate=st.floats(1e-4, 50.0))
+    @settings(max_examples=40, deadline=None)
+    def test_final_sample_lands_in_corridor(self, rate):
+        """Whatever the job's speed, calibration must land the largest
+        sample's runtime inside [30 s, 300 s] (or hit the full dataset)."""
+        run = linear_job(rate, 2.0)
+        full = 10_000.0
+        prof = profile_job(run, full)
+        final_runtime = prof.sizes[-1] * rate
+        assert final_runtime <= 300.0 + 1e-6
+        assert final_runtime >= 30.0 - 1e-6 or prof.sizes[-1] >= full * 0.999
+
+    def test_too_slow_job_cancels_and_shrinks(self):
+        """1 % sample takes hours → must cancel at the 300 s cap and retry
+        smaller, charging only the cap to the budget."""
+        rate = 100.0  # 1% of 10k units = 100 u → 10 000 s
+        prof = profile_job(linear_job(rate, 2.0), 10_000.0)
+        assert prof.calibration_runs > 1
+        assert prof.sizes[-1] * rate <= 300.0 + 1e-6
+        # budget sane: no single charge above the cap per run
+        assert prof.total_time_s <= 300.0 * (prof.calibration_runs + 5)
+
+    def test_fast_job_grows_sample(self):
+        rate = 1e-3  # 1% sample runs in 0.1 s → grow
+        prof = profile_job(linear_job(rate, 2.0), 100_000.0)
+        assert prof.sizes[-1] > 0.01 * 100_000.0
+
+    def test_model_fit_from_profile(self):
+        prof = profile_job(linear_job(0.5, 3.0), 10_000.0)
+        assert prof.model.category.value == "linear"
+        assert prof.model.slope == pytest.approx(3.0, rel=1e-6)
+
+    @given(slope=st.floats(0.5, 8.0), noise=st.floats(0.0, 0.002))
+    @settings(max_examples=25, deadline=None)
+    def test_low_noise_always_linear(self, slope, noise):
+        prof = profile_job(linear_job(0.5, slope, noise=noise), 5_000.0)
+        assert prof.model.category.value == "linear"

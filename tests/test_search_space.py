@@ -1,0 +1,96 @@
+"""Search-space split invariants (paper §III-D) — unit + hypothesis."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.memory_model import MemoryCategory, MemoryModel, fit_memory_model
+from repro.core.search_space import Configuration, SearchSpace, split_search_space
+
+
+def make_space(mems):
+    return SearchSpace(
+        [
+            Configuration(
+                name=f"c{i}", features=(float(i), float(m)), total_memory=float(m),
+                num_nodes=1,
+            )
+            for i, m in enumerate(mems)
+        ]
+    )
+
+
+def model_with(category, slope=1.0, intercept=0.0, readings=(1.0, 2.0)):
+    return MemoryModel(
+        category=category, slope=slope, intercept=intercept, r2=1.0,
+        sizes=(1.0, 2.0), readings=readings,
+    )
+
+
+class TestSplit:
+    def test_unclear_means_no_split(self):
+        space = make_space([10, 20, 30])
+        prio, rest = split_search_space(
+            space, model_with(MemoryCategory.UNCLEAR), 100.0
+        )
+        assert prio == [0, 1, 2] and rest == []
+
+    def test_flat_picks_lowest_memory(self):
+        space = make_space([50, 10, 40, 20, 30, 60, 70])
+        prio, rest = split_search_space(
+            space, model_with(MemoryCategory.FLAT), 100.0, flat_fraction=2 / 7
+        )
+        assert prio == [1, 3]  # the two lowest-memory configs
+        assert set(prio) | set(rest) == set(range(7))
+
+    def test_linear_prioritizes_sufficient_memory(self):
+        space = make_space([10, 50, 100, 200])
+        prio, rest = split_search_space(
+            space, model_with(MemoryCategory.LINEAR, slope=1.0), 90.0, leeway=0.0
+        )
+        assert prio == [2, 3]
+
+    def test_linear_requirement_above_all_goes_to_extremes(self):
+        space = make_space(list(range(10, 110, 10)))  # 10..100
+        prio, rest = split_search_space(
+            space, model_with(MemoryCategory.LINEAR, slope=10.0), 1000.0,
+            leeway=0.0, extreme_fraction=0.2,
+        )
+        # both the lowest and the highest memory configs are prioritized
+        assert 0 in prio and 1 in prio and 8 in prio and 9 in prio
+        assert len(prio) == 4
+
+    def test_linear_requirement_met_by_all_degrades_to_baseline(self):
+        space = make_space([100, 200, 300])
+        prio, rest = split_search_space(
+            space, model_with(MemoryCategory.LINEAR, slope=0.1), 10.0, leeway=0.0
+        )
+        assert prio == [0, 1, 2] and rest == []
+
+
+class TestSplitProperties:
+    @given(
+        mems=st.lists(st.floats(1.0, 1e4), min_size=2, max_size=69),
+        input_size=st.floats(1.0, 1e4),
+        slope=st.floats(0.01, 10.0),
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_partition_is_exact(self, mems, input_size, slope):
+        space = make_space(mems)
+        for cat in MemoryCategory:
+            prio, rest = split_search_space(
+                space, model_with(cat, slope=slope), input_size
+            )
+            assert sorted(prio + rest) == list(range(len(mems)))
+            assert not (set(prio) & set(rest))
+            assert len(prio) >= 1
+
+    @given(mems=st.lists(st.floats(1.0, 1e4), min_size=3, max_size=40))
+    @settings(max_examples=40, deadline=None)
+    def test_flat_group_is_memory_minimal(self, mems):
+        space = make_space(mems)
+        prio, rest = split_search_space(
+            space, model_with(MemoryCategory.FLAT), 1.0, flat_fraction=0.15
+        )
+        if rest:
+            assert max(mems[i] for i in prio) <= min(mems[j] for j in rest) + 1e-9

@@ -1,0 +1,112 @@
+"""End-to-end system tests: the full Ruya pipeline against the emulated
+Scout evaluation — the paper's headline behavior, in miniature.
+
+The full 200-repetition Table II reproduction lives in
+``benchmarks/table2_iterations.py``; here a reduced version asserts the
+paper's three qualitative claims:
+
+  1. Ruya is never (meaningfully) worse than CherryPick per job;
+  2. for flat/linear jobs Ruya finds the optimum in fewer iterations;
+  3. for unclear jobs Ruya degrades EXACTLY to the baseline (same trace).
+"""
+
+import numpy as np
+import pytest
+
+from repro.cluster import ClusterSimulator
+from repro.core import BOSettings, run_cherrypick, run_ruya
+from repro.core.memory_model import MemoryCategory
+
+GiB = 1024**3
+REPS = 20
+
+
+def iterations(sim, seeds=range(REPS), threshold=1.0):
+    ruya, cp = [], []
+    prof = None
+    for seed in seeds:
+        rep = run_ruya(
+            profile_run=sim.profile_run_fn(),
+            full_input_size=sim.job.input_gb * GiB,
+            space=sim.space,
+            cost_fn=sim.cost_fn(),
+            rng=np.random.default_rng(seed),
+            per_node_overhead=0.5 * GiB,
+            to_exhaustion=True,
+            profile_result=prof,
+        )
+        prof = rep.profile  # profile once, reuse (paper §IV-D)
+        tr = run_cherrypick(
+            space=sim.space, cost_fn=sim.cost_fn(),
+            rng=np.random.default_rng(seed), to_exhaustion=True,
+        )
+        ruya.append(rep.trace.iterations_until(threshold))
+        cp.append(tr.iterations_until(threshold))
+    return np.mean(ruya), np.mean(cp), rep
+
+
+class TestRuyaVsCherryPick:
+    def test_flat_job_large_speedup(self):
+        sim = ClusterSimulator.for_job("terasort/hadoop/bigdata")
+        r, c, rep = iterations(sim)
+        assert rep.memory_model.category is MemoryCategory.FLAT
+        assert r < 0.6 * c  # paper Table II: flat jobs gain the most
+
+    def test_linear_job_speedup(self):
+        sim = ClusterSimulator.for_job("kmeans/spark/huge")
+        r, c, rep = iterations(sim)
+        assert rep.memory_model.category is MemoryCategory.LINEAR
+        assert r < 0.8 * c
+
+    def test_unclear_job_identical_to_baseline(self):
+        sim = ClusterSimulator.for_job("logregr/spark/huge")
+        rep = run_ruya(
+            profile_run=sim.profile_run_fn(),
+            full_input_size=sim.job.input_gb * GiB,
+            space=sim.space, cost_fn=sim.cost_fn(),
+            rng=np.random.default_rng(3), to_exhaustion=True,
+        )
+        assert rep.memory_model.category is MemoryCategory.UNCLEAR
+        tr = run_cherrypick(
+            space=sim.space, cost_fn=sim.cost_fn(),
+            rng=np.random.default_rng(3), to_exhaustion=True,
+        )
+        assert rep.trace.tried == tr.tried  # exact fallback
+
+    def test_never_substantially_worse(self):
+        """Paper §IV-E: 'about as good or better … for each of the 16 jobs'."""
+        for key in ["naivebayes/spark/huge", "join/spark/bigdata",
+                    "pagerank/spark/huge", "linregr/spark/bigdata"]:
+            sim = ClusterSimulator.for_job(key)
+            r, c, _ = iterations(sim, seeds=range(10))
+            assert r <= c * 1.25, (key, r, c)
+
+    def test_requirement_above_all_configs_extremes_path(self):
+        """naivebayes/bigdata: 754 GB requirement > any config (max 732)."""
+        sim = ClusterSimulator.for_job("naivebayes/spark/bigdata")
+        rep = run_ruya(
+            profile_run=sim.profile_run_fn(),
+            full_input_size=sim.job.input_gb * GiB,
+            space=sim.space, cost_fn=sim.cost_fn(),
+            rng=np.random.default_rng(0), per_node_overhead=0.5 * GiB,
+            to_exhaustion=True,
+        )
+        est = rep.memory_model.estimate(sim.job.input_gb * GiB) / GiB
+        assert est > 732.0  # exceeds every configuration
+        # priority group = extremes: contains both min- and max-memory configs
+        mems = sim.space.memories()
+        assert int(np.argmin(mems)) in rep.priority
+        assert int(np.argmax(mems)) in rep.priority
+
+
+class TestStoppingEconomics:
+    def test_stop_fires_before_exhaustion_on_easy_surface(self):
+        sim = ClusterSimulator.for_job("join/spark/huge")
+        rep = run_ruya(
+            profile_run=sim.profile_run_fn(),
+            full_input_size=sim.job.input_gb * GiB,
+            space=sim.space, cost_fn=sim.cost_fn(),
+            rng=np.random.default_rng(1),
+            settings=BOSettings(min_observations=6),
+        )
+        assert len(rep.trace.tried) < len(sim.space)
