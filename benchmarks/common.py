@@ -8,7 +8,9 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.cluster import JOBS, ClusterSimulator
-from repro.core import BOSettings, profile_job, run_cherrypick, run_ruya
+from repro.core import BOSettings, profile_job
+from repro.fleet import replay_seeds, tune_fleet
+from repro.fleet.driver import FleetJob
 
 GiB = 1024**3
 ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts")
@@ -61,6 +63,11 @@ def search_traces(
     Returns (ruya_traces, cherrypick_traces, profile_result).  The profile
     is computed once and reused — the paper's §IV-D economics.  Memoized so
     Table II / Fig. 4 / Fig. 5 share one sweep.
+
+    The repetitions run as a seed-fleet through the batched engine (one
+    jitted call per searcher instead of ``reps`` Python-driven searches);
+    traces are identical to the sequential engine's, so every downstream
+    number is unchanged.
     """
     memo_key = (key, reps, max_iters)
     if memo_key in _TRACE_MEMO:
@@ -68,28 +75,31 @@ def search_traces(
     sim = ClusterSimulator.for_job(key)
     prof = profile_once(sim)
     settings = BOSettings(max_iters=max_iters)
-    ruya_traces, cp_traces = [], []
-    for seed in range(reps):
-        rep = run_ruya(
-            profile_run=sim.profile_run_fn(),
-            full_input_size=sim.job.input_gb * GiB,
-            space=sim.space,
-            cost_fn=sim.cost_fn(),
-            rng=np.random.default_rng(seed),
-            per_node_overhead=0.5 * GiB,
-            to_exhaustion=True,
-            profile_result=prof,
-            settings=settings,
+    job = FleetJob(
+        name=key,
+        space=sim.space,
+        cost_table=sim.normalized,
+        full_input_size=sim.job.input_gb * GiB,
+        profile_result=prof,
+        per_node_overhead=0.5 * GiB,
+    )
+    jobs, rngs = replay_seeds(job, range(reps))
+    ruya_traces = [
+        r.trace
+        for r in tune_fleet(
+            jobs, rngs, settings=settings, to_exhaustion=True
         )
-        tr = run_cherrypick(
-            space=sim.space,
-            cost_fn=sim.cost_fn(),
-            rng=np.random.default_rng(seed),
-            to_exhaustion=True,
+    ]
+    cp_traces = [
+        r.trace
+        for r in tune_fleet(
+            jobs,
+            [np.random.default_rng(s) for s in range(reps)],
+            mode="cherrypick",
             settings=settings,
+            to_exhaustion=True,
         )
-        ruya_traces.append(rep.trace)
-        cp_traces.append(tr)
+    ]
     _TRACE_MEMO[memo_key] = (ruya_traces, cp_traces, prof)
     return _TRACE_MEMO[memo_key]
 

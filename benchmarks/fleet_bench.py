@@ -1,0 +1,209 @@
+"""Fleet-scale search benchmark: batched engine vs sequential loop.
+
+Two 64-job fleet workloads, both replayed through both engines:
+
+  A. **Paper replay** — the 16 evaluation jobs × 4 seeds, full two-phase
+     Ruya search over the 69-config space, to exhaustion (the Table II
+     protocol as a fleet).
+  B. **Priority-only service fleet** — 64 runs of the recurring flat-memory
+     jobs (terasort, join, Hadoop pagerank) tuned *within their
+     memory-derived priority group only* (10 configs each).  This is the
+     paper's own observation (the optimum lands in the priority group for
+     every categorized job) run the way Blink-style systems run tuning:
+     small spaces, cheap trials, as a routine re-tuning service.
+
+Engines:
+
+  * sequential — the per-job engine (`repro.core.bayesopt`), one
+    Python-driven jitted BO step per trial: dispatch + host sync per step;
+  * batched — `repro.fleet` advances all jobs in device-resident lockstep
+    chunks, one jitted call per *fleet* iteration.
+
+Both engines produce identical traces (asserted here and exhaustively in
+`tests/test_fleet.py`), so the comparison is pure execution efficiency.
+Profiling runs once per distinct job up front and is shared; jit is warmed
+before timing.
+
+On a small-core CPU host the full 69-config workload (A) is bound by the
+18-point hyperparameter-grid Cholesky sweep.  Both engines run the same
+compiled sweep per trial — the sequential engine runs it at batch extent 2
+with a duplicated row (the price of bit-identical traces; see `fast_bo`),
+so roughly half its measured advantage there is that probe tax and half is
+dispatch/loop overhead.  The service workload (B) is dispatch-bound, where
+batching pays off in full (≥5×).  On accelerator-backed or many-core
+hosts, A moves toward B's regime.
+
+    PYTHONPATH=src python -m benchmarks.fleet_bench [--jobs 64] [--no-check]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import List, Sequence
+
+import numpy as np
+
+from benchmarks.common import JOB_ORDER, artifact_path
+from repro.core.bayesopt import BOSettings, cherrypick_search
+from repro.core.profiler import profile_job
+from repro.core.search_space import SearchSpace, split_search_space
+from repro.fleet import batched_search, cluster_fleet, tune_fleet
+
+
+def build_fleet(n_jobs: int):
+    keys = [JOB_ORDER[i % len(JOB_ORDER)] for i in range(n_jobs)]
+    jobs = cluster_fleet(keys)
+    # Profile once per distinct job up front: the bench times the *search*
+    # engines, and both must see identical splits.
+    profiles = {}
+    for job in jobs:
+        if job.name not in profiles:
+            profiles[job.name] = profile_job(job.profile_run, job.full_input_size)
+        job.profile_result = profiles[job.name]
+    return jobs
+
+
+def _rngs(n: int) -> List[np.random.Generator]:
+    return [np.random.default_rng(1000 + i) for i in range(n)]
+
+
+def bench_paper_replay(jobs, check: bool, settings: BOSettings) -> dict:
+    """Workload A: full two-phase Ruya search over the 69-config space."""
+    n_jobs = len(jobs)
+    warm = jobs[: min(2, n_jobs)]
+    tune_fleet(warm, _rngs(len(warm)), settings=settings, to_exhaustion=True,
+               engine="sequential")
+    tune_fleet(jobs, _rngs(n_jobs), settings=settings, to_exhaustion=True)
+
+    t0 = time.perf_counter()
+    seq = tune_fleet(jobs, _rngs(n_jobs), settings=settings,
+                     to_exhaustion=True, engine="sequential")
+    t_seq = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    bat = tune_fleet(jobs, _rngs(n_jobs), settings=settings,
+                     to_exhaustion=True)
+    t_bat = time.perf_counter() - t0
+
+    if check:
+        for r_s, r_b in zip(seq, bat):
+            assert r_s.trace.tried == r_b.trace.tried, "engines diverged"
+            assert r_s.trace.stop_iteration == r_b.trace.stop_iteration
+            assert r_s.trace.phase_boundary == r_b.trace.phase_boundary
+    trials = sum(len(r.trace.tried) for r in bat)
+    return {"sequential_s": t_seq, "batched_s": t_bat,
+            "speedup": t_seq / t_bat, "total_trials": trials}
+
+
+def bench_priority_service(jobs, check: bool, settings: BOSettings,
+                           n_jobs: int) -> dict:
+    """Workload B: recurring jobs re-tuned within their priority group only.
+
+    The service scenario: the recurring flat-memory jobs (terasort, join,
+    Hadoop pagerank — the ETL-style workloads a cluster re-tunes routinely)
+    searched inside their ~10-config priority groups, ``n_jobs`` runs total.
+    Unclear jobs have no priority group and linear jobs' groups vary per
+    job; the flat fleet is the uniform, dispatch-bound service case.
+    """
+    from repro.core.memory_model import MemoryCategory
+
+    flat = [
+        job for job in jobs
+        if job.profile_result.model.category is MemoryCategory.FLAT
+    ]
+    if not flat:
+        # Small --jobs prefixes of JOB_ORDER may hold no flat job; pull the
+        # recurring flat specs from the catalog directly.
+        flat = build_fleet(len(JOB_ORDER))
+        flat = [
+            job for job in flat
+            if job.profile_result.model.category is MemoryCategory.FLAT
+        ]
+    spaces: List[SearchSpace] = []
+    tables: List[np.ndarray] = []
+    for i in range(n_jobs):
+        job = flat[i % len(flat)]
+        prio, _ = split_search_space(
+            job.space, job.profile_result.model, job.full_input_size,
+            per_node_overhead=job.per_node_overhead,
+        )
+        spaces.append(SearchSpace([job.space.configs[k] for k in prio]))
+        tables.append(np.asarray(job.cost_table)[np.asarray(prio, np.int64)])
+
+    cost_fns = [lambda i, t=t: float(t[i]) for t in tables]
+    # Warm both paths, covering every distinct space shape the sequential
+    # engine will compile for.
+    seen = set()
+    for space, fn in zip(spaces, cost_fns):
+        if space.encoded().shape not in seen:
+            seen.add(space.encoded().shape)
+            cherrypick_search(space, fn, np.random.default_rng(0),
+                              settings=settings, to_exhaustion=True)
+    batched_search(spaces, tables, _rngs(n_jobs), settings=settings,
+                   to_exhaustion=True)
+
+    t0 = time.perf_counter()
+    seq = [
+        cherrypick_search(space, fn, rng, settings=settings,
+                          to_exhaustion=True)
+        for space, fn, rng in zip(spaces, cost_fns, _rngs(n_jobs))
+    ]
+    t_seq = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    bat = batched_search(spaces, tables, _rngs(n_jobs), settings=settings,
+                         to_exhaustion=True)
+    t_bat = time.perf_counter() - t0
+
+    if check:
+        for j, ref in enumerate(seq):
+            tr = bat.job_trace(j)
+            assert tr.tried == ref.tried, "engines diverged"
+            assert tr.stop_iteration == ref.stop_iteration
+    trials = sum(len(t.tried) for t in seq)
+    return {"sequential_s": t_seq, "batched_s": t_bat,
+            "speedup": t_seq / t_bat, "total_trials": trials,
+            "n_jobs": n_jobs,
+            "mean_space": float(np.mean([len(s) for s in spaces]))}
+
+
+def _report(tag: str, r: dict) -> None:
+    print(f"  {tag}")
+    print(f"    sequential engine : {r['sequential_s']:7.2f} s  "
+          f"({1e3 * r['sequential_s'] / r['total_trials']:.2f} ms/trial)")
+    print(f"    batched engine    : {r['batched_s']:7.2f} s  "
+          f"({1e3 * r['batched_s'] / r['total_trials']:.2f} ms/trial)")
+    print(f"    speedup           : {r['speedup']:7.2f}x")
+
+
+def run(n_jobs: int = 64, check: bool = True,
+        settings: BOSettings = BOSettings()) -> dict:
+    jobs = build_fleet(n_jobs)
+    print(f"\n== Fleet bench: {n_jobs} jobs, traces "
+          f"{'verified identical' if check else 'unchecked'} ==")
+
+    b = bench_priority_service(jobs, check, settings, n_jobs)
+    _report(f"B. priority-only service fleet ({b['n_jobs']} recurring jobs,"
+            f" ~{b['mean_space']:.0f}-config spaces, {b['total_trials']} trials)", b)
+    a = bench_paper_replay(jobs, check, settings)
+    _report(f"A. paper replay, two-phase over 69 configs "
+            f"({a['total_trials']} trials)", a)
+    print("    (A is bound by the 18-point GP-grid Cholesky sweep; the"
+          " sequential\n     engine also pays a 2x extent-2 probe tax — the"
+          " price of bit-identical\n     traces.  B is dispatch-bound, where"
+          " batching pays off in full.)")
+
+    out = {"n_jobs": n_jobs, "traces_identical": bool(check),
+           "paper_replay": a, "priority_service": b}
+    with open(artifact_path("fleet", f"fleet_bench_{n_jobs}.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jobs", type=int, default=64)
+    ap.add_argument("--no-check", action="store_true",
+                    help="skip the trace-equivalence assertion")
+    args = ap.parse_args()
+    run(args.jobs, check=not args.no_check)

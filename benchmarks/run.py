@@ -18,7 +18,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None,
                     help="subset: table1 table2 table3 fig1 fig4 fig5 "
-                         "roofline kernels tuner")
+                         "roofline kernels fleet tuner")
     ap.add_argument("--skip-tuner", action="store_true",
                     help="skip the compile-heavy tuner benchmark")
     args = ap.parse_args()
@@ -27,6 +27,7 @@ def main() -> None:
         fig1_memory_cliff,
         fig4_convergence,
         fig5_cumulative_cost,
+        fleet_bench,
         kernel_bench,
         roofline,
         table1_memory_categorization,
@@ -43,6 +44,7 @@ def main() -> None:
         "fig5": fig5_cumulative_cost.run,
         "roofline": roofline.run,
         "kernels": kernel_bench.run,
+        "fleet": fleet_bench.run,
     }
     if not args.skip_tuner:
         from benchmarks import tuner_vs_baseline

@@ -49,7 +49,7 @@ def _run_inprocess(arch: str = "granite-8b", cell: str = "train_4k",
         TpuTunerEnv,
         predict_peaks,
     )
-    from repro.core.bayesopt import BOSettings, cherrypick_search, ruya_search
+    from repro.fleet import batched_search
 
     cache = artifact_path("autotune", f"{arch}__{cell}__trials.json")
     env = TpuTunerEnv(arch, cell, cache_path=cache)
@@ -82,17 +82,22 @@ def _run_inprocess(arch: str = "granite-8b", cell: str = "train_4k",
     rest = sorted(set(range(len(space))) - set(prio))
     print(f"  priority group: {len(prio)}/{len(space)} configs predicted to fit")
 
-    table_cost = lambda i: float(costs[i])
-    ruya_iters, cp_iters = [], []
-    for seed in range(seeds):
-        tr_r = ruya_search(sspace, table_cost, np.random.default_rng(seed),
-                           prio, rest, to_exhaustion=True)
-        tr_c = cherrypick_search(sspace, table_cost,
-                                 np.random.default_rng(seed),
-                                 to_exhaustion=True)
-        thresh = best_cost * 1.001
-        ruya_iters.append(tr_r.iterations_until(thresh))
-        cp_iters.append(tr_c.iterations_until(thresh))
+    # Both searchers across all seeds run as seed-fleets on the batched
+    # engine — trace-identical to sequential ruya_search/cherrypick_search.
+    thresh = best_cost * 1.001
+    bt_r = batched_search(
+        sspace, [costs] * seeds,
+        [np.random.default_rng(seed) for seed in range(seeds)],
+        priority=[list(prio)] * seeds, remaining=[list(rest)] * seeds,
+        to_exhaustion=True,
+    )
+    bt_c = batched_search(
+        sspace, [costs] * seeds,
+        [np.random.default_rng(seed) for seed in range(seeds)],
+        to_exhaustion=True,
+    )
+    ruya_iters = [bt_r.job_trace(s).iterations_until(thresh) for s in range(seeds)]
+    cp_iters = [bt_c.job_trace(s).iterations_until(thresh) for s in range(seeds)]
 
     r_m, c_m = float(np.mean(ruya_iters)), float(np.mean(cp_iters))
     quot = r_m / c_m

@@ -23,32 +23,26 @@ import numpy as np
 
 
 def demo_cluster(seeds: int = 15) -> None:
-    from repro.cluster import ClusterSimulator
-    from repro.core import run_cherrypick, run_ruya
+    """Each job's ``seeds`` repetitions run as ONE batched fleet call per
+    searcher (`repro.fleet`) — trace-identical to looping the sequential
+    engine, minus thousands of per-step host round-trips."""
+    from repro.core.profiler import profile_job
+    from repro.fleet import cluster_fleet, replay_seeds, tune_fleet
 
-    GiB = 1024**3
     print("=== A. Ruya on the paper's own domain (3 job classes) ===")
     for key in ["kmeans/spark/huge", "terasort/hadoop/bigdata",
                 "logregr/spark/huge"]:
-        sim = ClusterSimulator.for_job(key)
-        ruya_iters, cp_iters = [], []
-        prof = None
-        for seed in range(seeds):
-            rep = run_ruya(
-                profile_run=sim.profile_run_fn(),
-                full_input_size=sim.job.input_gb * GiB,
-                space=sim.space, cost_fn=sim.cost_fn(),
-                rng=np.random.default_rng(seed),
-                per_node_overhead=0.5 * GiB, to_exhaustion=True,
-                profile_result=prof,
-            )
-            prof = rep.profile
-            cp = run_cherrypick(space=sim.space, cost_fn=sim.cost_fn(),
-                                rng=np.random.default_rng(seed),
-                                to_exhaustion=True)
-            ruya_iters.append(rep.trace.iterations_until(1.0))
-            cp_iters.append(cp.iterations_until(1.0))
-        print(f"  {key:28s} [{prof.model.category.value:7s}] "
+        job = cluster_fleet([key])[0]
+        # Profile once; the paper only re-profiles when the context changes.
+        job.profile_result = profile_job(job.profile_run, job.full_input_size)
+        jobs, rngs = replay_seeds(job, range(seeds))
+        ruya = tune_fleet(jobs, rngs, to_exhaustion=True)
+        cp = tune_fleet(jobs, [np.random.default_rng(s) for s in range(seeds)],
+                        mode="cherrypick", to_exhaustion=True)
+        ruya_iters = [r.trace.iterations_until(1.0) for r in ruya]
+        cp_iters = [c.trace.iterations_until(1.0) for c in cp]
+        category = job.profile_result.model.category.value
+        print(f"  {key:28s} [{category:7s}] "
               f"iterations-to-optimal: Ruya {np.mean(ruya_iters):5.1f} "
               f"vs CherryPick {np.mean(cp_iters):5.1f}")
 

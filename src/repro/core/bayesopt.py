@@ -122,10 +122,13 @@ def _bo_loop(
                 encoded_all, obs_mask, y, cand_mask, xi=settings.xi
             )
             pick, max_ei, best = int(pick), float(max_ei), float(best)
+            # The threshold product is rounded to float32 to match the fleet
+            # engine's on-device criterion bit-for-bit (both operands of the
+            # comparison are then exactly representable float32 values).
             if (
                 stop_iteration is None
                 and len(tried) >= settings.min_observations
-                and max_ei < settings.ei_stop_rel * best
+                and max_ei < float(np.float32(settings.ei_stop_rel) * np.float32(best))
             ):
                 stop_iteration = len(tried)
                 if not to_exhaustion:

@@ -1,4 +1,4 @@
-"""Fixed-shape, fully-jitted Bayesian-optimization step.
+"""Fixed-shape, fully-jitted Bayesian-optimization step and fleet update.
 
 The paper's evaluation repeats every search 200 times over a 69-point space,
 to exhaustion — thousands of GP fits.  To keep that cheap we jit ONE step
@@ -8,10 +8,33 @@ exact (not approximate): the padded kernel rows are identity rows, so the
 Cholesky factorization block-decouples and padded points contribute nothing
 to the posterior.
 
-The hyperparameter grid search (same grid as `gp.py`) is vmapped inside the
-step, so a single jitted call performs: standardize-y → select (lengthscale,
-noise) by masked log-marginal-likelihood → posterior at all N points →
-Expected Improvement on the candidate mask → argmax pick.
+`bo_step_core` performs: standardize-y → Matérn-5/2 kernels for the 6
+lengthscales (computed once, shared by the 3 noise levels) → select
+(lengthscale, noise) by masked log-marginal-likelihood over the 18-point
+grid (same grid as `gp.py`) → posterior at all N points for the selected
+hyperparameters only → Expected Improvement on the candidate mask → argmax.
+
+`fleet_step` wraps the core with one search iteration's bookkeeping
+(scripted init picks, two-phase candidate pools, stop/phase registers, the
+observation itself) over a state pytree that lives on device.  It is the
+single compiled program behind BOTH engines:
+
+  * the fleet engine (`repro.fleet.batched_engine`) vmaps it over a chunk of
+    jobs and applies it in a host-driven lockstep loop (state stays on
+    device; the host only counts iterations);
+  * the sequential driver's `bo_step` probes the identical function for one
+    iteration at batch extent 2.
+
+This sharing is deliberate: XLA:CPU float32 results differ between
+compilation contexts — a `lax.while_loop` body computes different last-ulp
+floats than the same ops standalone (and batch extent 1 differs from
+extent ≥ 2, which is why the probe pads to 2) — and in the late-search
+regime, where dozens of candidates carry near-zero EI, one ulp flips argmax
+picks.  Executing one program everywhere is what makes sequential and
+batched searches trace-identical (asserted by `tests/test_fleet.py`).
+A `lax.while_loop` around `fleet_step` was tried and rejected: XLA:CPU runs
+while bodies ~5-8× slower than the identical standalone computation, which
+inverted the fleet speedup.
 
 `tests/test_core_bo.py` property-checks this fast path against the readable
 reference implementation in `gp.py`/`acquisition.py`.
@@ -20,14 +43,14 @@ reference implementation in `gp.py`/`acquisition.py`.
 from __future__ import annotations
 
 from functools import partial
-from typing import Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.gp import GPParams, matern52
 
-__all__ = ["bo_step"]
+__all__ = ["FleetState", "bo_step", "bo_step_core", "fleet_step"]
 
 _JITTER = 1e-8
 _LENGTHSCALES = (0.1, 0.25, 0.5, 1.0, 2.0, 4.0)
@@ -41,8 +64,14 @@ def _masked_posterior(
     lengthscale: jax.Array,
     noise: jax.Array,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Returns (lml, mean_n, var_n) — posterior over ALL n points."""
-    n = x.shape[0]
+    """Reference form of the exact-masking construction: (lml, mean, var)
+    over ALL n points for one (lengthscale, noise).
+
+    This is the specification `tests/test_core_bo.py` checks against the
+    readable subset-GP in `gp.py`; `bo_step_core` computes the same math in
+    a grid-factored layout (kernels shared across noise levels, the full
+    posterior only for the selected hyperparameters).
+    """
     m = obs_mask.astype(x.dtype)
     params = GPParams(lengthscale=lengthscale, amplitude=jnp.asarray(1.0, x.dtype), noise=noise)
     k = matern52(x, x, params)
@@ -55,23 +84,21 @@ def _masked_posterior(
         - jnp.sum(jnp.log(jnp.diagonal(chol)) * m)
         - 0.5 * jnp.sum(m) * jnp.log(2.0 * jnp.pi)
     )
-    # Posterior at all n points: k_star has masked training rows.
-    k_star = k * m[:, None]  # (n_train_slots, n_points)
+    k_star = k * m[:, None]  # masked training rows
     mean_n = k_star.T @ alpha
     v = jax.scipy.linalg.solve_triangular(chol, k_star, lower=True)
     var_n = jnp.maximum(1.0 - jnp.sum(v * v, axis=0), 1e-12)
     return lml, mean_n, var_n
 
 
-@partial(jax.jit, static_argnames=("xi",))
-def bo_step(
+def bo_step_core(
     encoded: jax.Array,  # (n, d) standardized features of the whole space
     obs_mask: jax.Array,  # (n,) bool — configurations already tried
     y: jax.Array,  # (n,) observed costs (garbage where not observed)
     cand_mask: jax.Array,  # (n,) bool — current candidate pool
     xi: float = 0.0,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """One BO iteration.  Returns (pick_index, max_ei, best_observed_cost)."""
+    """One BO iteration, traceable.  Returns (pick_index, max_ei, best)."""
     x = encoded.astype(jnp.float32)
     m = obs_mask.astype(x.dtype)
     n_obs = jnp.maximum(jnp.sum(m), 1.0)
@@ -81,18 +108,57 @@ def bo_step(
     y_std = jnp.maximum(jnp.sqrt(y_var), 1e-8)
     y_n = jnp.where(obs_mask, (y - y_mean) / y_std, 0.0)
 
-    ls_grid, nz_grid = jnp.meshgrid(
-        jnp.asarray(_LENGTHSCALES, x.dtype), jnp.asarray(_NOISES, x.dtype), indexing="ij"
-    )
-    ls_grid, nz_grid = ls_grid.reshape(-1), nz_grid.reshape(-1)
+    # The kernel depends on the lengthscale only: 6 kernels serve all 18
+    # (lengthscale, noise) grid points.
+    ls = jnp.asarray(_LENGTHSCALES, x.dtype)
+    nz = jnp.asarray(_NOISES, x.dtype)
 
-    lmls, means, variances = jax.vmap(
-        lambda ls, nz: _masked_posterior(x, obs_mask, y_n, ls, nz)
-    )(ls_grid, nz_grid)
+    def kernel_for(lengthscale):
+        params = GPParams(
+            lengthscale=lengthscale,
+            amplitude=jnp.asarray(1.0, x.dtype),
+            noise=jnp.asarray(0.0, x.dtype),
+        )
+        return matern52(x, x, params)
+
+    ks = jax.vmap(kernel_for)(ls)  # (6, n, n)
+
+    mm = m[:, None] * m[None, :]
+    y_train = y_n * m
+    # Mask once per lengthscale (6 products), not per grid combo (18); the
+    # noise only touches the diagonal, added by an n-element scatter instead
+    # of materializing a dense diag matrix per combo.
+    ks_masked = ks * mm[None]  # (6, n, n)
+    diag_idx = jnp.arange(ks.shape[-1])
+
+    def factorize(k_masked, noise):
+        """Masked-kernel Cholesky + lml for one (lengthscale, noise)."""
+        diag = jnp.where(obs_mask, noise + _JITTER, 1.0)
+        k_eff = k_masked.at[diag_idx, diag_idx].add(diag)
+        chol = jnp.linalg.cholesky(k_eff)
+        alpha = jax.scipy.linalg.cho_solve((chol, True), y_train)
+        lml = (
+            -0.5 * y_train @ alpha
+            - jnp.sum(jnp.log(jnp.diagonal(chol)) * m)
+            - 0.5 * jnp.sum(m) * jnp.log(2.0 * jnp.pi)
+        )
+        return lml, chol, alpha
+
+    # ls-major grid order (matches jnp.meshgrid(..., indexing="ij")):
+    # combo h = (h // 3)-th lengthscale, (h % 3)-th noise.
+    ks18 = jnp.repeat(ks_masked, nz.shape[0], axis=0)  # (18, n, n)
+    nz18 = jnp.tile(nz, ls.shape[0])  # (18,)
+    lmls, chols, alphas = jax.vmap(factorize)(ks18, nz18)
     lmls = jnp.where(jnp.isfinite(lmls), lmls, -jnp.inf)
     best_h = jnp.argmax(lmls)
-    mean_n = means[best_h]
-    std_n = jnp.sqrt(variances[best_h])
+
+    # Posterior over all n points for the selected hyperparameters only.
+    # (ks, not ks_masked: prediction columns must stay unmasked.)
+    k_star = ks[best_h // nz.shape[0]] * m[:, None]  # masked training rows
+    mean_n = k_star.T @ alphas[best_h]
+    v = jax.scipy.linalg.solve_triangular(chols[best_h], k_star, lower=True)
+    var_n = jnp.maximum(1.0 - jnp.sum(v * v, axis=0), 1e-12)
+    std_n = jnp.sqrt(var_n)
 
     # De-standardize.
     mean = mean_n * y_std + y_mean
@@ -107,3 +173,146 @@ def bo_step(
     ei = jnp.where(cand_mask & ~obs_mask, ei, -jnp.inf)
     pick = jnp.argmax(ei)
     return pick, jnp.max(ei), best
+
+
+class FleetState(NamedTuple):
+    """Per-job search state, device-resident between `fleet_step` calls."""
+
+    obs: jax.Array  # (n,) bool — observation mask
+    y: jax.Array  # (n,) f32 — observed costs (0 where unobserved)
+    tried: jax.Array  # (T,) i32 — trial log, -1 padded
+    t: jax.Array  # () i32 — trials made
+    stop: jax.Array  # () i32 — stop-criterion iteration, -1 = not yet
+    pb: jax.Array  # () i32 — phase boundary, -1 = still in phase 0
+    done: jax.Array  # () bool
+    last_ei: jax.Array  # () f32 — max EI of the latest BO step
+    last_best: jax.Array  # () f32 — best observed cost at the latest step
+
+
+def fleet_step(
+    state: FleetState,
+    encoded: jax.Array,  # (n, d)
+    costs: jax.Array,  # (n,) f32 — full observation table
+    prio_mask: jax.Array,  # (n,) bool — priority pool (phase 0)
+    rem_mask: jax.Array,  # (n,) bool — remaining pool (phase 1)
+    init_picks: jax.Array,  # (I,) i32 — scripted random initialization
+    init_count: jax.Array,  # () i32
+    max_trials: jax.Array,  # () i32 — trial budget (pool size ∧ max_iters)
+    min_obs: jax.Array,  # () i32 — no stopping before this many trials
+    ei_stop_rel: jax.Array,  # () f32 — stop when max EI < rel·best
+    to_exhaustion: jax.Array,  # () bool — record the stop but keep going
+    xi: float = 0.0,
+) -> FleetState:
+    """One search iteration: candidate pools → BO step → stop/phase
+    bookkeeping → observation.  Applying it `max_trials` times executes one
+    complete two-phase search; semantics mirror
+    `repro.core.bayesopt._bo_loop` exactly.  A no-op once the job is done.
+    """
+    obs, y, tried, t, stop, pb = (
+        state.obs, state.y, state.tried, state.t, state.stop, state.pb,
+    )
+    n_init_slots = init_picks.shape[0]
+
+    budget_left = t < max_trials
+    live = ~state.done & budget_left
+    prio_left = prio_mask & ~obs
+    rem_left = rem_mask & ~obs
+    in_phase0 = jnp.any(prio_left)
+    cand = jnp.where(in_phase0, prio_left, rem_left)
+    has_cand = jnp.any(cand)
+    # Entering the remaining phase with a non-empty pool records the
+    # boundary (sequential: set at phase entry, before any phase-1 step).
+    # Gated on ~done only, NOT on the budget: when max_iters lands exactly
+    # on the phase-0/phase-1 boundary the sequential engine still records
+    # the boundary before its budget check returns.
+    pb = jnp.where(~state.done & (pb < 0) & ~in_phase0 & jnp.any(rem_left), t, pb)
+
+    is_init = t < init_count
+    bo_pick, max_ei, best = bo_step_core(encoded, obs, y, cand, xi)
+    scripted = init_picks[jnp.clip(t, 0, n_init_slots - 1)]
+    pick = jnp.where(is_init, scripted, bo_pick).astype(jnp.int32)
+
+    fire = (
+        live
+        & has_cand
+        & ~is_init
+        & (stop < 0)
+        & (t >= min_obs)
+        & (max_ei < ei_stop_rel * best)
+    )
+    stop = jnp.where(fire, t, stop)
+    halt = fire & ~to_exhaustion
+    observe = live & has_cand & ~halt
+
+    obs = jnp.where(observe, obs.at[pick].set(True), obs)
+    y = jnp.where(observe, y.at[pick].set(costs[pick]), y)
+    tried = jnp.where(observe, tried.at[jnp.minimum(t, tried.shape[0] - 1)].set(pick), tried)
+    t = t + observe.astype(jnp.int32)
+    # A job is done when its candidates ran out, its stop criterion halted
+    # it, or its trial budget is exhausted (the last also settles zero-budget
+    # dummy pads so early-stop polling can see an all-done chunk).
+    done = state.done | (live & (~has_cand | halt)) | ~budget_left
+    return FleetState(
+        obs=obs, y=y, tried=tried, t=t, stop=stop, pb=pb, done=done,
+        last_ei=jnp.where(live, max_ei, state.last_ei),
+        last_best=jnp.where(live, best, state.last_best),
+    )
+
+
+@partial(jax.jit, static_argnames=("xi",))
+def _probe_step(encoded, obs_mask, y, cand_mask, xi):
+    """One `fleet_step` application at batch extent 2 (row 1 is a discarded
+    duplicate — extent 1 compiles to different float32 numerics)."""
+    n = encoded.shape[0]
+
+    def probe(e, o, yy, c):
+        state = FleetState(
+            obs=o,
+            y=yy,
+            tried=jnp.full(1, -1, jnp.int32),
+            t=jnp.asarray(0, jnp.int32),
+            stop=jnp.asarray(-1, jnp.int32),
+            pb=jnp.asarray(-1, jnp.int32),
+            done=jnp.asarray(False),
+            last_ei=jnp.asarray(0.0, jnp.float32),
+            last_best=jnp.asarray(jnp.inf, jnp.float32),
+        )
+        out = fleet_step(
+            state,
+            e,
+            jnp.zeros(n, jnp.float32),  # observation values are irrelevant
+            c,  # candidate pool as the (only) phase-0 pool
+            jnp.zeros(n, bool),
+            jnp.zeros(1, jnp.int32),
+            jnp.asarray(0, jnp.int32),  # no scripted init
+            jnp.asarray(1, jnp.int32),  # budget for exactly one trial
+            jnp.asarray(0, jnp.int32),
+            jnp.asarray(0.0, jnp.float32),
+            jnp.asarray(True),  # never halt inside the probe
+            xi,
+        )
+        return out.tried[0], out.last_ei, out.last_best
+
+    two = lambda a: jnp.stack([a, a])
+    pick, last_ei, last_best = jax.vmap(probe)(
+        two(encoded), two(obs_mask), two(y), two(cand_mask)
+    )
+    return pick[0], last_ei[0], last_best[0]
+
+
+def bo_step(
+    encoded: jax.Array,
+    obs_mask: jax.Array,
+    y: jax.Array,
+    cand_mask: jax.Array,
+    xi: float = 0.0,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One BO iteration.  Returns (pick_index, max_ei, best_observed_cost).
+
+    Probes the shared `fleet_step` program so the sequential engine executes
+    bit-identical float ops to the batched fleet engine.
+    """
+    return _probe_step(
+        jnp.asarray(encoded), jnp.asarray(obs_mask), jnp.asarray(y),
+        jnp.asarray(cand_mask), xi,
+    )

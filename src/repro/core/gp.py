@@ -88,7 +88,10 @@ def fit_gp(x: jax.Array, y: jax.Array) -> GPPosterior:
     Features are assumed pre-standardized by the search-space encoder;
     targets are standardized internally so the amplitude grid is scale free.
     """
-    x = jnp.asarray(x, jnp.float64 if jax.config.read("jax_enable_x64") else jnp.float32)
+    # canonicalize_dtype maps float64 -> float32 when x64 is disabled, so this
+    # picks the widest float the runtime allows without poking at jax.config
+    # internals (jax.config.read is not stable across JAX versions).
+    x = jnp.asarray(x, jax.dtypes.canonicalize_dtype(jnp.float64))
     y = jnp.asarray(y, x.dtype)
     y_mean = jnp.mean(y)
     y_std = jnp.maximum(jnp.std(y), 1e-8)

@@ -45,10 +45,11 @@ class RuyaReport:
 
 def run_ruya(
     *,
-    profile_run: Callable[[float], Tuple[float, float]],
-    full_input_size: float,
+    profile_run: Optional[Callable[[float], Tuple[float, float]]] = None,
+    full_input_size: float = 0.0,
     space: SearchSpace,
-    cost_fn: Callable[[int], float],
+    cost_fn: Optional[Callable[[int], float]] = None,
+    cost_table: Optional[np.ndarray] = None,
     rng: np.random.Generator,
     per_node_overhead: float = 0.0,
     leeway: float = 0.10,
@@ -59,7 +60,35 @@ def run_ruya(
 ) -> RuyaReport:
     """The full Ruya pipeline.  ``profile_result`` can be injected to reuse a
     previous profiling phase (the paper: profiling only repeats when the
-    execution context changes)."""
+    execution context changes).
+
+    Costs come either from ``cost_fn`` (live trials, driven by the sequential
+    engine) or from ``cost_table`` (recorded/emulated workload replay, driven
+    by the batched fleet engine as a fleet of one).  Both engines are
+    trace-identical, so the choice is purely about execution style.
+    """
+    if (cost_fn is None) == (cost_table is None):
+        raise ValueError("provide exactly one of cost_fn / cost_table")
+    if cost_table is not None:
+        from repro.fleet.driver import FleetJob, tune_fleet
+
+        job = FleetJob(
+            name="job",
+            space=space,
+            cost_table=np.asarray(cost_table, np.float64),
+            full_input_size=full_input_size,
+            profile_run=profile_run,
+            profile_result=profile_result,
+            per_node_overhead=per_node_overhead,
+            leeway=leeway,
+            flat_fraction=flat_fraction,
+        )
+        return tune_fleet(
+            [job], [rng], settings=settings, to_exhaustion=to_exhaustion
+        )[0]
+
+    if profile_result is None and profile_run is None:
+        raise ValueError("provide profile_run or profile_result")
     prof = profile_result or profile_job(profile_run, full_input_size)
     prio, rest = split_search_space(
         space,
@@ -86,12 +115,29 @@ def run_ruya(
 def run_cherrypick(
     *,
     space: SearchSpace,
-    cost_fn: Callable[[int], float],
+    cost_fn: Optional[Callable[[int], float]] = None,
+    cost_table: Optional[np.ndarray] = None,
     rng: np.random.Generator,
     settings: BOSettings = BOSettings(),
     to_exhaustion: bool = False,
 ) -> SearchTrace:
-    """The baseline, for side-by-side evaluation (paper §IV-C)."""
+    """The baseline, for side-by-side evaluation (paper §IV-C).
+
+    Like `run_ruya`, accepts either a live ``cost_fn`` or a recorded
+    ``cost_table`` (the latter runs on the batched fleet engine).
+    """
+    if (cost_fn is None) == (cost_table is None):
+        raise ValueError("provide exactly one of cost_fn / cost_table")
+    if cost_table is not None:
+        from repro.fleet.driver import FleetJob, tune_fleet
+
+        job = FleetJob(
+            name="job", space=space, cost_table=np.asarray(cost_table, np.float64)
+        )
+        return tune_fleet(
+            [job], [rng], mode="cherrypick", settings=settings,
+            to_exhaustion=to_exhaustion,
+        )[0].trace
     return cherrypick_search(
         space, cost_fn, rng, settings=settings, to_exhaustion=to_exhaustion
     )

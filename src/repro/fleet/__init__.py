@@ -1,0 +1,31 @@
+"""Fleet tuning subsystem: batched multi-job Bayesian-optimized search.
+
+The paper evaluates Ruya one job at a time; related work (Flora, Blink)
+pushes toward tuning as a *fleet service* — many jobs, shared knowledge,
+negligible per-job overhead.  This package provides:
+
+  * `batched_engine.batched_search` — J independent Ruya/CherryPick searches
+    advanced in device-resident lockstep (one jitted vmapped `fleet_step`
+    per fleet iteration), trace-identical to the sequential engine in
+    `repro.core.bayesopt`.
+  * `profile_cache.ProfileCache` — Flora-style reuse of profiling runs
+    across jobs whose memory patterns match (category + fitted coefficients).
+  * `driver.tune_fleet` — the end-to-end fleet pipeline: probe/profile (with
+    cache), split each job's space, run the batched search, return one
+    `RuyaReport` per job — the same API `repro.core.tuner` exposes for J=1.
+"""
+
+from repro.fleet.batched_engine import BatchedTrace, batched_search
+from repro.fleet.driver import FleetJob, cluster_fleet, replay_seeds, tune_fleet
+from repro.fleet.profile_cache import MemorySignature, ProfileCache
+
+__all__ = [
+    "BatchedTrace",
+    "batched_search",
+    "FleetJob",
+    "cluster_fleet",
+    "replay_seeds",
+    "tune_fleet",
+    "MemorySignature",
+    "ProfileCache",
+]

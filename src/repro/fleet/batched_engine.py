@@ -1,0 +1,299 @@
+"""Fully-batched multi-job BO search: J searches in lockstep on device.
+
+The sequential engine (`repro.core.bayesopt._bo_loop`) drives one job per
+Python-loop iteration, paying a dispatch + host round-trip per BO step —
+thousands of synchronizations for a fleet.  Here the whole fleet advances in
+lockstep:
+
+  * `jax.vmap` over jobs lifts the per-job state (observation mask, targets,
+    trial log, phase/stop registers — `fast_bo.FleetState`) into batched
+    arrays that stay resident on device;
+  * one jitted call per iteration applies `fast_bo.fleet_step` to every job
+    at once; the host only counts iterations (all bookkeeping — including
+    per-job stopping — happens on device, and iterations dispatch
+    asynchronously, so there are no per-step host round-trips);
+  * `fleet_step` is the *same compiled program* the sequential path probes,
+    so the two engines are trace-identical — `tests/test_fleet.py` asserts
+    equal `tried`/`costs`/`stop_iteration` sequences seed-for-seed.  (A
+    `lax.while_loop` formulation was rejected: XLA:CPU executes while bodies
+    ~5-8× slower than the identical standalone program, and its different
+    float32 numerics break trace equivalence with any per-step engine.)
+
+Per-job structure is encoded as masks over a padded configuration axis:
+`priority_mask` / `remaining_mask` delimit Ruya's two phases (CherryPick is
+priority=everything, remaining=empty), and padded slots belong to neither
+pool, so they are never candidates and — by `fast_bo`'s exact masking —
+contribute nothing to any posterior.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import List, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bayesopt import BOSettings, SearchTrace
+from repro.core.fast_bo import FleetState, fleet_step
+from repro.core.search_space import SearchSpace
+
+__all__ = ["BatchedTrace", "batched_search"]
+
+
+@dataclasses.dataclass
+class BatchedTrace:
+    """Trial logs for J searches, padded to the longest run.
+
+    ``tried[j, k]`` is the k-th configuration index tried by job j (-1 pad);
+    ``costs`` is aligned with ``tried``; ``stop_iteration``/``phase_boundary``
+    are -1 where the event never happened.  ``job_trace(j)`` converts one row
+    to the sequential engine's `SearchTrace` so everything downstream of
+    either engine speaks the same type.
+    """
+
+    tried: np.ndarray  # (J, T) int32, -1 padded
+    costs: np.ndarray  # (J, T) float64, aligned with tried
+    n_tried: np.ndarray  # (J,) int32
+    stop_iteration: np.ndarray  # (J,) int32, -1 = criterion never fired
+    phase_boundary: np.ndarray  # (J,) int32, -1 = never left the priority phase
+
+    def __len__(self) -> int:
+        return self.tried.shape[0]
+
+    def job_trace(self, j: int) -> SearchTrace:
+        k = int(self.n_tried[j])
+        stop = int(self.stop_iteration[j])
+        pb = int(self.phase_boundary[j])
+        return SearchTrace(
+            tried=[int(i) for i in self.tried[j, :k]],
+            costs=[float(c) for c in self.costs[j, :k]],
+            stop_iteration=stop if stop >= 0 else None,
+            phase_boundary=pb if pb >= 0 else None,
+        )
+
+    def traces(self) -> List[SearchTrace]:
+        return [self.job_trace(j) for j in range(len(self))]
+
+
+# Jobs are processed in lockstep chunks of this extent: small enough that
+# the (CHUNK·18, n, n) kernel intermediates stay cache-resident on CPU,
+# large enough to amortize dispatch.  Chunk extent must not affect results:
+# float32 numerics are batch-extent-invariant for extents in [2, 8] (extent
+# 1 compiles to different unbatched programs, hence the ≥2 padding below;
+# extents ≥ 12 vectorize some reductions differently and diverge —
+# verified empirically against the sequential engine, do not raise this
+# without re-running tests/test_fleet.py).
+_CHUNK = 8
+# With early stopping enabled, the host polls the done flags at this period
+# (each poll syncs the dispatch queue once).
+_POLL_PERIOD = 8
+
+
+@partial(jax.jit, static_argnames=("xi",))
+def _fleet_update(
+    state, encoded, costs, prio_mask, rem_mask, init_picks, init_count,
+    max_trials, min_obs, ei_stop_rel, to_exhaustion, *, xi: float,
+):
+    """One lockstep iteration for a chunk of jobs (vmapped `fleet_step`)."""
+
+    def one(s, e, c, p, r, ip, ic, mt):
+        return fleet_step(
+            s, e, c, p, r, ip, ic, mt, min_obs, ei_stop_rel, to_exhaustion, xi
+        )
+
+    return jax.vmap(one)(
+        state, encoded, costs, prio_mask, rem_mask, init_picks, init_count,
+        max_trials,
+    )
+
+
+def _run_chunk(
+    encoded, costs, prio_mask, rem_mask, init_picks, init_count, max_trials,
+    settings: BOSettings, to_exhaustion: bool, max_T: int,
+):
+    """Drive one chunk of jobs to completion; state stays on device.
+
+    The host loop makes no data-dependent decisions (`fleet_step` is a no-op
+    for finished jobs), so all iterations dispatch asynchronously; with
+    early stopping it additionally polls the done flags every few steps to
+    cut the tail.
+    """
+    j = encoded.shape[0]
+    n = encoded.shape[1]
+    state = FleetState(
+        obs=jnp.zeros((j, n), bool),
+        y=jnp.zeros((j, n), jnp.float32),
+        tried=jnp.full((j, max_T), -1, jnp.int32),
+        t=jnp.zeros(j, jnp.int32),
+        stop=jnp.full(j, -1, jnp.int32),
+        pb=jnp.full(j, -1, jnp.int32),
+        done=jnp.zeros(j, bool),
+        last_ei=jnp.zeros(j, jnp.float32),
+        last_best=jnp.full(j, jnp.inf, jnp.float32),
+    )
+    args = (
+        jnp.asarray(encoded), jnp.asarray(costs), jnp.asarray(prio_mask),
+        jnp.asarray(rem_mask), jnp.asarray(init_picks),
+        jnp.asarray(init_count), jnp.asarray(max_trials),
+        jnp.asarray(settings.min_observations, jnp.int32),
+        jnp.asarray(settings.ei_stop_rel, jnp.float32),
+        jnp.asarray(to_exhaustion),
+    )
+    # One extra pass beyond the trial budget: it observes nothing, but it is
+    # where a budget-capped job records a phase boundary it reached exactly
+    # at its last trial, and where budget exhaustion latches `done`.
+    steps = int(np.max(max_trials)) + 1 if len(max_trials) else 0
+    for k in range(steps):
+        state = _fleet_update(state, *args, xi=settings.xi)
+        if (
+            not to_exhaustion
+            and k % _POLL_PERIOD == _POLL_PERIOD - 1
+            and bool(jnp.all(state.done))
+        ):
+            break
+    return state
+
+
+def _as_space_list(
+    spaces: Union[SearchSpace, Sequence[SearchSpace]], n_jobs: int
+) -> List[SearchSpace]:
+    if isinstance(spaces, SearchSpace):
+        return [spaces] * n_jobs
+    spaces = list(spaces)
+    if len(spaces) != n_jobs:
+        raise ValueError(f"{len(spaces)} spaces for {n_jobs} jobs")
+    return spaces
+
+
+def batched_search(
+    spaces: Union[SearchSpace, Sequence[SearchSpace]],
+    cost_tables: Sequence[np.ndarray],
+    rngs: Sequence[np.random.Generator],
+    *,
+    priority: Optional[Sequence[Sequence[int]]] = None,
+    remaining: Optional[Sequence[Sequence[int]]] = None,
+    settings: BOSettings = BOSettings(),
+    to_exhaustion: bool = False,
+) -> BatchedTrace:
+    """Run J independent BO searches in lockstep on device.
+
+    ``spaces`` may be a single shared `SearchSpace` or one per job.  Jobs are
+    grouped by space shape — each group runs unpadded, so a heterogeneous
+    fleet stays bitwise-identical to the per-job sequential engine (padding
+    a 10-config job into a 20-slot batch would be mathematically exact but
+    not float32-identical).  ``cost_tables[j][i]`` is the cost job j observes
+    for configuration i — the full table lives on device so the loop never
+    leaves it.  ``priority``/``remaining`` give each job's Ruya split
+    (omitted → plain CherryPick over the whole space).  The random
+    initialization consumes ``rngs[j]`` exactly like the sequential engine,
+    so seed-matched runs produce identical traces.
+    """
+    n_jobs = len(cost_tables)
+    if len(rngs) != n_jobs:
+        raise ValueError(f"{len(rngs)} rngs for {n_jobs} jobs")
+    space_list = _as_space_list(spaces, n_jobs)
+    if priority is None:
+        priority = [list(range(len(s))) for s in space_list]
+    if remaining is None:
+        remaining = [[] for _ in range(n_jobs)]
+
+    init_lists: List[List[int]] = []
+    max_trials_all = np.zeros(n_jobs, np.int32)
+    for j, (space, table, rng) in enumerate(zip(space_list, cost_tables, rngs)):
+        n = len(space)
+        table = np.asarray(table, np.float64)
+        if table.shape != (n,):
+            raise ValueError(f"cost table {j} has shape {table.shape}, want ({n},)")
+        prio = [int(i) for i in priority[j]]
+        rem = [int(i) for i in remaining[j]]
+        if set(prio) & set(rem):
+            raise ValueError(f"job {j}: priority and remaining pools overlap")
+        # Scripted random initialization — the same draw, in the same order,
+        # as `_bo_loop`'s phase-0 block, so traces match seed-for-seed.
+        # Drawn up front (in job order) regardless of grouping.
+        if prio:
+            n_init = min(settings.n_init, len(prio))
+            picked = rng.choice(len(prio), size=n_init, replace=False)
+            init_lists.append([prio[int(i)] for i in picked])
+        else:
+            init_lists.append([])
+        total = len(prio) + len(rem)
+        if settings.max_iters is not None:
+            # The sequential engine observes every scripted init pick before
+            # its first budget check, so the budget floor is the init count.
+            total = min(total, max(settings.max_iters, len(init_lists[-1])))
+        max_trials_all[j] = total
+
+    max_T = max(int(max_trials_all.max()) if n_jobs else 0, 1)
+    tried = np.full((n_jobs, max_T), -1, np.int32)
+    n_tried = np.zeros(n_jobs, np.int32)
+    stop = np.full(n_jobs, -1, np.int32)
+    pb = np.full(n_jobs, -1, np.int32)
+
+    # Group jobs by space shape; each group runs unpadded, in cache-friendly
+    # lockstep chunks.  Chunks of one job are padded with an inert dummy
+    # (zero trial budget): XLA:CPU collapses singleton batch dims into
+    # unbatched programs with different float32 numerics, so every call must
+    # run at extent ≥ 2.
+    groups: dict = {}
+    for j, space in enumerate(space_list):
+        enc = space.encoded()
+        groups.setdefault(enc.shape, []).append(j)
+
+    for shape, members in groups.items():
+        n, d = shape
+        g = len(members)
+        encoded = np.zeros((g, n, d), np.float32)
+        costs = np.zeros((g, n), np.float32)
+        prio_mask = np.zeros((g, n), bool)
+        rem_mask = np.zeros((g, n), bool)
+        n_init_slots = max(1, max(len(init_lists[j]) for j in members))
+        init_picks = np.zeros((g, n_init_slots), np.int32)
+        init_count = np.zeros(g, np.int32)
+        max_trials = np.zeros(g, np.int32)
+        for i, j in enumerate(members):
+            encoded[i] = np.asarray(space_list[j].encoded(), np.float32)
+            costs[i] = np.asarray(cost_tables[j], np.float32)
+            prio_mask[i, np.asarray(priority[j], np.int64)] = True
+            if len(remaining[j]):
+                rem_mask[i, np.asarray(remaining[j], np.int64)] = True
+            il = init_lists[j]
+            init_picks[i, : len(il)] = il
+            init_count[i] = len(il)
+            max_trials[i] = max_trials_all[j]
+
+        for lo in range(0, g, _CHUNK):
+            hi = min(lo + _CHUNK, g)
+            chunk = slice(lo, hi)
+            parts = [
+                encoded[chunk], costs[chunk], prio_mask[chunk],
+                rem_mask[chunk], init_picks[chunk], init_count[chunk],
+                max_trials[chunk],
+            ]
+            if hi - lo == 1:
+                parts = [np.concatenate([a, np.zeros_like(a[:1])]) for a in parts]
+            state = _run_chunk(
+                *parts, settings=settings, to_exhaustion=to_exhaustion,
+                max_T=max_T,
+            )
+            for i, j in enumerate(members[lo:hi]):
+                tried[j] = np.asarray(state.tried)[i]
+                n_tried[j] = int(np.asarray(state.t)[i])
+                stop[j] = int(np.asarray(state.stop)[i])
+                pb[j] = int(np.asarray(state.pb)[i])
+    # Costs are reported from the float64 tables (the engine's float32 copy
+    # is only the GP's view), matching the sequential trace exactly.
+    out_costs = np.zeros(tried.shape, np.float64)
+    for j, table in enumerate(cost_tables):
+        k = int(n_tried[j])
+        out_costs[j, :k] = np.asarray(table, np.float64)[tried[j, :k]]
+    return BatchedTrace(
+        tried=tried,
+        costs=out_costs,
+        n_tried=n_tried,
+        stop_iteration=stop,
+        phase_boundary=pb,
+    )

@@ -1,0 +1,180 @@
+"""End-to-end fleet tuning: profile (with cache) → split → batched search.
+
+One call tunes J jobs: each job is profiled (or served from the Flora-style
+`ProfileCache`), its search space is split into priority/remaining groups by
+the paper's §III-D rule, and all J two-phase searches run in ONE jitted
+batched engine call.  Every job comes back as the same `RuyaReport` the
+single-job pipeline (`repro.core.tuner.run_ruya`) produces, so benchmarks,
+examples and the tuner API are engine-agnostic: J=1 is just a fleet of one.
+
+`cluster_fleet` replays paper workloads through `repro.cluster.simulator`;
+`replay_seeds` expands one job into a fleet of seed-replicas — the paper's
+"repeat every search 200×" protocol becomes a single batched call.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.bayesopt import BOSettings, SearchTrace, ruya_search
+from repro.core.profiler import ProfileResult, profile_job
+from repro.core.search_space import SearchSpace, split_search_space
+from repro.core.tuner import RuyaReport
+from repro.fleet.batched_engine import batched_search
+from repro.fleet.profile_cache import ProfileCache
+
+__all__ = ["FleetJob", "cluster_fleet", "replay_seeds", "tune_fleet"]
+
+RunFn = Callable[[float], Tuple[float, float]]
+
+
+@dataclasses.dataclass
+class FleetJob:
+    """Everything the fleet driver needs about one job.
+
+    The cost table is the full per-configuration cost vector — fleet mode
+    replays recorded/emulated workloads, so observations are table lookups
+    and the whole search can stay on device.
+    """
+
+    name: str
+    space: SearchSpace
+    cost_table: np.ndarray  # (len(space),) observed cost per config
+    full_input_size: float = 0.0  # bytes
+    profile_run: Optional[RunFn] = None
+    profile_result: Optional[ProfileResult] = None
+    per_node_overhead: float = 0.0
+    leeway: float = 0.10
+    flat_fraction: float = 1.0 / 7.0
+
+
+def cluster_fleet(
+    keys: Sequence[str], *, per_node_overhead_gb: float = 0.5
+) -> List[FleetJob]:
+    """Build fleet jobs from the paper's emulated Spark/Hadoop workloads."""
+    from repro.cluster.simulator import ClusterSimulator
+
+    GiB = 1024.0**3
+    jobs = []
+    for key in keys:
+        sim = ClusterSimulator.for_job(key)
+        jobs.append(
+            FleetJob(
+                name=key,
+                space=sim.space,
+                cost_table=sim.normalized,
+                full_input_size=sim.job.input_gb * GiB,
+                profile_run=sim.profile_run_fn(),
+                per_node_overhead=per_node_overhead_gb * GiB,
+            )
+        )
+    return jobs
+
+
+def replay_seeds(job: FleetJob, seeds: Sequence[int]) -> Tuple[
+    List[FleetJob], List[np.random.Generator]
+]:
+    """One job × many seeds → a fleet (the paper's repetition protocol)."""
+    return [job] * len(seeds), [np.random.default_rng(s) for s in seeds]
+
+
+def _resolve_profile(job: FleetJob, cache: Optional[ProfileCache]) -> ProfileResult:
+    if job.profile_result is not None:
+        return job.profile_result
+    if job.profile_run is None:
+        raise ValueError(
+            f"job {job.name!r} has neither profile_result nor profile_run"
+        )
+    if cache is not None:
+        return cache.get_or_profile(job.profile_run, job.full_input_size)
+    return profile_job(job.profile_run, job.full_input_size)
+
+
+def tune_fleet(
+    jobs: Sequence[FleetJob],
+    rngs: Sequence[np.random.Generator],
+    *,
+    mode: str = "ruya",
+    settings: BOSettings = BOSettings(),
+    to_exhaustion: bool = False,
+    cache: Optional[ProfileCache] = None,
+    engine: str = "batched",
+) -> List[RuyaReport]:
+    """Tune J jobs; returns one `RuyaReport` per job.
+
+    ``mode="ruya"`` profiles each job (through ``cache`` when given) and runs
+    the two-phase search; ``mode="cherrypick"`` runs the plain-BO baseline
+    (no profiling, the report's ``profile`` is None).  ``engine="batched"``
+    uses the jitted multi-job engine; ``engine="sequential"`` drives the
+    per-job engine in a Python loop — both produce identical traces, the
+    sequential path exists for verification and J=1 fallback.
+    """
+    if mode not in ("ruya", "cherrypick"):
+        raise ValueError(f"unknown mode {mode!r}")
+    if engine not in ("batched", "sequential"):
+        raise ValueError(f"unknown engine {engine!r}")
+    if len(jobs) != len(rngs):
+        raise ValueError(f"{len(jobs)} jobs but {len(rngs)} rngs")
+
+    profiles: List[Optional[ProfileResult]] = []
+    priority: List[List[int]] = []
+    remaining: List[List[int]] = []
+    resolved: dict = {}  # id(job) -> profile; seed-replica fleets alias jobs
+    for job in jobs:
+        if mode == "cherrypick":
+            profiles.append(None)
+            priority.append(list(range(len(job.space))))
+            remaining.append([])
+            continue
+        if id(job) not in resolved:
+            resolved[id(job)] = _resolve_profile(job, cache)
+        prof = resolved[id(job)]
+        prio, rest = split_search_space(
+            job.space,
+            prof.model,
+            job.full_input_size,
+            per_node_overhead=job.per_node_overhead,
+            leeway=job.leeway,
+            flat_fraction=job.flat_fraction,
+        )
+        profiles.append(prof)
+        priority.append(list(prio))
+        remaining.append(list(rest))
+
+    if engine == "batched":
+        bt = batched_search(
+            [job.space for job in jobs],
+            [job.cost_table for job in jobs],
+            rngs,
+            priority=priority,
+            remaining=remaining,
+            settings=settings,
+            to_exhaustion=to_exhaustion,
+        )
+        traces: List[SearchTrace] = bt.traces()
+    else:
+        traces = [
+            ruya_search(
+                job.space,
+                lambda i, _t=np.asarray(job.cost_table, np.float64): float(_t[i]),
+                rng,
+                prio,
+                rest,
+                settings=settings,
+                to_exhaustion=to_exhaustion,
+            )
+            for job, rng, prio, rest in zip(jobs, rngs, priority, remaining)
+        ]
+
+    return [
+        RuyaReport(
+            profile=prof,
+            priority=tuple(prio),
+            remaining=tuple(rest),
+            trace=trace,
+        )
+        for prof, prio, rest, trace in zip(profiles, priority, remaining, traces)
+    ]

@@ -1,0 +1,138 @@
+"""Flora-style profile reuse across jobs with matching memory patterns.
+
+Flora (Will et al., 2025) amortizes cluster tuning across a fleet by
+classifying jobs and sharing knowledge within a class.  We apply the idea to
+Ruya's most expensive phase: the single-machine profiling runs (minutes per
+job, Table III).  A job's *memory signature* is derived from its fitted
+`MemoryModel` — the category plus log-quantized slope and quantized
+intercept — so two jobs whose memory scales the same way hash to the same
+bucket regardless of small run-to-run noise.
+
+The cache workflow, per job:
+
+  1. run a cheap three-point *probe* (tiny samples, a fraction of the full
+     five-run sweep) and fit a coarse model;
+  2. if a profile with the probe's signature is cached → reuse it (hit);
+  3. otherwise run the full §III-B profiling driver, store it under its own
+     (full-fit) signature (miss).
+
+Probing costs 3 short runs versus ~6+ longer ones for a full profile, so a
+fleet of N jobs in C classes pays for C full profiles plus N cheap probes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, Optional, Tuple
+
+from repro.core.memory_model import MemoryCategory, MemoryModel, fit_memory_model
+from repro.core.profiler import ProfileResult, profile_job
+
+__all__ = ["MemorySignature", "ProfileCache", "probe_memory_model"]
+
+RunFn = Callable[[float], Tuple[float, float]]
+
+_GiB = 1024.0**3
+
+
+@dataclasses.dataclass(frozen=True)
+class MemorySignature:
+    """Hashable memory-pattern class of a job (Flora-style)."""
+
+    category: str
+    slope_bucket: int  # round(log2(slope) / resolution), LINEAR only
+    intercept_bucket: int  # round(intercept / quantum)
+
+    @classmethod
+    def of(
+        cls,
+        model: MemoryModel,
+        *,
+        slope_resolution: float = 0.5,
+        intercept_quantum: float = 4.0 * _GiB,
+    ) -> "MemorySignature":
+        if model.category is MemoryCategory.LINEAR and model.slope > 0:
+            slope_bucket = round(math.log2(model.slope) / slope_resolution)
+        else:
+            slope_bucket = 0
+        intercept = model.intercept if math.isfinite(model.intercept) else 0.0
+        return cls(
+            category=model.category.value,
+            slope_bucket=slope_bucket,
+            intercept_bucket=round(intercept / intercept_quantum),
+        )
+
+
+def probe_memory_model(
+    run: RunFn,
+    full_input_size: float,
+    *,
+    fractions: Tuple[float, float, float] = (0.002, 0.006, 0.01),
+) -> Tuple[MemoryModel, float]:
+    """Cheap classification probe: a few tiny runs, coarse OLS fit.
+
+    Returns (coarse model, wall-seconds spent probing).  The probe exists
+    only to compute a `MemorySignature` — it is far too noisy to extrapolate
+    a memory requirement from.
+    """
+    sizes = [full_input_size * f for f in fractions]
+    spent = 0.0
+    readings = []
+    for s in sizes:
+        runtime, peak = run(s)
+        spent += runtime
+        readings.append(peak)
+    return fit_memory_model(sizes, readings), spent
+
+
+class ProfileCache:
+    """Shared `ProfileResult` store keyed by `MemorySignature`."""
+
+    def __init__(
+        self,
+        *,
+        slope_resolution: float = 0.5,
+        intercept_quantum: float = 4.0 * _GiB,
+    ) -> None:
+        self._store: Dict[MemorySignature, ProfileResult] = {}
+        self._slope_resolution = slope_resolution
+        self._intercept_quantum = intercept_quantum
+        self.hits = 0
+        self.misses = 0
+        self.probe_time_s = 0.0
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def signature(self, model: MemoryModel) -> MemorySignature:
+        return MemorySignature.of(
+            model,
+            slope_resolution=self._slope_resolution,
+            intercept_quantum=self._intercept_quantum,
+        )
+
+    def get(self, sig: MemorySignature) -> Optional[ProfileResult]:
+        return self._store.get(sig)
+
+    def put(self, sig: MemorySignature, profile: ProfileResult) -> None:
+        self._store[sig] = profile
+
+    def get_or_profile(
+        self, run: RunFn, full_input_size: float, **profile_kwargs
+    ) -> ProfileResult:
+        """Probe-classify the job; reuse a cached profile or run a full one."""
+        coarse, probe_s = probe_memory_model(run, full_input_size)
+        self.probe_time_s += probe_s
+        sig = self.signature(coarse)
+        cached = self._store.get(sig)
+        if cached is not None:
+            self.hits += 1
+            return cached
+        self.misses += 1
+        profile = profile_job(run, full_input_size, **profile_kwargs)
+        # Store under the probe signature (the lookup key future jobs will
+        # compute) and the full-fit signature, which can differ on noisy jobs.
+        self._store.setdefault(sig, profile)
+        self._store.setdefault(self.signature(profile.model), profile)
+        return profile

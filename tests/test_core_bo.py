@@ -1,0 +1,172 @@
+"""Property tests: the jitted masked-posterior/EI fast path (`fast_bo`)
+against the readable reference GP (`gp.py` + `acquisition.py`).
+
+The fast path keeps every configuration in fixed-shape arrays and selects
+the observed set with boolean masks; padding must be *exact* — masked-out
+points contribute nothing to the posterior.  These tests check that claim
+over randomized observation masks, plus the EI/pick agreement between
+`bo_step` and the reference pipeline, and the dtype behavior of `fit_gp`.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fast_bo
+from repro.core.acquisition import expected_improvement
+from repro.core.fast_bo import _masked_posterior, bo_step
+from repro.core.gp import GPParams, fit_gp, gp_predict, matern52
+
+_JITTER = 1e-8
+
+
+def random_case(seed, n=18, d=3, n_obs=6):
+    # n_obs is fixed so the reference `fit_gp` compiles once across seeds.
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    obs_idx = rng.choice(n, size=n_obs, replace=False)
+    obs_mask = np.zeros(n, bool)
+    obs_mask[obs_idx] = True
+    # A smooth-ish cost surface with noise.
+    y = (np.sum(x**2, -1) + 0.3 * rng.normal(size=n)).astype(np.float32)
+    return x, obs_mask, y
+
+
+def reference_posterior(x, obs_mask, y_n, lengthscale, noise):
+    """Readable dense-GP math on the observed subset only (float32)."""
+    x = jnp.asarray(x, jnp.float32)
+    obs = np.flatnonzero(obs_mask)
+    params = GPParams(
+        lengthscale=jnp.asarray(lengthscale, jnp.float32),
+        amplitude=jnp.asarray(1.0, jnp.float32),
+        noise=jnp.asarray(noise, jnp.float32),
+    )
+    x_obs = x[obs]
+    k = matern52(x_obs, x_obs, params) + (noise + _JITTER) * jnp.eye(len(obs))
+    chol = jnp.linalg.cholesky(k)
+    alpha = jax.scipy.linalg.cho_solve((chol, True), y_n[obs])
+    lml = (
+        -0.5 * y_n[obs] @ alpha
+        - jnp.sum(jnp.log(jnp.diagonal(chol)))
+        - 0.5 * len(obs) * jnp.log(2.0 * jnp.pi)
+    )
+    k_star = matern52(x_obs, x, params)
+    mean = k_star.T @ alpha
+    v = jax.scipy.linalg.solve_triangular(chol, k_star, lower=True)
+    var = jnp.maximum(1.0 - jnp.sum(v * v, axis=0), 1e-12)
+    return np.asarray(lml), np.asarray(mean), np.asarray(var)
+
+
+class TestMaskedPosterior:
+    @pytest.mark.parametrize("seed", range(8))
+    def test_matches_reference_on_random_masks(self, seed):
+        x, obs_mask, y = random_case(seed)
+        m = obs_mask.astype(np.float32)
+        y_mean = (y * m).sum() / m.sum()
+        y_std = max(float(np.sqrt((m * (y - y_mean) ** 2).sum() / m.sum())), 1e-8)
+        y_n = np.where(obs_mask, (y - y_mean) / y_std, 0.0).astype(np.float32)
+
+        for ls, nz in [(0.5, 1e-2), (1.0, 1e-4), (2.0, 1e-1)]:
+            lml, mean, var = jax.jit(_masked_posterior)(
+                jnp.asarray(x), jnp.asarray(obs_mask), jnp.asarray(y_n),
+                jnp.asarray(ls, jnp.float32), jnp.asarray(nz, jnp.float32),
+            )
+            ref_lml, ref_mean, ref_var = reference_posterior(x, obs_mask, y_n, ls, nz)
+            assert np.asarray(lml) == pytest.approx(ref_lml, rel=1e-3, abs=1e-3)
+            np.testing.assert_allclose(np.asarray(mean), ref_mean, rtol=2e-3, atol=2e-3)
+            np.testing.assert_allclose(np.asarray(var), ref_var, rtol=2e-3, atol=2e-3)
+
+    @pytest.mark.parametrize("seed", range(5))
+    def test_padded_points_contribute_nothing(self, seed):
+        """Appending garbage rows outside the obs mask must leave the
+        posterior over the real points unchanged (padding is exact)."""
+        x, obs_mask, y = random_case(seed, n=14)
+        rng = np.random.default_rng(1000 + seed)
+        n_pad = 7
+        x_pad = np.concatenate(
+            [x, 100.0 * rng.normal(size=(n_pad, x.shape[1])).astype(np.float32)]
+        )
+        obs_pad = np.concatenate([obs_mask, np.zeros(n_pad, bool)])
+
+        m = obs_mask.astype(np.float32)
+        y_mean = (y * m).sum() / m.sum()
+        y_std = max(float(np.sqrt((m * (y - y_mean) ** 2).sum() / m.sum())), 1e-8)
+        y_n = np.where(obs_mask, (y - y_mean) / y_std, 0.0).astype(np.float32)
+        y_n_pad = np.concatenate([y_n, np.zeros(n_pad, np.float32)])
+
+        lml, mean, var = jax.jit(_masked_posterior)(
+            jnp.asarray(x), jnp.asarray(obs_mask), jnp.asarray(y_n),
+            jnp.asarray(1.0, jnp.float32), jnp.asarray(1e-2, jnp.float32),
+        )
+        lml_p, mean_p, var_p = jax.jit(_masked_posterior)(
+            jnp.asarray(x_pad), jnp.asarray(obs_pad), jnp.asarray(y_n_pad),
+            jnp.asarray(1.0, jnp.float32), jnp.asarray(1e-2, jnp.float32),
+        )
+        assert np.asarray(lml_p) == pytest.approx(float(lml), rel=1e-4, abs=1e-4)
+        np.testing.assert_allclose(
+            np.asarray(mean_p)[: len(x)], np.asarray(mean), rtol=1e-4, atol=1e-4
+        )
+        np.testing.assert_allclose(
+            np.asarray(var_p)[: len(x)], np.asarray(var), rtol=1e-4, atol=1e-4
+        )
+
+
+class TestBoStepAgainstReference:
+    @pytest.mark.parametrize("seed", range(6))
+    def test_pick_is_ei_optimal_under_reference(self, seed):
+        """`bo_step`'s pick must (near-)maximize the EI computed by the
+        readable fit_gp → gp_predict → expected_improvement pipeline."""
+        x, obs_mask, y = random_case(seed, n=16)
+        cand = ~obs_mask
+        pick, max_ei, best = bo_step(
+            jnp.asarray(x), jnp.asarray(obs_mask), jnp.asarray(y), jnp.asarray(cand)
+        )
+        pick = int(pick)
+        assert cand[pick]
+        obs_idx = np.flatnonzero(obs_mask)
+        assert float(best) == pytest.approx(float(y[obs_idx].min()))
+
+        post = fit_gp(jnp.asarray(x[obs_idx]), jnp.asarray(y[obs_idx]))
+        mean, std = gp_predict(post, jnp.asarray(x))
+        ref_ei = np.array(
+            expected_improvement(mean, std, jnp.asarray(y[obs_idx].min()))
+        )
+        ref_ei[~cand] = -np.inf
+        # Floating tie-breaks may differ between the two programs; the pick
+        # must carry (numerically) maximal reference EI either way.
+        gap = ref_ei.max() - ref_ei[pick]
+        assert gap <= 1e-5 * max(1.0, abs(float(ref_ei.max())))
+
+    def test_max_ei_reported_consistently(self):
+        x, obs_mask, y = random_case(42, n=16)
+        cand = ~obs_mask
+        pick, max_ei, _ = bo_step(
+            jnp.asarray(x), jnp.asarray(obs_mask), jnp.asarray(y), jnp.asarray(cand)
+        )
+        assert float(max_ei) >= 0.0
+        # The returned max EI is attained at the returned pick.
+        obs_idx = np.flatnonzero(obs_mask)
+        post = fit_gp(jnp.asarray(x[obs_idx]), jnp.asarray(y[obs_idx]))
+        mean, std = gp_predict(post, jnp.asarray(x))
+        ref_ei = np.asarray(
+            expected_improvement(mean, std, jnp.asarray(y[obs_idx].min()))
+        )
+        assert float(max_ei) == pytest.approx(float(ref_ei[int(pick)]), rel=5e-2, abs=1e-5)
+
+
+class TestFitGpDtype:
+    def test_respects_default_float32(self):
+        """`fit_gp` must follow the runtime's canonical float width instead
+        of poking at jax.config internals (fragile across JAX versions)."""
+        x = jnp.asarray(np.random.default_rng(0).normal(size=(6, 2)))
+        y = jnp.asarray(np.arange(6.0))
+        post = fit_gp(x, y)
+        expected = jax.dtypes.canonicalize_dtype(jnp.float64)
+        assert post.x_train.dtype == expected
+        assert post.chol.dtype == expected
+        mean, std = gp_predict(post, x)
+        assert mean.dtype == expected
+        # And the posterior interpolates the training targets reasonably.
+        np.testing.assert_allclose(np.asarray(mean), np.arange(6.0), atol=0.3)

@@ -7,6 +7,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+pytestmark = pytest.mark.slow  # excluded from the tier-1 fast lane
+
 import repro.configs as C
 from repro.models import Model, init_tree
 from repro.models.spec import is_spec

@@ -3,9 +3,12 @@ different mesh with the target shardings applied (subprocess, 8 devices)."""
 
 import jax
 import jax.numpy as jnp
+import pytest
 import numpy as np
 
 from repro.checkpoint import save_pytree
+
+pytestmark = pytest.mark.slow  # excluded from the tier-1 fast lane
 
 
 class TestElasticRestore:

@@ -1,6 +1,11 @@
 """shard_map expert parallelism: numerics vs the local dispatch, gradient
 flow, and the documented capacity/aux deviations (subprocess, 8 devices)."""
 
+import pytest
+
+pytestmark = pytest.mark.slow  # excluded from the tier-1 fast lane
+
+
 
 class TestExpertParallel:
     def test_matches_local_dispatch_uncapped(self, devices_runner):

@@ -1,0 +1,335 @@
+"""Fleet subsystem tests: batched↔sequential trace equivalence, the fleet
+driver's single-code-path API, and Flora-style profile-cache behavior.
+
+The equivalence tests assert *identical* `tried`/`costs`/`stop_iteration`
+sequences between `batched_search` (J jobs advanced in device-resident
+lockstep) and J runs of the sequential engine with the same seeds — the
+contract that makes fleet mode a pure execution optimization.  The fast tests share one set of
+array shapes so the engine compiles exactly once; the exhaustive 69-config
+cluster sweep is marked `slow`.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.bayesopt import BOSettings, cherrypick_search, ruya_search
+from repro.core.memory_model import fit_memory_model
+from repro.core.search_space import Configuration, SearchSpace
+from repro.fleet import (
+    MemorySignature,
+    ProfileCache,
+    batched_search,
+    cluster_fleet,
+    replay_seeds,
+    tune_fleet,
+)
+
+GiB = 1024**3
+N = 20
+SEEDS = range(4)
+
+
+def quad_space(n=N):
+    return SearchSpace(
+        [
+            Configuration(name=f"c{i}", features=(float(i),), total_memory=float(i))
+            for i in range(n)
+        ]
+    )
+
+
+def quad_table(n=N, optimum=9):
+    return np.array([1.0 + 0.05 * (i - optimum) ** 2 for i in range(n)])
+
+
+def assert_traces_equal(batched_trace, reference):
+    assert batched_trace.tried == reference.tried
+    assert batched_trace.costs == reference.costs
+    assert batched_trace.stop_iteration == reference.stop_iteration
+    assert batched_trace.phase_boundary == reference.phase_boundary
+
+
+class TestTraceEquivalence:
+    space = quad_space()
+    table = quad_table()
+
+    def cost_fn(self):
+        table = self.table
+        return lambda i: float(table[i])
+
+    def test_cherrypick_identical_to_exhaustion(self):
+        seq = [
+            cherrypick_search(
+                self.space, self.cost_fn(), np.random.default_rng(s),
+                to_exhaustion=True,
+            )
+            for s in SEEDS
+        ]
+        bt = batched_search(
+            self.space, [self.table] * len(seq),
+            [np.random.default_rng(s) for s in SEEDS], to_exhaustion=True,
+        )
+        for j, ref in enumerate(seq):
+            assert_traces_equal(bt.job_trace(j), ref)
+
+    def test_cherrypick_identical_with_early_stop(self):
+        seq = [
+            cherrypick_search(
+                self.space, self.cost_fn(), np.random.default_rng(s),
+                to_exhaustion=False,
+            )
+            for s in SEEDS
+        ]
+        bt = batched_search(
+            self.space, [self.table] * len(seq),
+            [np.random.default_rng(s) for s in SEEDS], to_exhaustion=False,
+        )
+        for j, ref in enumerate(seq):
+            assert_traces_equal(bt.job_trace(j), ref)
+            assert bt.job_trace(j).stop_iteration is not None
+
+    def test_ruya_two_phase_identical(self):
+        prio = [7, 8, 9, 10, 11]
+        rest = [i for i in range(N) if i not in prio]
+        seq = [
+            ruya_search(
+                self.space, self.cost_fn(), np.random.default_rng(s), prio, rest,
+                to_exhaustion=True,
+            )
+            for s in SEEDS
+        ]
+        bt = batched_search(
+            self.space, [self.table] * len(seq),
+            [np.random.default_rng(s) for s in SEEDS],
+            priority=[prio] * len(seq), remaining=[rest] * len(seq),
+            to_exhaustion=True,
+        )
+        for j, ref in enumerate(seq):
+            assert_traces_equal(bt.job_trace(j), ref)
+            assert bt.job_trace(j).phase_boundary == len(prio)
+
+    def test_mixed_splits_in_one_batch(self):
+        """Ruya and CherryPick jobs co-exist in one batched call."""
+        prio = [0, 1, 2, 18, 19]
+        rest = [i for i in range(N) if i not in prio]
+        refs = [
+            ruya_search(self.space, self.cost_fn(), np.random.default_rng(0),
+                        prio, rest, to_exhaustion=True),
+            cherrypick_search(self.space, self.cost_fn(),
+                              np.random.default_rng(1), to_exhaustion=True),
+            ruya_search(self.space, self.cost_fn(), np.random.default_rng(2),
+                        list(range(N)), [], to_exhaustion=True),
+            cherrypick_search(self.space, self.cost_fn(),
+                              np.random.default_rng(3), to_exhaustion=True),
+        ]
+        bt = batched_search(
+            self.space, [self.table] * 4,
+            [np.random.default_rng(s) for s in range(4)],
+            priority=[prio, list(range(N)), list(range(N)), list(range(N))],
+            remaining=[rest, [], [], []],
+            to_exhaustion=True,
+        )
+        for j, ref in enumerate(refs):
+            assert_traces_equal(bt.job_trace(j), ref)
+
+    def test_single_job_fleet(self):
+        """J=1 must behave like any other fleet size (dummy-padding)."""
+        ref = cherrypick_search(
+            self.space, self.cost_fn(), np.random.default_rng(11),
+            to_exhaustion=True,
+        )
+        bt = batched_search(
+            self.space, [self.table], [np.random.default_rng(11)],
+            to_exhaustion=True,
+        )
+        assert len(bt) == 1
+        assert_traces_equal(bt.job_trace(0), ref)
+
+    def test_max_iters_at_phase_boundary_records_it(self):
+        """max_iters landing exactly on the phase-0/phase-1 boundary must
+        still record phase_boundary, like the sequential engine does."""
+        prio = [7, 8, 9, 10, 11]
+        rest = [i for i in range(N) if i not in prio]
+        st = BOSettings(max_iters=len(prio))
+        seq = [
+            ruya_search(self.space, self.cost_fn(), np.random.default_rng(s),
+                        prio, rest, settings=st, to_exhaustion=True)
+            for s in SEEDS
+        ]
+        bt = batched_search(
+            self.space, [self.table] * len(seq),
+            [np.random.default_rng(s) for s in SEEDS],
+            priority=[prio] * len(seq), remaining=[rest] * len(seq),
+            settings=st, to_exhaustion=True,
+        )
+        for j, ref in enumerate(seq):
+            assert ref.phase_boundary == len(prio)
+            assert_traces_equal(bt.job_trace(j), ref)
+
+    def test_max_iters_below_init_count(self):
+        """The sequential engine observes all scripted init picks before its
+        first budget check; the fleet engine must match."""
+        st = BOSettings(max_iters=2)  # < default n_init=3
+        seq = [
+            cherrypick_search(self.space, self.cost_fn(),
+                              np.random.default_rng(s), settings=st,
+                              to_exhaustion=True)
+            for s in SEEDS
+        ]
+        bt = batched_search(
+            self.space, [self.table] * len(seq),
+            [np.random.default_rng(s) for s in SEEDS], settings=st,
+            to_exhaustion=True,
+        )
+        for j, ref in enumerate(seq):
+            assert len(ref.tried) == 3
+            assert_traces_equal(bt.job_trace(j), ref)
+
+    def test_max_iters_budget(self):
+        st = BOSettings(max_iters=7)
+        seq = [
+            cherrypick_search(self.space, self.cost_fn(),
+                              np.random.default_rng(s), settings=st,
+                              to_exhaustion=True)
+            for s in SEEDS
+        ]
+        bt = batched_search(
+            self.space, [self.table] * len(seq),
+            [np.random.default_rng(s) for s in SEEDS], settings=st,
+            to_exhaustion=True,
+        )
+        for j, ref in enumerate(seq):
+            assert len(bt.job_trace(j).tried) == 7
+            assert_traces_equal(bt.job_trace(j), ref)
+
+
+@pytest.mark.slow
+class TestTraceEquivalenceClusterSweep:
+    """Exhaustive identity on the paper's real 69-config jobs."""
+
+    def test_cluster_jobs_identical(self):
+        from repro.core.profiler import profile_job
+        from repro.core.search_space import split_search_space
+
+        keys = ["kmeans/spark/huge", "terasort/hadoop/bigdata",
+                "logregr/spark/huge"]
+        jobs = cluster_fleet(keys)
+        refs, rngs, prios, rests, tables, spaces = [], [], [], [], [], []
+        for job in jobs:
+            prof = profile_job(job.profile_run, job.full_input_size)
+            prio, rest = split_search_space(
+                job.space, prof.model, job.full_input_size,
+                per_node_overhead=job.per_node_overhead,
+            )
+            for seed in range(3):
+                refs.append(
+                    ruya_search(
+                        job.space,
+                        lambda i, t=job.cost_table: float(t[i]),
+                        np.random.default_rng(seed), prio, rest,
+                        to_exhaustion=True,
+                    )
+                )
+                rngs.append(np.random.default_rng(seed))
+                prios.append(list(prio))
+                rests.append(list(rest))
+                tables.append(job.cost_table)
+                spaces.append(job.space)
+        bt = batched_search(
+            spaces, tables, rngs, priority=prios, remaining=rests,
+            to_exhaustion=True,
+        )
+        for j, ref in enumerate(refs):
+            assert_traces_equal(bt.job_trace(j), ref)
+
+
+class TestFleetDriver:
+    def test_replay_seeds_cherrypick_reports(self):
+        from repro.fleet.driver import FleetJob
+
+        job = FleetJob(name="quad", space=quad_space(), cost_table=quad_table())
+        jobs, rngs = replay_seeds(job, range(3))
+        reports = tune_fleet(jobs, rngs, mode="cherrypick",
+                             settings=BOSettings(max_iters=8),
+                             to_exhaustion=True)
+        assert len(reports) == 3
+        for rep in reports:
+            assert rep.profile is None
+            assert len(rep.priority) == N and not rep.remaining
+            assert len(rep.trace.tried) == 8
+
+    def test_engine_flags_agree(self):
+        from repro.fleet.driver import FleetJob
+
+        job = FleetJob(name="quad", space=quad_space(), cost_table=quad_table())
+        jobs, _ = replay_seeds(job, range(3))
+        st = BOSettings(max_iters=10)
+        bat = tune_fleet(jobs, [np.random.default_rng(s) for s in range(3)],
+                         mode="cherrypick", settings=st, to_exhaustion=True)
+        seq = tune_fleet(jobs, [np.random.default_rng(s) for s in range(3)],
+                         mode="cherrypick", settings=st, to_exhaustion=True,
+                         engine="sequential")
+        for b, s in zip(bat, seq):
+            assert b.trace.tried == s.trace.tried
+            assert b.trace.costs == s.trace.costs
+
+    def test_rejects_mismatched_rngs(self):
+        from repro.fleet.driver import FleetJob
+
+        job = FleetJob(name="quad", space=quad_space(), cost_table=quad_table())
+        with pytest.raises(ValueError):
+            tune_fleet([job, job], [np.random.default_rng(0)])
+
+
+def linear_run_fn(slope_gb, base_gb=0.5, rate_s_per_gb=50.0):
+    """Emulates a clean linear-memory job: sample_bytes -> (runtime, peak)."""
+
+    def run(sample_bytes):
+        gb = sample_bytes / GiB
+        return rate_s_per_gb * gb, (slope_gb * gb + base_gb) * GiB
+
+    return run
+
+
+def flat_run_fn(base_gb=4.0, rate_s_per_gb=50.0):
+    def run(sample_bytes):
+        return rate_s_per_gb * sample_bytes / GiB, base_gb * GiB
+
+    return run
+
+
+class TestProfileCache:
+    def test_same_pattern_hits(self):
+        cache = ProfileCache()
+        p1 = cache.get_or_profile(linear_run_fn(3.0), 100.0 * GiB)
+        p2 = cache.get_or_profile(linear_run_fn(3.0), 100.0 * GiB)
+        assert cache.misses == 1 and cache.hits == 1
+        assert p2 is p1  # the expensive profile ran once
+
+    def test_similar_slope_hits_same_bucket(self):
+        cache = ProfileCache()
+        cache.get_or_profile(linear_run_fn(3.0), 100.0 * GiB)
+        cache.get_or_profile(linear_run_fn(3.2), 120.0 * GiB)
+        assert cache.hits == 1 and cache.misses == 1
+
+    def test_different_category_misses(self):
+        cache = ProfileCache()
+        cache.get_or_profile(linear_run_fn(3.0), 100.0 * GiB)
+        cache.get_or_profile(flat_run_fn(), 100.0 * GiB)
+        assert cache.hits == 0 and cache.misses == 2
+        assert len(cache) == 2
+
+    def test_very_different_slope_misses(self):
+        cache = ProfileCache()
+        cache.get_or_profile(linear_run_fn(1.0), 100.0 * GiB)
+        cache.get_or_profile(linear_run_fn(8.0), 100.0 * GiB)
+        assert cache.hits == 0 and cache.misses == 2
+
+    def test_signature_of_model(self):
+        m_lin = fit_memory_model([1.0, 2.0, 3.0], [3.0, 6.0, 9.0])
+        m_flat = fit_memory_model([1.0, 2.0, 3.0], [5.0, 5.0, 5.0])
+        s_lin = MemorySignature.of(m_lin)
+        s_flat = MemorySignature.of(m_flat)
+        assert s_lin.category == "linear"
+        assert s_flat.category == "flat"
+        assert s_lin != s_flat

@@ -6,6 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # excluded from the tier-1 fast lane
+
 from repro.kernels.flash_attention import ops as fops, ref as fref
 from repro.kernels.rmsnorm import ops as rops, ref as rref
 from repro.kernels.ssd import ops as sops, ref as sref

@@ -7,6 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # excluded from the tier-1 fast lane
+
 from repro.models import layers as L
 from repro.models.config import ModelConfig, MoEConfig
 from repro.models.spec import init_tree

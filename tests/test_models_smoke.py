@@ -7,6 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # excluded from the tier-1 fast lane
+
 import repro.configs as C
 from repro.data import SyntheticDataset, shard_batch
 from repro.models import Model, init_tree

@@ -1,6 +1,11 @@
 """GPipe pipeline over the pod axis: forward parity with the sequential
 stack and gradient flow through the ppermute schedule (subprocess, 8 dev)."""
 
+import pytest
+
+pytestmark = pytest.mark.slow  # excluded from the tier-1 fast lane
+
+
 
 class TestPipeline:
     def test_forward_matches_sequential_and_grads_flow(self, devices_runner):

@@ -3,7 +3,7 @@ accounting, sample schedule — unit + property tests."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.profiler import profile_job, schedule_sample_sizes
 

@@ -8,6 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # excluded from the tier-1 fast lane
+
 import repro.configs as C
 from repro.checkpoint import CheckpointManager
 from repro.data import SyntheticDataset, shard_batch

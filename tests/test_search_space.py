@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.memory_model import MemoryCategory, MemoryModel, fit_memory_model
 from repro.core.search_space import Configuration, SearchSpace, split_search_space

@@ -5,6 +5,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+pytestmark = pytest.mark.slow  # excluded from the tier-1 fast lane
+
 from repro.models.spec import TensorSpec
 from repro.parallel.sharding import ShardingRules, default_rules
 

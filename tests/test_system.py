@@ -13,6 +13,8 @@ paper's three qualitative claims:
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # excluded from the tier-1 fast lane
+
 from repro.cluster import ClusterSimulator
 from repro.core import BOSettings, run_cherrypick, run_ruya
 from repro.core.memory_model import MemoryCategory
