@@ -2,6 +2,12 @@
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run --only table2 roofline
+    PYTHONPATH=src python -m benchmarks.run --only fleet --smoke
+
+`--only fleet` (re)writes the machine-readable perf baseline
+`BENCH_fleet.json` at the repo root.  `--smoke` runs suites that support it
+in a seconds-scale wiring mode (currently: fleet) — the same mode
+`pytest -m bench_smoke` exercises.
 
 Env: RUYA_BENCH_REPS (default 50; the paper used 200 repetitions).
 """
@@ -9,6 +15,7 @@ Env: RUYA_BENCH_REPS (default 50; the paper used 200 repetitions).
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 import traceback
@@ -21,6 +28,8 @@ def main() -> None:
                          "roofline kernels fleet tuner")
     ap.add_argument("--skip-tuner", action="store_true",
                     help="skip the compile-heavy tuner benchmark")
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale wiring mode for suites that support it")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -60,7 +69,11 @@ def main() -> None:
         t0 = time.time()
         print(f"\n{'='*72}\nBENCH {name}\n{'='*72}")
         try:
-            suites[name]()
+            fn = suites[name]
+            if args.smoke and "smoke" in inspect.signature(fn).parameters:
+                fn(smoke=True)
+            else:
+                fn()
             print(f"[{name}] done in {time.time()-t0:.0f}s")
         except Exception:
             failures.append(name)

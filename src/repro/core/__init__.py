@@ -14,7 +14,14 @@ from repro.core.bayesopt import (
     cherrypick_search,
     ruya_search,
 )
-from repro.core.gp import GPPosterior, fit_gp, gp_predict, matern52
+from repro.core.gp import (
+    GPPosterior,
+    fit_gp,
+    gp_predict,
+    matern52,
+    matern52_from_sqdist,
+    pairwise_sqdist,
+)
 from repro.core.memory_model import (
     MemoryCategory,
     MemoryModel,
@@ -40,6 +47,8 @@ __all__ = [
     "fit_memory_model",
     "gp_predict",
     "matern52",
+    "matern52_from_sqdist",
+    "pairwise_sqdist",
     "probability_of_improvement",
     "profile_job",
     "ruya_search",

@@ -29,7 +29,13 @@ import numpy as np
 from repro.core import fast_bo
 from repro.core.search_space import SearchSpace
 
-__all__ = ["BOSettings", "SearchTrace", "cherrypick_search", "ruya_search"]
+__all__ = [
+    "BOSettings",
+    "SearchTrace",
+    "cherrypick_search",
+    "ruya_search",
+    "trial_budget",
+]
 
 CostFn = Callable[[int], float]
 
@@ -68,6 +74,23 @@ class SearchTrace:
         return None
 
 
+def trial_budget(n_prio: int, n_rem: int, settings: BOSettings) -> int:
+    """Per-job trial budget — and therefore the packed-buffer capacity B.
+
+    THE single source of this formula: B sets the static (B,B)
+    factorization extent of the packed BO step, so the sequential and
+    batched engines must compute it identically for their float32 traces
+    to stay bit-identical.  The budget floor is the scripted init count —
+    the sequential engine observes every init pick before its first
+    budget check.
+    """
+    n_init = min(settings.n_init, n_prio)
+    total = n_prio + n_rem
+    if settings.max_iters is not None:
+        total = min(total, max(settings.max_iters, n_init))
+    return total
+
+
 def _bo_loop(
     space: SearchSpace,
     cost_fn: CostFn,
@@ -86,18 +109,28 @@ def _bo_loop(
     phase_boundary: Optional[int] = None
     encoded_all = np.asarray(space.encoded(), np.float32)
 
-    # Fixed-shape state for the jitted BO step.
     obs_mask = np.zeros(n, bool)
-    y = np.zeros(n, np.float32)
+
+    # Packed-buffer capacity: `trial_budget` is shared with the fleet
+    # engine, so both factorize (B,B) systems of identical static extent —
+    # a prerequisite for bit-identical traces.
+    pools_raw = [list(pool) for pool in candidate_order]
+    n_prio = len(pools_raw[0]) if pools_raw else 0
+    n_rem = sum(len(p) for p in pools_raw[1:])
+    capacity = max(trial_budget(n_prio, n_rem, settings), 1)
+
+    # Device-resident probe over the shared fleet_step program; built lazily
+    # at the first BO step (a search that only runs scripted init picks, or
+    # has empty pools, never touches the device).
+    probe: Optional[fast_bo.SequentialProbe] = None
 
     def observe(idx: int) -> None:
         c = float(cost_fn(idx))
         tried.append(idx)
         costs.append(c)
         obs_mask[idx] = True
-        y[idx] = c
 
-    for phase, pool in enumerate(candidate_order):
+    for phase, pool in enumerate(pools_raw):
         pool = [int(i) for i in pool if not obs_mask[i]]
         if not pool:
             continue
@@ -115,13 +148,19 @@ def _bo_loop(
         cand_mask = np.zeros(n, bool)
         cand_mask[np.asarray(pool, np.int64)] = True
 
+        if probe is not None:
+            probe.set_pool(cand_mask)
+
         while bool(np.any(cand_mask & ~obs_mask)):
             if settings.max_iters is not None and len(tried) >= settings.max_iters:
                 return SearchTrace(tried, costs, stop_iteration, phase_boundary)
-            pick, max_ei, best = fast_bo.bo_step(
-                encoded_all, obs_mask, y, cand_mask, xi=settings.xi
-            )
-            pick, max_ei, best = int(pick), float(max_ei), float(best)
+            if probe is None:
+                probe = fast_bo.SequentialProbe(
+                    encoded_all, capacity, xi=settings.xi
+                )
+                probe.set_pool(cand_mask)
+                probe.start(obs_mask, tried, costs)
+            pick, max_ei, best = probe.step(costs[-1] if costs else 0.0)
             # The threshold product is rounded to float32 to match the fleet
             # engine's on-device criterion bit-for-bit (both operands of the
             # comparison are then exactly representable float32 values).

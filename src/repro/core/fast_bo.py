@@ -1,60 +1,107 @@
-"""Fixed-shape, fully-jitted Bayesian-optimization step and fleet update.
+"""Packed-observation, fully-jitted Bayesian-optimization step and fleet update.
 
-The paper's evaluation repeats every search 200 times over a 69-point space,
-to exhaustion — thousands of GP fits.  To keep that cheap we jit ONE step
-function over fixed shapes: all N configurations are always present, and
-boolean masks select the observed set and the candidate pool.  Padding is
-exact (not approximate): the padded kernel rows are identity rows, so the
-Cholesky factorization block-decouples and padded points contribute nothing
-to the posterior.
+The paper replays every search 200× over a 69-point space; the ROADMAP's
+north star is production-scale spaces.  At most B points are ever observed
+per search (B = the trial budget, 16–32 in the paper's regime), so the GP
+never needs full-extent linear algebra: this module keeps the whole space
+only as masks plus a once-per-search pairwise-distance tensor, and runs all
+per-step factorizations at the fixed packed capacity B.
 
-`bo_step_core` performs: standardize-y → Matérn-5/2 kernels for the 6
-lengthscales (computed once, shared by the 3 noise levels) → select
-(lengthscale, noise) by masked log-marginal-likelihood over the 18-point
-grid (same grid as `gp.py`) → posterior at all N points for the selected
-hyperparameters only → Expected Improvement on the candidate mask → argmax.
+Per-step cost (n = space extent, d = features, B = trial capacity):
 
-`fleet_step` wraps the core with one search iteration's bookkeeping
-(scripted init picks, two-phase candidate pools, stop/phase registers, the
-observation itself) over a state pytree that lives on device.  It is the
-single compiled program behind BOTH engines:
+    layout          kernels              factorizations   posterior
+    dense (old)     6·O(n²·d)            18·O(n³)         O(n²)
+    packed (now)    6·O(B²) + O(B·n)     18·O(B³)         O(B·n)
 
-  * the fleet engine (`repro.fleet.batched_engine`) vmaps it over a chunk of
-    jobs and applies it in a host-driven lockstep loop (state stays on
-    device; the host only counts iterations);
-  * the sequential driver's `bo_step` probes the identical function for one
-    iteration at batch extent 2.
+plus one O(n²·d) distance precompute per *search* (`precompute_d2`), shared
+by every step: scalar lengthscales only rescale d², so the 18-point
+(lengthscale, noise) grid and the cross-covariance are all gathers and
+elementwise rescales of that static tensor.  Exhaustive searches (B = n)
+match the old cost; budgeted searches over large spaces drop the n³ wall.
 
-This sharing is deliberate: XLA:CPU float32 results differ between
-compilation contexts — a `lax.while_loop` body computes different last-ulp
-floats than the same ops standalone (and batch extent 1 differs from
-extent ≥ 2, which is why the probe pads to 2) — and in the late-search
-regime, where dozens of candidates carry near-zero EI, one ulp flips argmax
-picks.  Executing one program everywhere is what makes sequential and
-batched searches trace-identical (asserted by `tests/test_fleet.py`).
-A `lax.while_loop` around `fleet_step` was tried and rejected: XLA:CPU runs
-while bodies ~5-8× slower than the identical standalone computation, which
-inverted the fleet speedup.
+Layout.  `FleetState` holds the trial log `tried` (B,) and a packed target
+buffer `py` (B,) aligned with it — observation k lives in slot k, in trial
+order.  `bo_step_core` gathers the (B,B) training block and the (B,n)
+cross block out of the precomputed d² tensor via `tried`, standardizes the
+packed targets, selects (lengthscale, noise) by masked log marginal
+likelihood over the 18-point grid, computes the posterior over all n points
+for the winner only, and argmaxes Expected Improvement over the candidate
+mask.
 
-`tests/test_core_bo.py` property-checks this fast path against the readable
-reference implementation in `gp.py`/`acquisition.py`.
+Padding is exact, not approximate.  Packed slots ≥ t are masked: their
+kernel rows/columns are zeroed and their diagonal entries set to 1, so the
+(B,B) Cholesky block-decouples — L is the factor of the observed block
+direct-summed with an identity — and padded slots contribute exactly 0 to
+alpha, the posterior mean, and the variance correction (their cross rows
+are zeroed too).  Garbage in padded `tried`/`py` slots is inert as long as
+it is finite (the engine only ever writes -1/0 there); padded *space*
+points (mask-level padding) are likewise never candidates and never
+observed.
+
+Float32 discipline (unchanged from the dense engine): XLA:CPU float32
+results differ between compilation contexts — batch extent 1 compiles to
+different programs than extents ≥ 2 (hence everything runs at extent ≥ 2),
+extents 2–8 are empirically invariant, ≥ 12 diverge, and `lax.while_loop`
+bodies compute different last-ulp floats (and run 5-8× slower) than the
+same ops standalone.  In the late-search regime one ulp flips argmax picks,
+so BOTH engines execute the single `fleet_step` program:
+
+  * the fleet engine (`repro.fleet.batched_engine`) vmaps it over lockstep
+    chunks of 2–8 jobs, grouped by (space shape, packed capacity B) so
+    every job factorizes the same static extents as a solo run would;
+  * the sequential driver's `SequentialProbe` carries a batch-extent-2
+    state (row 1 a discarded duplicate) on device across a whole search,
+    donating it to each jitted probe call: per step one f32 scalar goes up
+    (the latest observed cost, patched into the packed buffer) and three
+    scalars come back — no per-iteration copies of any state buffer.
+
+`tests/test_fleet.py` asserts sequential↔batched trace identity
+seed-for-seed; `tests/test_core_bo.py` property-checks the packed math
+against the readable reference in `gp.py`/`acquisition.py` and the retained
+dense path (`bo_step_core_dense`, kept as the full-extent baseline for
+`benchmarks/fleet_bench.py`'s scaling sweep).
 """
 
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.gp import GPParams, matern52
+from repro.core.gp import GPParams, matern52, matern52_from_sqdist, pairwise_sqdist
 
-__all__ = ["FleetState", "bo_step", "bo_step_core", "fleet_step"]
+__all__ = [
+    "FleetState",
+    "SequentialProbe",
+    "bo_step",
+    "bo_step_core",
+    "bo_step_core_dense",
+    "fleet_step",
+    "precompute_d2",
+]
 
 _JITTER = 1e-8
 _LENGTHSCALES = (0.1, 0.25, 0.5, 1.0, 2.0, 4.0)
 _NOISES = (1e-4, 1e-2, 1e-1)
+
+
+@jax.jit
+def _pairwise_sqdist_f32(encoded: jax.Array) -> jax.Array:
+    return pairwise_sqdist(encoded.astype(jnp.float32))
+
+
+def precompute_d2(encoded) -> jax.Array:
+    """(n,n) raw pairwise squared distances over the encoded space, float32.
+
+    Computed once per search — UNBATCHED, so sequential and fleet runs of
+    the same space get bit-identical tensors — and threaded through every
+    step as a constant.  No step ever touches the (n,d) features again.
+    """
+    return _pairwise_sqdist_f32(jnp.asarray(np.asarray(encoded, np.float32)))
 
 
 def _masked_posterior(
@@ -68,9 +115,9 @@ def _masked_posterior(
     over ALL n points for one (lengthscale, noise).
 
     This is the specification `tests/test_core_bo.py` checks against the
-    readable subset-GP in `gp.py`; `bo_step_core` computes the same math in
-    a grid-factored layout (kernels shared across noise levels, the full
-    posterior only for the selected hyperparameters).
+    readable subset-GP in `gp.py`; the packed `bo_step_core` computes the
+    same math with the observed set gathered into a (B,) buffer instead of
+    masked in place at extent n.
     """
     m = obs_mask.astype(x.dtype)
     params = GPParams(lengthscale=lengthscale, amplitude=jnp.asarray(1.0, x.dtype), noise=noise)
@@ -92,13 +139,105 @@ def _masked_posterior(
 
 
 def bo_step_core(
+    d2: jax.Array,  # (n, n) raw pairwise squared distances (precompute_d2)
+    tried: jax.Array,  # (B,) i32 trial log in trial order, -1 padded
+    py: jax.Array,  # (B,) f32 packed observed costs, aligned with tried
+    t: jax.Array,  # () i32 observations made (valid packed slots)
+    obs_mask: jax.Array,  # (n,) bool — configurations already tried
+    cand_mask: jax.Array,  # (n,) bool — current candidate pool
+    xi: float = 0.0,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One packed BO iteration, traceable.  Returns (pick_index, max_ei, best).
+
+    All training-side linear algebra runs at the packed capacity B; the
+    space extent n only appears in gathers, the (B,n) cross rescale, and
+    the EI argmax.
+    """
+    b = tried.shape[0]
+    pmask = jnp.arange(b) < t
+    pm = pmask.astype(jnp.float32)
+    idx = jnp.maximum(tried, 0)  # padded slots gather row 0; masked below
+
+    py = py.astype(jnp.float32)
+    n_obs = jnp.maximum(jnp.sum(pm), 1.0)
+    y_mean = jnp.sum(py * pm) / n_obs
+    y_var = jnp.sum(pm * (py - y_mean) ** 2) / n_obs
+    y_std = jnp.maximum(jnp.sqrt(y_var), 1e-8)
+    y_train = jnp.where(pmask, (py - y_mean) / y_std, 0.0)
+
+    d2_bb = d2[idx[:, None], idx[None, :]]  # (B, B) training block
+    d2_bn = d2[idx]  # (B, n) cross block
+
+    # The kernel depends on the lengthscale only, and a scalar lengthscale
+    # only rescales d²: 6 elementwise rescales of one gathered (B,B) block
+    # serve all 18 (lengthscale, noise) grid points.
+    ls = jnp.asarray(_LENGTHSCALES, jnp.float32)
+    nz = jnp.asarray(_NOISES, jnp.float32)
+    ks = jax.vmap(lambda l: matern52_from_sqdist(d2_bb, l))(ls)  # (6, B, B)
+
+    mm = pm[:, None] * pm[None, :]
+    # Mask once per lengthscale (6 products), not per grid combo (18); the
+    # noise only touches the diagonal, added by a B-element scatter.
+    ks_masked = ks * mm[None]  # (6, B, B)
+    diag_idx = jnp.arange(b)
+
+    def factorize(k_masked, noise):
+        """Masked-kernel Cholesky + lml for one (lengthscale, noise)."""
+        diag = jnp.where(pmask, noise + _JITTER, 1.0)
+        k_eff = k_masked.at[diag_idx, diag_idx].add(diag)
+        chol = jnp.linalg.cholesky(k_eff)
+        alpha = jax.scipy.linalg.cho_solve((chol, True), y_train)
+        lml = (
+            -0.5 * y_train @ alpha
+            - jnp.sum(jnp.log(jnp.diagonal(chol)) * pm)
+            - 0.5 * jnp.sum(pm) * jnp.log(2.0 * jnp.pi)
+        )
+        return lml, chol, alpha
+
+    # ls-major grid order (matches jnp.meshgrid(..., indexing="ij")):
+    # combo h = (h // 3)-th lengthscale, (h % 3)-th noise.
+    ks18 = jnp.repeat(ks_masked, nz.shape[0], axis=0)  # (18, B, B)
+    nz18 = jnp.tile(nz, ls.shape[0])  # (18,)
+    lmls, chols, alphas = jax.vmap(factorize)(ks18, nz18)
+    lmls = jnp.where(jnp.isfinite(lmls), lmls, -jnp.inf)
+    best_h = jnp.argmax(lmls)
+
+    # Posterior over all n points for the selected hyperparameters only:
+    # one (B,n) rescale of the gathered cross block, masked training rows.
+    k_star = matern52_from_sqdist(d2_bn, ls[best_h // nz.shape[0]]) * pm[:, None]
+    mean_n = k_star.T @ alphas[best_h]
+    v = jax.scipy.linalg.solve_triangular(chols[best_h], k_star, lower=True)
+    var_n = jnp.maximum(1.0 - jnp.sum(v * v, axis=0), 1e-12)
+    std_n = jnp.sqrt(var_n)
+
+    # De-standardize.
+    mean = mean_n * y_std + y_mean
+    std = std_n * y_std
+
+    best = jnp.min(jnp.where(pmask, py, jnp.inf))
+    improvement = best - mean - xi
+    z = improvement / jnp.maximum(std, 1e-12)
+    cdf = 0.5 * (1.0 + jax.scipy.special.erf(z / jnp.sqrt(2.0)))
+    pdf = jnp.exp(-0.5 * z * z) / jnp.sqrt(2.0 * jnp.pi)
+    ei = jnp.maximum(improvement * cdf + std * pdf, 0.0)
+    ei = jnp.where(cand_mask & ~obs_mask, ei, -jnp.inf)
+    pick = jnp.argmax(ei)
+    return pick, jnp.max(ei), best
+
+
+def bo_step_core_dense(
     encoded: jax.Array,  # (n, d) standardized features of the whole space
     obs_mask: jax.Array,  # (n,) bool — configurations already tried
     y: jax.Array,  # (n,) observed costs (garbage where not observed)
     cand_mask: jax.Array,  # (n,) bool — current candidate pool
     xi: float = 0.0,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """One BO iteration, traceable.  Returns (pick_index, max_ei, best)."""
+    """The pre-packed full-extent BO step: O(18n³) per call.
+
+    Retained as the dense baseline `benchmarks/fleet_bench.py` times the
+    packed engine against, and as a second reference for the packed math in
+    `tests/test_core_bo.py`.  Not used by either search engine.
+    """
     x = encoded.astype(jnp.float32)
     m = obs_mask.astype(x.dtype)
     n_obs = jnp.maximum(jnp.sum(m), 1.0)
@@ -108,31 +247,17 @@ def bo_step_core(
     y_std = jnp.maximum(jnp.sqrt(y_var), 1e-8)
     y_n = jnp.where(obs_mask, (y - y_mean) / y_std, 0.0)
 
-    # The kernel depends on the lengthscale only: 6 kernels serve all 18
-    # (lengthscale, noise) grid points.
     ls = jnp.asarray(_LENGTHSCALES, x.dtype)
     nz = jnp.asarray(_NOISES, x.dtype)
-
-    def kernel_for(lengthscale):
-        params = GPParams(
-            lengthscale=lengthscale,
-            amplitude=jnp.asarray(1.0, x.dtype),
-            noise=jnp.asarray(0.0, x.dtype),
-        )
-        return matern52(x, x, params)
-
-    ks = jax.vmap(kernel_for)(ls)  # (6, n, n)
+    d2 = pairwise_sqdist(x)
+    ks = jax.vmap(lambda l: matern52_from_sqdist(d2, l))(ls)  # (6, n, n)
 
     mm = m[:, None] * m[None, :]
     y_train = y_n * m
-    # Mask once per lengthscale (6 products), not per grid combo (18); the
-    # noise only touches the diagonal, added by an n-element scatter instead
-    # of materializing a dense diag matrix per combo.
     ks_masked = ks * mm[None]  # (6, n, n)
     diag_idx = jnp.arange(ks.shape[-1])
 
     def factorize(k_masked, noise):
-        """Masked-kernel Cholesky + lml for one (lengthscale, noise)."""
         diag = jnp.where(obs_mask, noise + _JITTER, 1.0)
         k_eff = k_masked.at[diag_idx, diag_idx].add(diag)
         chol = jnp.linalg.cholesky(k_eff)
@@ -144,23 +269,18 @@ def bo_step_core(
         )
         return lml, chol, alpha
 
-    # ls-major grid order (matches jnp.meshgrid(..., indexing="ij")):
-    # combo h = (h // 3)-th lengthscale, (h % 3)-th noise.
     ks18 = jnp.repeat(ks_masked, nz.shape[0], axis=0)  # (18, n, n)
     nz18 = jnp.tile(nz, ls.shape[0])  # (18,)
     lmls, chols, alphas = jax.vmap(factorize)(ks18, nz18)
     lmls = jnp.where(jnp.isfinite(lmls), lmls, -jnp.inf)
     best_h = jnp.argmax(lmls)
 
-    # Posterior over all n points for the selected hyperparameters only.
-    # (ks, not ks_masked: prediction columns must stay unmasked.)
     k_star = ks[best_h // nz.shape[0]] * m[:, None]  # masked training rows
     mean_n = k_star.T @ alphas[best_h]
     v = jax.scipy.linalg.solve_triangular(chols[best_h], k_star, lower=True)
     var_n = jnp.maximum(1.0 - jnp.sum(v * v, axis=0), 1e-12)
     std_n = jnp.sqrt(var_n)
 
-    # De-standardize.
     mean = mean_n * y_std + y_mean
     std = std_n * y_std
 
@@ -176,11 +296,15 @@ def bo_step_core(
 
 
 class FleetState(NamedTuple):
-    """Per-job search state, device-resident between `fleet_step` calls."""
+    """Per-job search state, device-resident between `fleet_step` calls.
 
-    obs: jax.Array  # (n,) bool — observation mask
-    y: jax.Array  # (n,) f32 — observed costs (0 where unobserved)
-    tried: jax.Array  # (T,) i32 — trial log, -1 padded
+    The packed buffers (`tried`, `py`) have static capacity B = the job's
+    trial budget; slot k holds the k-th observation, in trial order.
+    """
+
+    obs: jax.Array  # (n,) bool — observation mask over the space
+    tried: jax.Array  # (B,) i32 — trial log, -1 padded
+    py: jax.Array  # (B,) f32 — packed observed costs, aligned with tried
     t: jax.Array  # () i32 — trials made
     stop: jax.Array  # () i32 — stop-criterion iteration, -1 = not yet
     pb: jax.Array  # () i32 — phase boundary, -1 = still in phase 0
@@ -191,7 +315,7 @@ class FleetState(NamedTuple):
 
 def fleet_step(
     state: FleetState,
-    encoded: jax.Array,  # (n, d)
+    d2: jax.Array,  # (n, n) precomputed raw squared distances
     costs: jax.Array,  # (n,) f32 — full observation table
     prio_mask: jax.Array,  # (n,) bool — priority pool (phase 0)
     rem_mask: jax.Array,  # (n,) bool — remaining pool (phase 1)
@@ -208,8 +332,8 @@ def fleet_step(
     complete two-phase search; semantics mirror
     `repro.core.bayesopt._bo_loop` exactly.  A no-op once the job is done.
     """
-    obs, y, tried, t, stop, pb = (
-        state.obs, state.y, state.tried, state.t, state.stop, state.pb,
+    obs, tried, py, t, stop, pb = (
+        state.obs, state.tried, state.py, state.t, state.stop, state.pb,
     )
     n_init_slots = init_picks.shape[0]
 
@@ -228,7 +352,7 @@ def fleet_step(
     pb = jnp.where(~state.done & (pb < 0) & ~in_phase0 & jnp.any(rem_left), t, pb)
 
     is_init = t < init_count
-    bo_pick, max_ei, best = bo_step_core(encoded, obs, y, cand, xi)
+    bo_pick, max_ei, best = bo_step_core(d2, tried, py, t, obs, cand, xi)
     scripted = init_picks[jnp.clip(t, 0, n_init_slots - 1)]
     pick = jnp.where(is_init, scripted, bo_pick).astype(jnp.int32)
 
@@ -244,75 +368,156 @@ def fleet_step(
     halt = fire & ~to_exhaustion
     observe = live & has_cand & ~halt
 
+    slot = jnp.minimum(t, tried.shape[0] - 1)
     obs = jnp.where(observe, obs.at[pick].set(True), obs)
-    y = jnp.where(observe, y.at[pick].set(costs[pick]), y)
-    tried = jnp.where(observe, tried.at[jnp.minimum(t, tried.shape[0] - 1)].set(pick), tried)
+    tried = jnp.where(observe, tried.at[slot].set(pick), tried)
+    py = jnp.where(observe, py.at[slot].set(costs[pick]), py)
     t = t + observe.astype(jnp.int32)
     # A job is done when its candidates ran out, its stop criterion halted
     # it, or its trial budget is exhausted (the last also settles zero-budget
     # dummy pads so early-stop polling can see an all-done chunk).
     done = state.done | (live & (~has_cand | halt)) | ~budget_left
     return FleetState(
-        obs=obs, y=y, tried=tried, t=t, stop=stop, pb=pb, done=done,
+        obs=obs, tried=tried, py=py, t=t, stop=stop, pb=pb, done=done,
         last_ei=jnp.where(live, max_ei, state.last_ei),
         last_best=jnp.where(live, best, state.last_best),
     )
 
 
-@partial(jax.jit, static_argnames=("xi",))
-def _probe_step(encoded, obs_mask, y, cand_mask, xi):
-    """One `fleet_step` application at batch extent 2 (row 1 is a discarded
-    duplicate — extent 1 compiles to different float32 numerics)."""
-    n = encoded.shape[0]
+@partial(jax.jit, static_argnames=("xi",), donate_argnums=(0,))
+def _probe_step(
+    state2: FleetState,  # batch-extent-2 state (row 1: discarded duplicate)
+    d2_2, costs2, prio2, rem2, init_picks2, init_count2, last_cost, *, xi: float
+):
+    """One `fleet_step` application at batch extent 2 (extent 1 compiles to
+    different float32 numerics).  The state is DONATED: XLA updates the
+    packed buffers in place instead of copying them each iteration.
 
-    def probe(e, o, yy, c):
-        state = FleetState(
-            obs=o,
-            y=yy,
-            tried=jnp.full(1, -1, jnp.int32),
-            t=jnp.asarray(0, jnp.int32),
-            stop=jnp.asarray(-1, jnp.int32),
-            pb=jnp.asarray(-1, jnp.int32),
-            done=jnp.asarray(False),
-            last_ei=jnp.asarray(0.0, jnp.float32),
-            last_best=jnp.asarray(jnp.inf, jnp.float32),
-        )
-        out = fleet_step(
-            state,
-            e,
-            jnp.zeros(n, jnp.float32),  # observation values are irrelevant
-            c,  # candidate pool as the (only) phase-0 pool
-            jnp.zeros(n, bool),
-            jnp.zeros(1, jnp.int32),
-            jnp.asarray(0, jnp.int32),  # no scripted init
-            jnp.asarray(1, jnp.int32),  # budget for exactly one trial
+    The probe runs before the cost of its pick is known, so slot t-1 holds a
+    placeholder 0 from the previous call's observation; `last_cost` patches
+    in the real value before any math runs.
+    """
+    t_prev = state2.t[0]
+    slot = jnp.maximum(t_prev - 1, 0)
+    val = jnp.where(t_prev > 0, last_cost, state2.py[0, slot])
+    state2 = state2._replace(py=state2.py.at[:, slot].set(val))
+
+    def one(s, dd, c, p, r, ip, ic):
+        return fleet_step(
+            s, dd, c, p, r, ip, ic,
+            s.t + 1,  # budget for exactly one more trial
             jnp.asarray(0, jnp.int32),
             jnp.asarray(0.0, jnp.float32),
             jnp.asarray(True),  # never halt inside the probe
             xi,
         )
-        return out.tried[0], out.last_ei, out.last_best
 
-    two = lambda a: jnp.stack([a, a])
-    pick, last_ei, last_best = jax.vmap(probe)(
-        two(encoded), two(obs_mask), two(y), two(cand_mask)
-    )
-    return pick[0], last_ei[0], last_best[0]
+    out = jax.vmap(one)(state2, d2_2, costs2, prio2, rem2, init_picks2, init_count2)
+    b = out.tried.shape[1]
+    pick = out.tried[0, jnp.minimum(t_prev, b - 1)]
+    return out, pick, out.last_ei[0], out.last_best[0]
+
+
+class SequentialProbe:
+    """Device-resident sequential BO stepper over the shared `fleet_step`.
+
+    Carries the packed search state on device between steps at batch extent
+    2, donating it back to every jitted probe call, so a sequential search
+    makes no per-iteration device copies: per step, one f32 scalar goes up
+    (the latest observed cost) and (pick, max_ei, best) scalars come back.
+
+    ``capacity`` must equal the trial budget the fleet engine would compute
+    for the same job — both engines then factorize (B,B) systems of the
+    same static extent, which is what keeps their traces bit-identical.
+    """
+
+    def __init__(self, encoded, capacity: int, xi: float = 0.0):
+        encoded = np.asarray(encoded, np.float32)
+        self._n = encoded.shape[0]
+        self._b = max(int(capacity), 1)
+        self._xi = float(xi)
+        d2 = precompute_d2(encoded)
+        self._d2_2 = jnp.stack([d2, d2])
+        # Observation values are irrelevant inside the probe: the real cost
+        # arrives via `last_cost` on the following call.
+        self._costs2 = jnp.zeros((2, self._n), jnp.float32)
+        self._rem2 = jnp.zeros((2, self._n), bool)
+        self._init_picks2 = jnp.zeros((2, 1), jnp.int32)
+        self._init_count2 = jnp.zeros(2, jnp.int32)  # no scripted init
+        self._pool2 = None
+        self._state = None
+
+    def set_pool(self, pool_mask) -> None:
+        """Install the current phase's candidate pool (device copy, once)."""
+        pool = jnp.asarray(np.asarray(pool_mask, bool))
+        self._pool2 = jnp.stack([pool, pool])
+
+    def start(self, obs_mask, trial_order: Sequence[int], trial_costs) -> None:
+        """Build the device state from the host-side search history."""
+        k = len(trial_order)
+        if k > self._b:
+            raise ValueError(f"{k} observations exceed packed capacity {self._b}")
+        tried = np.full(self._b, -1, np.int32)
+        py = np.zeros(self._b, np.float32)
+        tried[:k] = np.asarray(trial_order, np.int32)
+        py[:k] = np.asarray(trial_costs, np.float32)
+
+        def two(a):
+            a = jnp.asarray(a)
+            return jnp.stack([a, a])
+
+        self._state = FleetState(
+            obs=two(np.asarray(obs_mask, bool)),
+            tried=two(tried),
+            py=two(py),
+            t=two(np.asarray(k, np.int32)),
+            stop=two(np.asarray(-1, np.int32)),
+            pb=two(np.asarray(-1, np.int32)),
+            done=two(np.asarray(False)),
+            last_ei=two(np.asarray(0.0, np.float32)),
+            last_best=two(np.asarray(np.inf, np.float32)),
+        )
+
+    def step(self, last_cost: float) -> Tuple[int, float, float]:
+        """One BO iteration.  Returns (pick_index, max_ei, best_observed)."""
+        if self._state is None or self._pool2 is None:
+            raise RuntimeError("call start() and set_pool() before step()")
+        self._state, pick, ei, best = _probe_step(
+            self._state, self._d2_2, self._costs2, self._pool2, self._rem2,
+            self._init_picks2, self._init_count2,
+            jnp.asarray(last_cost, jnp.float32), xi=self._xi,
+        )
+        return int(pick), float(ei), float(best)
 
 
 def bo_step(
-    encoded: jax.Array,
-    obs_mask: jax.Array,
-    y: jax.Array,
-    cand_mask: jax.Array,
+    encoded,
+    obs_mask,
+    y,
+    cand_mask,
     xi: float = 0.0,
-) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """One BO iteration.  Returns (pick_index, max_ei, best_observed_cost).
+    *,
+    trial_order: Optional[Sequence[int]] = None,
+    capacity: Optional[int] = None,
+) -> Tuple[int, float, float]:
+    """One standalone BO iteration.  Returns (pick_index, max_ei, best).
 
-    Probes the shared `fleet_step` program so the sequential engine executes
-    bit-identical float ops to the batched fleet engine.
+    Packs the observed set on the fly — in ascending index order unless
+    ``trial_order`` is given (a sequential search passes its real trial
+    order so the packed buffer matches the fleet engine's bit-for-bit) —
+    and probes the shared `fleet_step` program once.  ``capacity`` defaults
+    to the number of observations (a full buffer).
     """
-    return _probe_step(
-        jnp.asarray(encoded), jnp.asarray(obs_mask), jnp.asarray(y),
-        jnp.asarray(cand_mask), xi,
+    obs_mask = np.asarray(obs_mask, bool)
+    y = np.asarray(y, np.float32)
+    order = (
+        np.asarray(trial_order, np.int64)
+        if trial_order is not None
+        else np.flatnonzero(obs_mask)
     )
+    cap = int(capacity) if capacity is not None else max(1, len(order))
+    probe = SequentialProbe(encoded, cap, xi=xi)
+    probe.set_pool(cand_mask)
+    probe.start(obs_mask, order, y[order])
+    last = float(y[order][-1]) if len(order) else 0.0
+    return probe.step(last)

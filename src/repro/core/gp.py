@@ -18,7 +18,15 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["GPParams", "GPPosterior", "matern52", "fit_gp", "gp_predict"]
+__all__ = [
+    "GPParams",
+    "GPPosterior",
+    "matern52",
+    "matern52_from_sqdist",
+    "pairwise_sqdist",
+    "fit_gp",
+    "gp_predict",
+]
 
 _JITTER = 1e-8
 
@@ -45,7 +53,13 @@ class GPPosterior:
 
 
 def matern52(x1: jax.Array, x2: jax.Array, params: GPParams) -> jax.Array:
-    """Matérn-5/2 kernel matrix between (n,d) and (m,d)."""
+    """Matérn-5/2 kernel matrix between (n,d) and (m,d).
+
+    Handles vector (per-feature) lengthscales.  For the scalar-lengthscale
+    hyperparameter grids, use `pairwise_sqdist` + `matern52_from_sqdist`
+    instead: the raw distance tensor is lengthscale-independent, so the six
+    grid lengthscales share one d² computation.
+    """
     scaled1 = x1 / params.lengthscale
     scaled2 = x2 / params.lengthscale
     # Pairwise Euclidean distances, numerically clamped.
@@ -59,18 +73,32 @@ def matern52(x1: jax.Array, x2: jax.Array, params: GPParams) -> jax.Array:
     return params.amplitude * (1.0 + sqrt5_d + 5.0 / 3.0 * d**2) * jnp.exp(-sqrt5_d)
 
 
-def _log_marginal_likelihood(
-    x: jax.Array, y: jax.Array, params: GPParams
-) -> jax.Array:
-    n = x.shape[0]
-    k = matern52(x, x, params) + (params.noise + _JITTER) * jnp.eye(n)
-    chol = jnp.linalg.cholesky(k)
-    alpha = jax.scipy.linalg.cho_solve((chol, True), y)
-    return (
-        -0.5 * y @ alpha
-        - jnp.sum(jnp.log(jnp.diagonal(chol)))
-        - 0.5 * n * jnp.log(2.0 * jnp.pi)
+def pairwise_sqdist(x1: jax.Array, x2: jax.Array = None) -> jax.Array:
+    """Raw pairwise squared Euclidean distances between (n,d) and (m,d).
+
+    Lengthscale-free: a scalar lengthscale only rescales d² (d²/ls²), so one
+    precomputed tensor serves every point of a lengthscale grid — and, in
+    `fast_bo`, every step of a whole search.  Clamped at zero (the quadratic
+    expansion can go slightly negative in float32).
+    """
+    if x2 is None:
+        x2 = x1
+    d2 = (
+        jnp.sum(x1**2, -1)[:, None]
+        + jnp.sum(x2**2, -1)[None, :]
+        - 2.0 * x1 @ x2.T
     )
+    return jnp.maximum(d2, 0.0)
+
+
+def matern52_from_sqdist(
+    d2: jax.Array, lengthscale: jax.Array, amplitude: jax.Array = 1.0
+) -> jax.Array:
+    """Matérn-5/2 from precomputed raw squared distances, scalar lengthscale."""
+    s2 = jnp.maximum(d2 / (lengthscale * lengthscale), 1e-12)
+    d = jnp.sqrt(s2)
+    sqrt5_d = jnp.sqrt(5.0) * d
+    return amplitude * (1.0 + sqrt5_d + 5.0 / 3.0 * s2) * jnp.exp(-sqrt5_d)
 
 
 def _candidate_grid(n_features: int) -> Tuple[jax.Array, jax.Array]:
@@ -99,9 +127,21 @@ def fit_gp(x: jax.Array, y: jax.Array) -> GPPosterior:
 
     ls_grid, nz_grid = _candidate_grid(x.shape[-1])
 
+    # One raw d² tensor serves the whole (lengthscale, noise) grid: scalar
+    # lengthscales only rescale it.
+    n = x.shape[0]
+    d2 = pairwise_sqdist(x)
+    eye = jnp.eye(n, dtype=x.dtype)
+
     def lml_for(ls, nz):
-        p = GPParams(lengthscale=ls, amplitude=jnp.asarray(1.0, x.dtype), noise=nz)
-        return _log_marginal_likelihood(x, y_n, p)
+        k = matern52_from_sqdist(d2, ls) + (nz + _JITTER) * eye
+        chol = jnp.linalg.cholesky(k)
+        alpha = jax.scipy.linalg.cho_solve((chol, True), y_n)
+        return (
+            -0.5 * y_n @ alpha
+            - jnp.sum(jnp.log(jnp.diagonal(chol)))
+            - 0.5 * n * jnp.log(2.0 * jnp.pi)
+        )
 
     lmls = jax.vmap(lml_for)(ls_grid, nz_grid)
     lmls = jnp.where(jnp.isfinite(lmls), lmls, -jnp.inf)
@@ -112,8 +152,7 @@ def fit_gp(x: jax.Array, y: jax.Array) -> GPPosterior:
         noise=nz_grid[best],
     )
 
-    n = x.shape[0]
-    k = matern52(x, x, params) + (params.noise + _JITTER) * jnp.eye(n, dtype=x.dtype)
+    k = matern52_from_sqdist(d2, params.lengthscale) + (params.noise + _JITTER) * eye
     chol = jnp.linalg.cholesky(k)
     alpha = jax.scipy.linalg.cho_solve((chol, True), y_n)
     return GPPosterior(

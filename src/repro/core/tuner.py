@@ -9,6 +9,12 @@ This module is environment-agnostic.  An environment supplies:
 Two environments ship with the repo: the Scout-like cluster emulator
 (`repro.cluster`) reproducing the paper's evaluation, and the TPU
 sharding-configuration autotuner (`repro.launch.autotune`).
+
+Both execution styles run the packed-observation BO engine (`fast_bo`):
+`cost_table` replay goes through the batched fleet engine, a live
+`cost_fn` through the sequential driver's device-resident probe — one
+shared compiled step, identical traces (see `fast_bo` for the layout and
+the float32 discipline).
 """
 
 from __future__ import annotations

@@ -5,13 +5,18 @@ Python-loop iteration, paying a dispatch + host round-trip per BO step —
 thousands of synchronizations for a fleet.  Here the whole fleet advances in
 lockstep:
 
-  * `jax.vmap` over jobs lifts the per-job state (observation mask, targets,
-    trial log, phase/stop registers — `fast_bo.FleetState`) into batched
-    arrays that stay resident on device;
+  * `jax.vmap` over jobs lifts the per-job state (observation mask, packed
+    trial log/targets, phase/stop registers — `fast_bo.FleetState`) into
+    batched arrays that stay resident on device;
   * one jitted call per iteration applies `fast_bo.fleet_step` to every job
-    at once; the host only counts iterations (all bookkeeping — including
-    per-job stopping — happens on device, and iterations dispatch
-    asynchronously, so there are no per-step host round-trips);
+    at once, with the state DONATED to the call so XLA updates the buffers
+    in place instead of copying them per iteration; the host only counts
+    iterations (all bookkeeping — including per-job stopping — happens on
+    device, and iterations dispatch asynchronously, so there are no
+    per-step host round-trips);
+  * each job's raw pairwise-distance tensor (`fast_bo.precompute_d2`) is
+    computed once up front and threaded through every iteration as a
+    constant — the packed step only gathers and rescales it;
   * `fleet_step` is the *same compiled program* the sequential path probes,
     so the two engines are trace-identical — `tests/test_fleet.py` asserts
     equal `tried`/`costs`/`stop_iteration` sequences seed-for-seed.  (A
@@ -23,7 +28,10 @@ Per-job structure is encoded as masks over a padded configuration axis:
 `priority_mask` / `remaining_mask` delimit Ruya's two phases (CherryPick is
 priority=everything, remaining=empty), and padded slots belong to neither
 pool, so they are never candidates and — by `fast_bo`'s exact masking —
-contribute nothing to any posterior.
+contribute nothing to any posterior.  Jobs are grouped by (space shape,
+packed capacity B): the packed factorizations run at static extent B, so a
+job must run at exactly the capacity the sequential engine would use for it
+to stay float32-identical.
 """
 
 from __future__ import annotations
@@ -36,8 +44,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bayesopt import BOSettings, SearchTrace
-from repro.core.fast_bo import FleetState, fleet_step
+from repro.core.bayesopt import BOSettings, SearchTrace, trial_budget
+from repro.core.fast_bo import FleetState, fleet_step, precompute_d2
 from repro.core.search_space import SearchSpace
 
 __all__ = ["BatchedTrace", "batched_search"]
@@ -79,40 +87,46 @@ class BatchedTrace:
 
 
 # Jobs are processed in lockstep chunks of this extent: small enough that
-# the (CHUNK·18, n, n) kernel intermediates stay cache-resident on CPU,
-# large enough to amortize dispatch.  Chunk extent must not affect results:
-# float32 numerics are batch-extent-invariant for extents in [2, 8] (extent
-# 1 compiles to different unbatched programs, hence the ≥2 padding below;
-# extents ≥ 12 vectorize some reductions differently and diverge —
-# verified empirically against the sequential engine, do not raise this
-# without re-running tests/test_fleet.py).
+# the (CHUNK·18, B, B) factorization intermediates stay cache-resident on
+# CPU, large enough to amortize dispatch.  Chunk extent must not affect
+# results: float32 numerics are batch-extent-invariant for extents in
+# [2, 8] (extent 1 compiles to different unbatched programs, hence the ≥2
+# padding below; extents ≥ 12 vectorize some reductions differently and
+# diverge — verified empirically against the sequential engine, do not
+# raise this without re-running tests/test_fleet.py).
 _CHUNK = 8
 # With early stopping enabled, the host polls the done flags at this period
 # (each poll syncs the dispatch queue once).
 _POLL_PERIOD = 8
 
 
-@partial(jax.jit, static_argnames=("xi",))
+@partial(jax.jit, static_argnames=("xi",), donate_argnums=(0,))
 def _fleet_update(
-    state, encoded, costs, prio_mask, rem_mask, init_picks, init_count,
+    state, d2, costs, prio_mask, rem_mask, init_picks, init_count,
     max_trials, min_obs, ei_stop_rel, to_exhaustion, *, xi: float,
 ):
-    """One lockstep iteration for a chunk of jobs (vmapped `fleet_step`)."""
+    """One lockstep iteration for a chunk of jobs (vmapped `fleet_step`).
 
-    def one(s, e, c, p, r, ip, ic, mt):
+    The state is donated: its buffers alias the outputs, so each fleet
+    iteration updates in place — no per-iteration device copies of the
+    observation mask or the packed trial buffers (asserted by
+    `benchmarks/fleet_bench.py`).
+    """
+
+    def one(s, dd, c, p, r, ip, ic, mt):
         return fleet_step(
-            s, e, c, p, r, ip, ic, mt, min_obs, ei_stop_rel, to_exhaustion, xi
+            s, dd, c, p, r, ip, ic, mt, min_obs, ei_stop_rel, to_exhaustion, xi
         )
 
     return jax.vmap(one)(
-        state, encoded, costs, prio_mask, rem_mask, init_picks, init_count,
+        state, d2, costs, prio_mask, rem_mask, init_picks, init_count,
         max_trials,
     )
 
 
 def _run_chunk(
-    encoded, costs, prio_mask, rem_mask, init_picks, init_count, max_trials,
-    settings: BOSettings, to_exhaustion: bool, max_T: int,
+    d2, costs, prio_mask, rem_mask, init_picks, init_count, max_trials,
+    settings: BOSettings, to_exhaustion: bool, capacity: int,
 ):
     """Drive one chunk of jobs to completion; state stays on device.
 
@@ -121,12 +135,12 @@ def _run_chunk(
     early stopping it additionally polls the done flags every few steps to
     cut the tail.
     """
-    j = encoded.shape[0]
-    n = encoded.shape[1]
+    j = costs.shape[0]
+    n = costs.shape[1]
     state = FleetState(
         obs=jnp.zeros((j, n), bool),
-        y=jnp.zeros((j, n), jnp.float32),
-        tried=jnp.full((j, max_T), -1, jnp.int32),
+        tried=jnp.full((j, capacity), -1, jnp.int32),
+        py=jnp.zeros((j, capacity), jnp.float32),
         t=jnp.zeros(j, jnp.int32),
         stop=jnp.full(j, -1, jnp.int32),
         pb=jnp.full(j, -1, jnp.int32),
@@ -135,7 +149,7 @@ def _run_chunk(
         last_best=jnp.full(j, jnp.inf, jnp.float32),
     )
     args = (
-        jnp.asarray(encoded), jnp.asarray(costs), jnp.asarray(prio_mask),
+        jnp.asarray(d2), jnp.asarray(costs), jnp.asarray(prio_mask),
         jnp.asarray(rem_mask), jnp.asarray(init_picks),
         jnp.asarray(init_count), jnp.asarray(max_trials),
         jnp.asarray(settings.min_observations, jnp.int32),
@@ -181,15 +195,16 @@ def batched_search(
     """Run J independent BO searches in lockstep on device.
 
     ``spaces`` may be a single shared `SearchSpace` or one per job.  Jobs are
-    grouped by space shape — each group runs unpadded, so a heterogeneous
-    fleet stays bitwise-identical to the per-job sequential engine (padding
-    a 10-config job into a 20-slot batch would be mathematically exact but
-    not float32-identical).  ``cost_tables[j][i]`` is the cost job j observes
-    for configuration i — the full table lives on device so the loop never
-    leaves it.  ``priority``/``remaining`` give each job's Ruya split
-    (omitted → plain CherryPick over the whole space).  The random
-    initialization consumes ``rngs[j]`` exactly like the sequential engine,
-    so seed-matched runs produce identical traces.
+    grouped by (space shape, trial budget) — each group runs unpadded at its
+    own packed capacity, so a heterogeneous fleet stays bitwise-identical to
+    the per-job sequential engine (padding a 10-config job into a 20-slot
+    batch, or a 10-trial budget into a 20-slot packed buffer, would be
+    mathematically exact but not float32-identical).  ``cost_tables[j][i]``
+    is the cost job j observes for configuration i — the full table lives on
+    device so the loop never leaves it.  ``priority``/``remaining`` give
+    each job's Ruya split (omitted → plain CherryPick over the whole space).
+    The random initialization consumes ``rngs[j]`` exactly like the
+    sequential engine, so seed-matched runs produce identical traces.
     """
     n_jobs = len(cost_tables)
     if len(rngs) != n_jobs:
@@ -220,12 +235,9 @@ def batched_search(
             init_lists.append([prio[int(i)] for i in picked])
         else:
             init_lists.append([])
-        total = len(prio) + len(rem)
-        if settings.max_iters is not None:
-            # The sequential engine observes every scripted init pick before
-            # its first budget check, so the budget floor is the init count.
-            total = min(total, max(settings.max_iters, len(init_lists[-1])))
-        max_trials_all[j] = total
+        # Shared with the sequential engine: the budget is also the packed
+        # capacity B, and the engines must agree on it exactly.
+        max_trials_all[j] = trial_budget(len(prio), len(rem), settings)
 
     max_T = max(int(max_trials_all.max()) if n_jobs else 0, 1)
     tried = np.full((n_jobs, max_T), -1, np.int32)
@@ -233,20 +245,31 @@ def batched_search(
     stop = np.full(n_jobs, -1, np.int32)
     pb = np.full(n_jobs, -1, np.int32)
 
-    # Group jobs by space shape; each group runs unpadded, in cache-friendly
-    # lockstep chunks.  Chunks of one job are padded with an inert dummy
-    # (zero trial budget): XLA:CPU collapses singleton batch dims into
-    # unbatched programs with different float32 numerics, so every call must
-    # run at extent ≥ 2.
+    # Group jobs by (space shape, packed capacity); each group runs unpadded
+    # at its own static extents, in cache-friendly lockstep chunks.  Chunks
+    # of one job are padded with an inert dummy (zero trial budget): XLA:CPU
+    # collapses singleton batch dims into unbatched programs with different
+    # float32 numerics, so every call must run at extent ≥ 2.
     groups: dict = {}
     for j, space in enumerate(space_list):
         enc = space.encoded()
-        groups.setdefault(enc.shape, []).append(j)
+        groups.setdefault((enc.shape, int(max_trials_all[j])), []).append(j)
 
-    for shape, members in groups.items():
+    # The distance tensor is once-per-space work (seed-replica fleets alias
+    # one SearchSpace object): computed unbatched so it is bit-identical to
+    # the sequential engine's, then stacked per chunk.
+    d2_cache: dict = {}
+
+    def space_d2(space: SearchSpace) -> np.ndarray:
+        key = id(space)
+        if key not in d2_cache:
+            d2_cache[key] = np.asarray(precompute_d2(space.encoded()))
+        return d2_cache[key]
+
+    for (shape, cap), members in groups.items():
         n, d = shape
         g = len(members)
-        encoded = np.zeros((g, n, d), np.float32)
+        capacity = max(cap, 1)
         costs = np.zeros((g, n), np.float32)
         prio_mask = np.zeros((g, n), bool)
         rem_mask = np.zeros((g, n), bool)
@@ -255,7 +278,6 @@ def batched_search(
         init_count = np.zeros(g, np.int32)
         max_trials = np.zeros(g, np.int32)
         for i, j in enumerate(members):
-            encoded[i] = np.asarray(space_list[j].encoded(), np.float32)
             costs[i] = np.asarray(cost_tables[j], np.float32)
             prio_mask[i, np.asarray(priority[j], np.int64)] = True
             if len(remaining[j]):
@@ -268,8 +290,9 @@ def batched_search(
         for lo in range(0, g, _CHUNK):
             hi = min(lo + _CHUNK, g)
             chunk = slice(lo, hi)
+            d2 = np.stack([space_d2(space_list[j]) for j in members[lo:hi]])
             parts = [
-                encoded[chunk], costs[chunk], prio_mask[chunk],
+                d2, costs[chunk], prio_mask[chunk],
                 rem_mask[chunk], init_picks[chunk], init_count[chunk],
                 max_trials[chunk],
             ]
@@ -277,13 +300,17 @@ def batched_search(
                 parts = [np.concatenate([a, np.zeros_like(a[:1])]) for a in parts]
             state = _run_chunk(
                 *parts, settings=settings, to_exhaustion=to_exhaustion,
-                max_T=max_T,
+                capacity=capacity,
+            )
+            s_tried, s_t, s_stop, s_pb = (
+                np.asarray(state.tried), np.asarray(state.t),
+                np.asarray(state.stop), np.asarray(state.pb),
             )
             for i, j in enumerate(members[lo:hi]):
-                tried[j] = np.asarray(state.tried)[i]
-                n_tried[j] = int(np.asarray(state.t)[i])
-                stop[j] = int(np.asarray(state.stop)[i])
-                pb[j] = int(np.asarray(state.pb)[i])
+                tried[j, :capacity] = s_tried[i]
+                n_tried[j] = int(s_t[i])
+                stop[j] = int(s_stop[i])
+                pb[j] = int(s_pb[i])
     # Costs are reported from the float64 tables (the engine's float32 copy
     # is only the GP's view), matching the sequential trace exactly.
     out_costs = np.zeros(tried.shape, np.float64)

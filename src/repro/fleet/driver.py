@@ -9,7 +9,9 @@ examples and the tuner API are engine-agnostic: J=1 is just a fleet of one.
 
 `cluster_fleet` replays paper workloads through `repro.cluster.simulator`;
 `replay_seeds` expands one job into a fleet of seed-replicas — the paper's
-"repeat every search 200×" protocol becomes a single batched call.
+"repeat every search 200×" protocol becomes a single batched call (and,
+since seed-replicas share one `SearchSpace` object, one distance-tensor
+precompute serves the whole replica fleet).
 """
 
 from __future__ import annotations

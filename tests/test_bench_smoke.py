@@ -1,0 +1,46 @@
+"""Benchmark wiring smoke (`pytest -m bench_smoke`): runs the fleet bench
+in its seconds-scale smoke mode — donation check, one small scaling-sweep
+point with trace verification, and the `BENCH_fleet.json` emission — so the
+bench plumbing is exercised without the multi-minute full sweep.
+
+Excluded from the default tier-1 lane (see pyproject addopts); selected
+explicitly with `pytest -m bench_smoke`, and included in the full
+`-m "slow or not slow"` suite.
+"""
+
+import json
+import os
+import sys
+
+import pytest
+
+pytestmark = pytest.mark.bench_smoke
+
+# `benchmarks` is a repo-root package; `python -m pytest` from the root puts
+# the root on sys.path, but make it explicit for other invocation styles.
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+if ROOT not in sys.path:
+    sys.path.insert(0, ROOT)
+
+
+def test_fleet_bench_smoke(tmp_path):
+    from benchmarks import fleet_bench
+
+    path = tmp_path / "BENCH_fleet.json"
+    out = fleet_bench.run(smoke=True, json_path=str(path))
+
+    assert out["smoke"] is True
+    assert out["donation"]["state_donated"]
+
+    rows = out["scaling"]["sweep"]
+    assert rows
+    for r in rows:
+        assert r["traces_identical"]
+        # The packed step must beat the dense full-extent step even at the
+        # smoke point (B=8, n=64); the margin is large (>10x) so a loose
+        # bound survives this host's ±2x wall-clock wobble.
+        assert r["step_speedup_vs_dense"] > 2.0
+        assert r["packed_step_ms"] > 0.0
+
+    data = json.loads(path.read_text())
+    assert data["scaling"]["sweep"][0]["n"] == rows[0]["n"]

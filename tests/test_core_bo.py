@@ -1,11 +1,15 @@
-"""Property tests: the jitted masked-posterior/EI fast path (`fast_bo`)
+"""Property tests: the jitted packed-observation fast path (`fast_bo`)
 against the readable reference GP (`gp.py` + `acquisition.py`).
 
-The fast path keeps every configuration in fixed-shape arrays and selects
-the observed set with boolean masks; padding must be *exact* — masked-out
-points contribute nothing to the posterior.  These tests check that claim
-over randomized observation masks, plus the EI/pick agreement between
-`bo_step` and the reference pipeline, and the dtype behavior of `fit_gp`.
+The fast path packs the observed set into a fixed-capacity (B,) buffer in
+trial order and gathers its kernel blocks from a precomputed distance
+tensor; padding must be *exact* — padded packed slots (and mask-level
+padded space points) contribute nothing to the posterior, bit for bit.
+These tests check that claim over randomized observation sets and buffer
+capacities (including the full-buffer B = t and B = 1 edges), the EI/pick
+agreement of `bo_step` with the reference pipeline and with the retained
+dense full-extent step, the shared-d² kernel helpers, and the dtype
+behavior of `fit_gp`.
 """
 
 import numpy as np
@@ -16,8 +20,21 @@ import jax.numpy as jnp
 
 from repro.core import fast_bo
 from repro.core.acquisition import expected_improvement
-from repro.core.fast_bo import _masked_posterior, bo_step
-from repro.core.gp import GPParams, fit_gp, gp_predict, matern52
+from repro.core.fast_bo import (
+    _masked_posterior,
+    bo_step,
+    bo_step_core,
+    bo_step_core_dense,
+    precompute_d2,
+)
+from repro.core.gp import (
+    GPParams,
+    fit_gp,
+    gp_predict,
+    matern52,
+    matern52_from_sqdist,
+    pairwise_sqdist,
+)
 
 _JITTER = 1e-8
 
@@ -154,6 +171,157 @@ class TestBoStepAgainstReference:
             expected_improvement(mean, std, jnp.asarray(y[obs_idx].min()))
         )
         assert float(max_ei) == pytest.approx(float(ref_ei[int(pick)]), rel=5e-2, abs=1e-5)
+
+
+def _reference_ei(x, obs_mask, y, cand):
+    """EI over all points via the readable fit_gp → gp_predict pipeline."""
+    obs_idx = np.flatnonzero(obs_mask)
+    post = fit_gp(jnp.asarray(x[obs_idx]), jnp.asarray(y[obs_idx]))
+    mean, std = gp_predict(post, jnp.asarray(x))
+    ei = np.array(expected_improvement(mean, std, jnp.asarray(y[obs_idx].min())))
+    ei[~cand] = -np.inf
+    return ei
+
+
+def _assert_pick_near_optimal(ei_ref, pick, tol=1e-5):
+    gap = ei_ref.max() - ei_ref[pick]
+    assert gap <= tol * max(1.0, abs(float(ei_ref.max())))
+
+
+class TestPackedEngine:
+    """The packed (B,B)/(B,n) layout: gp.py-reference agreement on random
+    observed subsets, exact (bitwise-inert) slot padding, and the
+    full-buffer / B=1 edge cases."""
+
+    def _packed_inputs(self, x, obs_mask, y, capacity):
+        order = np.flatnonzero(obs_mask)
+        k = len(order)
+        tried = np.full(capacity, -1, np.int32)
+        tried[:k] = order
+        py = np.zeros(capacity, np.float32)
+        py[:k] = y[order]
+        return tried, py, k
+
+    @pytest.mark.parametrize("seed", range(4))
+    def test_padded_slots_are_bitwise_inert(self, seed):
+        """Finite garbage in packed slots ≥ t must not change a single bit
+        of (pick, max_ei, best) — the padding is exact, not approximate."""
+        x, obs_mask, y = random_case(seed)
+        cand = ~obs_mask
+        capacity = 12
+        tried, py, k = self._packed_inputs(x, obs_mask, y, capacity)
+        d2 = precompute_d2(x)
+        core = jax.jit(bo_step_core)
+
+        ref = core(d2, jnp.asarray(tried), jnp.asarray(py),
+                   jnp.asarray(k, jnp.int32), jnp.asarray(obs_mask),
+                   jnp.asarray(cand))
+        tried_g = tried.copy()
+        py_g = py.copy()
+        rng = np.random.default_rng(100 + seed)
+        tried_g[k:] = rng.integers(0, len(x), size=capacity - k)
+        py_g[k:] = 1e6 * rng.standard_normal(capacity - k)
+        got = core(d2, jnp.asarray(tried_g), jnp.asarray(py_g),
+                   jnp.asarray(k, jnp.int32), jnp.asarray(obs_mask),
+                   jnp.asarray(cand))
+        assert int(got[0]) == int(ref[0])
+        assert float(got[1]) == float(ref[1])  # bitwise, no tolerance
+        assert float(got[2]) == float(ref[2])
+
+    @pytest.mark.parametrize("seed", range(4))
+    def test_full_buffer_matches_reference(self, seed):
+        """capacity == n_obs (no padded slots at all) against the readable
+        reference pipeline."""
+        x, obs_mask, y = random_case(seed, n=16)
+        cand = ~obs_mask
+        n_obs = int(obs_mask.sum())
+        pick, max_ei, best = bo_step(x, obs_mask, y, cand, capacity=n_obs)
+        assert cand[pick]
+        assert best == pytest.approx(float(y[obs_mask].min()))
+        _assert_pick_near_optimal(_reference_ei(x, obs_mask, y, cand), pick)
+
+    @pytest.mark.parametrize("seed", range(4))
+    def test_oversized_buffer_matches_reference(self, seed):
+        """capacity > n_obs (the mid-search shape) against the reference."""
+        x, obs_mask, y = random_case(seed, n=16)
+        cand = ~obs_mask
+        pick, max_ei, best = bo_step(x, obs_mask, y, cand, capacity=14)
+        assert cand[pick]
+        _assert_pick_near_optimal(_reference_ei(x, obs_mask, y, cand), pick)
+
+    def test_single_observation_capacity_one(self):
+        """B = 1: a (1,1) system, the smallest the packed engine can run."""
+        x, _, y = random_case(5, n=12)
+        obs_mask = np.zeros(12, bool)
+        obs_mask[4] = True
+        cand = ~obs_mask
+        pick, max_ei, best = bo_step(x, obs_mask, y, cand, capacity=1)
+        assert cand[pick]
+        assert best == pytest.approx(float(y[4]))
+        assert max_ei >= 0.0
+
+    @pytest.mark.parametrize("seed", range(3))
+    def test_trial_order_is_immaterial_to_the_pick_quality(self, seed):
+        """The packed buffer is ordered by trial; any order must yield a
+        (near-)EI-optimal pick and the identical best cost."""
+        x, obs_mask, y = random_case(seed, n=16)
+        cand = ~obs_mask
+        order = np.flatnonzero(obs_mask)
+        shuffled = np.random.default_rng(seed).permutation(order)
+        ei_ref = _reference_ei(x, obs_mask, y, cand)
+        p1, e1, b1 = bo_step(x, obs_mask, y, cand, trial_order=order)
+        p2, e2, b2 = bo_step(x, obs_mask, y, cand, trial_order=shuffled)
+        assert b1 == b2  # min is order-independent even in float32
+        assert e2 == pytest.approx(e1, rel=1e-3, abs=1e-6)
+        _assert_pick_near_optimal(ei_ref, p1)
+        _assert_pick_near_optimal(ei_ref, p2)
+
+    @pytest.mark.parametrize("seed", range(4))
+    def test_packed_agrees_with_dense_step(self, seed):
+        """Packed vs the retained dense full-extent step on the same state:
+        same best, matching max-EI, and EI-equivalent picks."""
+        x, obs_mask, y = random_case(seed, n=16)
+        cand = ~obs_mask
+        pick_p, ei_p, best_p = bo_step(x, obs_mask, y, cand)
+        pick_d, ei_d, best_d = jax.jit(bo_step_core_dense)(
+            jnp.asarray(x), jnp.asarray(obs_mask), jnp.asarray(y),
+            jnp.asarray(cand),
+        )
+        assert best_p == pytest.approx(float(best_d))
+        assert ei_p == pytest.approx(float(ei_d), rel=2e-3, abs=1e-6)
+        ei_ref = _reference_ei(x, obs_mask, y, cand)
+        _assert_pick_near_optimal(ei_ref, pick_p)
+        _assert_pick_near_optimal(ei_ref, int(pick_d))
+
+
+class TestSqdistKernelHelpers:
+    def test_matern_from_sqdist_matches_matern52_scalar_ls(self):
+        """One raw d² rescaled per lengthscale must reproduce matern52 for
+        every scalar lengthscale of the hyperparameter grid."""
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(9, 3)), jnp.float32)
+        d2 = pairwise_sqdist(x)
+        for ls in (0.1, 0.25, 0.5, 1.0, 2.0, 4.0):
+            params = GPParams(
+                lengthscale=jnp.asarray(ls, jnp.float32),
+                amplitude=jnp.asarray(1.0, jnp.float32),
+                noise=jnp.asarray(0.0, jnp.float32),
+            )
+            ref = np.asarray(matern52(x, x, params))
+            got = np.asarray(matern52_from_sqdist(d2, jnp.asarray(ls, jnp.float32)))
+            # Small lengthscales put far pairs deep into the exponential
+            # tail, where the two float32 evaluation orders diverge
+            # relatively (but not absolutely) — hence the atol floor.
+            np.testing.assert_allclose(got, ref, rtol=2e-3, atol=1e-6)
+
+    def test_pairwise_sqdist_nonnegative_and_symmetric(self):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(size=(7, 4)), jnp.float32)
+        d2 = np.asarray(pairwise_sqdist(x))
+        assert (d2 >= 0.0).all()
+        np.testing.assert_allclose(d2, d2.T, rtol=0, atol=0)
+        ref = ((np.asarray(x)[:, None] - np.asarray(x)[None]) ** 2).sum(-1)
+        np.testing.assert_allclose(d2, ref, rtol=1e-4, atol=1e-5)
 
 
 class TestFitGpDtype:

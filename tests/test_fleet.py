@@ -4,8 +4,11 @@ driver's single-code-path API, and Flora-style profile-cache behavior.
 The equivalence tests assert *identical* `tried`/`costs`/`stop_iteration`
 sequences between `batched_search` (J jobs advanced in device-resident
 lockstep) and J runs of the sequential engine with the same seeds — the
-contract that makes fleet mode a pure execution optimization.  The fast tests share one set of
-array shapes so the engine compiles exactly once; the exhaustive 69-config
+contract that makes fleet mode a pure execution optimization — including
+across packed-buffer capacities (heterogeneous trial budgets group by
+(shape, B)) and space extents (n = 69 exhaustion = full buffer, synthetic
+n = 512 in the budgeted B ≪ n regime).  The fast tests mostly share array
+shapes so the engine compiles few programs; the exhaustive 69-config
 cluster sweep is marked `slow`.
 """
 
@@ -40,6 +43,26 @@ def quad_space(n=N):
 
 def quad_table(n=N, optimum=9):
     return np.array([1.0 + 0.05 * (i - optimum) ** 2 for i in range(n)])
+
+
+def synth_space_table(n, d=5, seed=0):
+    """Random-feature space + smooth synthetic cost table (scaling tests)."""
+    rng = np.random.default_rng(seed + n)
+    feats = rng.normal(size=(n, d))
+    space = SearchSpace(
+        [
+            Configuration(
+                name=f"s{i}",
+                features=tuple(float(v) for v in feats[i]),
+                total_memory=float(i),
+            )
+            for i in range(n)
+        ]
+    )
+    w = rng.normal(size=d)
+    z = feats @ w
+    z = (z - z.mean()) / max(float(z.std()), 1e-9)
+    return space, 1.0 + (z - 0.7) ** 2 + 0.05 * rng.random(n)
 
 
 def assert_traces_equal(batched_trace, reference):
@@ -200,6 +223,74 @@ class TestTraceEquivalence:
         )
         for j, ref in enumerate(seq):
             assert len(bt.job_trace(j).tried) == 7
+            assert_traces_equal(bt.job_trace(j), ref)
+
+    def test_heterogeneous_budgets_group_by_capacity(self):
+        """Jobs with different trial budgets (→ different packed capacities
+        B) in one batched call: each must factorize at exactly the capacity
+        the sequential engine uses for it (grouping by (shape, B)), so every
+        trace stays identical — including the singleton dummy-pad path each
+        one-job capacity group takes."""
+        pools = [list(range(10)), list(range(N)), list(range(5, 12))]
+        refs = [
+            ruya_search(self.space, self.cost_fn(), np.random.default_rng(s),
+                        pool, [], to_exhaustion=True)
+            for s, pool in enumerate(pools)
+        ]
+        bt = batched_search(
+            self.space, [self.table] * 3,
+            [np.random.default_rng(s) for s in range(3)],
+            priority=pools, remaining=[[], [], []],
+            to_exhaustion=True,
+        )
+        for j, ref in enumerate(refs):
+            assert len(ref.tried) == len(pools[j])  # budgets really differ
+            assert_traces_equal(bt.job_trace(j), ref)
+
+
+class TestTraceEquivalenceScaling:
+    """Packed-engine identity at the paper's space extent and beyond it.
+
+    n=69 runs to exhaustion (capacity B = n: the packed buffer completely
+    full); n=512 runs the budgeted B ≪ n regime the packed layout targets.
+    One set of shapes per test so each compiles once.
+    """
+
+    def test_n69_exhaustion_identical(self):
+        space, table = synth_space_table(69)
+        refs = [
+            cherrypick_search(
+                space, lambda i: float(table[i]), np.random.default_rng(s),
+                to_exhaustion=True,
+            )
+            for s in range(2)
+        ]
+        bt = batched_search(
+            space, [table] * 2, [np.random.default_rng(s) for s in range(2)],
+            to_exhaustion=True,
+        )
+        for j, ref in enumerate(refs):
+            assert len(ref.tried) == 69
+            assert_traces_equal(bt.job_trace(j), ref)
+
+    def test_n512_budgeted_identical(self):
+        space, table = synth_space_table(512)
+        st = BOSettings(max_iters=10)
+        prio = list(range(0, 50))
+        rest = list(range(50, 512))
+        refs = [
+            ruya_search(space, lambda i: float(table[i]),
+                        np.random.default_rng(s), prio, rest, settings=st,
+                        to_exhaustion=True)
+            for s in range(3)
+        ]
+        bt = batched_search(
+            space, [table] * 3, [np.random.default_rng(s) for s in range(3)],
+            priority=[prio] * 3, remaining=[rest] * 3, settings=st,
+            to_exhaustion=True,
+        )
+        for j, ref in enumerate(refs):
+            assert len(ref.tried) == 10
             assert_traces_equal(bt.job_trace(j), ref)
 
 
