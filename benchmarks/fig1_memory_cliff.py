@@ -7,15 +7,17 @@ import csv
 
 import numpy as np
 
-from repro.cluster import ClusterSimulator
-
-from benchmarks.common import artifact_path
+from benchmarks.common import artifact_path, fleet_job, get_sim
 
 
 def run(job: str = "kmeans/spark/huge") -> dict:
-    sim = ClusterSimulator.for_job(job)
+    # Space and cost table come from the shared fleet-job pool (the same
+    # FleetJob every replay suite uses); the memoized simulator only
+    # supplies the job spec's memory requirement.
+    fj = fleet_job(job)
+    sim = get_sim(job)
     rows = []
-    for cfg, cost in zip(sim.space.configs, sim.normalized):
+    for cfg, cost in zip(fj.space.configs, fj.cost_table):
         rows.append({
             "config": cfg.name,
             "family": cfg.meta.node.family,

@@ -12,24 +12,30 @@ Three measurements, all trace-checked against the sequential engine:
      every categorized job) run the way Blink-style systems run tuning:
      small spaces, cheap trials, as a routine re-tuning service.
   C. **Search-space scaling sweep** — synthetic spaces of n ∈ {69, 256,
-     512, 1024} configurations, a 64-job fleet with the paper-regime trial
-     budget (B = 24): per-BO-step time of the packed engine vs the retained
-     dense full-extent step (`fast_bo.bo_step_core_dense`, O(18n³)), plus
-     end-to-end batched vs sequential.  This is the packed engine's target
-     regime — B ≪ n — where the old engine was memory- and flops-bound.
+     512, 1024, 8192, 32768} configurations, a 64-job fleet with the
+     paper-regime trial budget (B = 24): per-BO-step time of the
+     feature-buffer engine vs the retained d²-gather step (n ≤ 8192 — its
+     (n,n) tensor is the memory wall this PR removes) vs the dense
+     full-extent step (n ≤ 1024, O(18n³)), plus end-to-end batched vs
+     sequential and per-point memory reporting (analytic geometry bytes,
+     largest live device buffer, peak RSS).  This is the feature-buffer
+     engine's target regime — B ≪ n, n up to 10⁴–10⁵ — where the gather
+     engine was memory-bound and the dense engine flops-bound.
 
 The sweep also asserts **buffer donation**: the lockstep update consumes
 (donates) its input state, so each fleet iteration updates the observation
-mask and packed trial buffers in place — the old state's device buffers are
-deleted after one update, i.e. no per-iteration device copies remain.
+mask and the packed trial/target/(B,d)-feature buffers in place — the old
+state's device buffers are deleted after one update, i.e. no per-iteration
+device copies remain.
 
 `benchmarks/run.py --only fleet` (and running this module directly, at the
 default 64 jobs) writes the machine-readable perf baseline to
-`BENCH_fleet.json` at the repo root: per-step ms, end-to-end seconds, and
-speedups, so the perf trajectory is tracked PR over PR.  Smoke or
-reduced-job runs never touch the committed baseline (their numbers are not
-comparable); `--smoke` (or `run(smoke=True)`) is the seconds-scale wiring
-check used by `pytest -m bench_smoke`.
+`BENCH_fleet.json` at the repo root: per-step ms, end-to-end seconds,
+speedups, and memory numbers, so the perf trajectory is tracked PR over PR.
+Smoke or reduced-job runs never touch the committed baseline (their numbers
+are not comparable); `--smoke` (or `run(smoke=True)`) is the seconds-scale
+wiring check used by `pytest -m bench_smoke` — it includes an n = 32768
+sweep point so the 10⁴–10⁵ regime stays wired.
 
     PYTHONPATH=src python -m benchmarks.fleet_bench [--jobs 64] [--no-check]
                                                     [--smoke]
@@ -40,6 +46,8 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import resource
+import sys
 import time
 from typing import List, Optional, Sequence, Tuple
 
@@ -50,7 +58,12 @@ import jax.numpy as jnp
 
 from benchmarks.common import JOB_ORDER, artifact_path
 from repro.core.bayesopt import BOSettings, cherrypick_search
-from repro.core.fast_bo import FleetState, bo_step_core_dense, precompute_d2
+from repro.core.fast_bo import (
+    FleetState,
+    bo_step_core_dense,
+    encode_features,
+    precompute_d2,
+)
 from repro.core.profiler import profile_job
 from repro.core.search_space import Configuration, SearchSpace, split_search_space
 from repro.fleet import batched_search, cluster_fleet, tune_fleet
@@ -59,6 +72,13 @@ from repro.fleet.batched_engine import _CHUNK, _fleet_update
 BENCH_JSON = os.path.abspath(
     os.path.join(os.path.dirname(__file__), "..", "BENCH_fleet.json")
 )
+
+# Per-step timing caps for the retained layouts.  The dense step is O(18n³)
+# flops; the gather step is cheap per step but holds a resident (n,n)
+# float32 tensor per job in the chunk — at n = 32768 that would be 4 GiB
+# per job, which is precisely the wall the feature buffer removes.
+_DENSE_MAX_N = 1024
+_GATHER_MAX_N = 8192
 
 
 def build_fleet(n_jobs: int):
@@ -76,6 +96,25 @@ def build_fleet(n_jobs: int):
 
 def _rngs(n: int) -> List[np.random.Generator]:
     return [np.random.default_rng(1000 + i) for i in range(n)]
+
+
+def _peak_rss_mb() -> float:
+    """Process high-water RSS in MB — MONOTONE over the process lifetime,
+    so it is reported once per run, not per sweep point (a per-point value
+    would inherit earlier points' gather/dense allocations).  ru_maxrss is
+    kilobytes on Linux, bytes on macOS."""
+    rss = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    if sys.platform == "darwin":
+        return rss / 1024.0**2
+    return rss / 1024.0
+
+
+def _live_device_mb() -> Tuple[float, float]:
+    """(total, largest) live device-buffer MB — the on-device footprint."""
+    sizes = [a.nbytes for a in jax.live_arrays()]
+    if not sizes:
+        return 0.0, 0.0
+    return sum(sizes) / 1e6, max(sizes) / 1e6
 
 
 def synthetic_space(n: int, d: int = 6, seed: int = 7) -> Tuple[SearchSpace, np.ndarray]:
@@ -103,15 +142,18 @@ def check_buffer_donation() -> dict:
     """Assert the lockstep update donates its state: after one jitted call
     the *input* state's device buffers are deleted (XLA aliased them to the
     outputs), so fleet iterations update in place — no per-iteration device
-    copies of the observation mask or the packed trial buffers."""
+    copies of the observation mask or the packed trial/target/feature
+    buffers (the (B,d) feature buffer rides the same donation contract)."""
     n, j, b = 16, 2, 6
     space, table = synthetic_space(n)
-    d2_one = np.asarray(precompute_d2(space.encoded()))
-    d2 = jnp.asarray(np.stack([d2_one] * j))
+    enc = encode_features(space.encoded())
+    d = enc.shape[1]
+    geom = jnp.asarray(np.stack([enc] * j))
     state = FleetState(
         obs=jnp.zeros((j, n), bool),
         tried=jnp.full((j, b), -1, jnp.int32),
         py=jnp.zeros((j, b), jnp.float32),
+        feats=jnp.zeros((j, b, d), jnp.float32),
         t=jnp.zeros(j, jnp.int32),
         stop=jnp.full(j, -1, jnp.int32),
         pb=jnp.full(j, -1, jnp.int32),
@@ -120,39 +162,55 @@ def check_buffer_donation() -> dict:
         last_best=jnp.full(j, jnp.inf, jnp.float32),
     )
     args = (
-        d2, jnp.asarray(np.stack([table] * j), jnp.float32),
+        geom, jnp.asarray(np.stack([table] * j), jnp.float32),
         jnp.ones((j, n), bool), jnp.zeros((j, n), bool),
         jnp.zeros((j, 1), jnp.int32), jnp.zeros(j, jnp.int32),
         jnp.full(j, b, jnp.int32), jnp.asarray(0, jnp.int32),
         jnp.asarray(0.0, jnp.float32), jnp.asarray(True),
     )
-    old = (state.obs, state.tried, state.py)
-    new = _fleet_update(state, *args, xi=0.0)
+    old = (state.obs, state.tried, state.py, state.feats)
+    new = _fleet_update(state, *args, xi=0.0, layout="feature")
     jax.block_until_ready(new.t)
     deleted = [bool(buf.is_deleted()) for buf in old]
     assert all(deleted), (
         f"state buffers survived the donated lockstep call: {deleted} — "
         "per-iteration device copies are back"
     )
-    return {"state_donated": True, "buffers_checked": ["obs", "tried", "py"]}
+    return {
+        "state_donated": True,
+        "buffers_checked": ["obs", "tried", "py", "feats"],
+    }
 
 
-def _time_packed_step(space, table, budget: int, reps: int) -> float:
-    """Per-iteration seconds of the packed lockstep update, one warm chunk."""
+def _time_packed_step(space, table, budget: int, reps: int,
+                      layout: str = "feature") -> Tuple[float, float, float]:
+    """(seconds/iter, live-device MB, largest-buffer MB) of the packed
+    lockstep update, one warm chunk, for either packed geometry layout
+    ("feature" or "gather").  Memory is sampled while the engine state and
+    geometry are resident — the steady-state on-device footprint."""
     n = len(space)
     j = _CHUNK
     k = max(budget - 1, 1)  # warm state: buffer nearly full, budget live
-    d2 = jnp.asarray(np.stack([np.asarray(precompute_d2(space.encoded()))] * j))
+    enc = encode_features(space.encoded())
+    geom_one = enc if layout == "feature" else np.asarray(precompute_d2(enc))
+    # broadcast_to is a host-side view — the chunk replication only
+    # materializes once, on device (at n=8192 the gather layout's stacked
+    # (8,n,n) geometry is ~2 GiB there; that resident tensor is exactly
+    # the cost being measured, so don't also pay it in host RAM).
+    geom = jnp.asarray(np.broadcast_to(geom_one, (j,) + geom_one.shape))
     obs = np.zeros((j, n), bool)
     obs[:, :k] = True
     tried = np.full((j, budget), -1, np.int32)
     tried[:, :k] = np.arange(k)
     py = np.zeros((j, budget), np.float32)
     py[:, :k] = np.asarray(table[:k], np.float32)
+    feats = np.zeros((j, budget, enc.shape[1]), np.float32)
+    feats[:, :k] = enc[:k]
     state = FleetState(
         obs=jnp.asarray(obs),
         tried=jnp.asarray(tried),
         py=jnp.asarray(py),
+        feats=jnp.asarray(feats),
         t=jnp.full(j, k, jnp.int32),
         stop=jnp.full(j, -1, jnp.int32),
         pb=jnp.full(j, -1, jnp.int32),
@@ -161,19 +219,20 @@ def _time_packed_step(space, table, budget: int, reps: int) -> float:
         last_best=jnp.full(j, jnp.inf, jnp.float32),
     )
     args = (
-        d2, jnp.asarray(np.stack([table] * j), jnp.float32),
+        geom, jnp.asarray(np.stack([table] * j), jnp.float32),
         jnp.ones((j, n), bool), jnp.zeros((j, n), bool),
         jnp.zeros((j, 1), jnp.int32), jnp.zeros(j, jnp.int32),
         jnp.full(j, budget, jnp.int32), jnp.asarray(0, jnp.int32),
         jnp.asarray(0.0, jnp.float32), jnp.asarray(True),
     )
-    state = _fleet_update(state, *args, xi=0.0)  # warm the jit
+    state = _fleet_update(state, *args, xi=0.0, layout=layout)  # warm the jit
     jax.block_until_ready(state.t)
+    live_mb, largest_mb = _live_device_mb()
     t0 = time.perf_counter()
     for _ in range(reps):
-        state = _fleet_update(state, *args, xi=0.0)
+        state = _fleet_update(state, *args, xi=0.0, layout=layout)
     jax.block_until_ready(state.t)
-    return (time.perf_counter() - t0) / reps
+    return (time.perf_counter() - t0) / reps, live_mb, largest_mb
 
 
 _dense_chunk_step = jax.jit(jax.vmap(bo_step_core_dense))
@@ -185,7 +244,7 @@ def _time_dense_step(space, table, budget: int, reps: int) -> float:
     n = len(space)
     j = _CHUNK
     k = max(budget - 1, 1)
-    encoded = np.asarray(space.encoded(), np.float32)
+    encoded = encode_features(space.encoded())
     obs = np.zeros(n, bool)
     obs[:k] = True
     enc8 = jnp.asarray(np.stack([encoded] * j))
@@ -207,6 +266,7 @@ def bench_scaling_point(
 ) -> dict:
     """One sweep point: budgeted CherryPick over an n-config synthetic space."""
     space, table = synthetic_space(n)
+    d = space.encoded().shape[1]
     settings = BOSettings(max_iters=budget)
     rng_seq = _rngs(n_jobs)
     rng_bat = _rngs(n_jobs)
@@ -233,28 +293,60 @@ def bench_scaling_point(
     t_bat = time.perf_counter() - t0
 
     identical = True
+    gather_identical = None
     if check:
         for jdx, ref in enumerate(seq):
             tr = bat.job_trace(jdx)
             identical &= tr.tried == ref.tried and tr.costs == ref.costs
         assert identical, f"engines diverged at n={n}"
+        if n <= _GATHER_MAX_N:
+            # Cross-layout identity: the retained d²-gather engine must
+            # reproduce the feature-buffer traces bit-for-bit (few jobs —
+            # the point is the check, not gather-path throughput).
+            g_jobs = min(n_jobs, 2)
+            bat_g = batched_search(
+                [space] * g_jobs, tables[:g_jobs], _rngs(g_jobs),
+                settings=settings, to_exhaustion=True, layout="gather",
+            )
+            gather_identical = all(
+                bat_g.job_trace(jdx).tried == bat.job_trace(jdx).tried
+                for jdx in range(g_jobs)
+            )
+            assert gather_identical, f"gather layout diverged at n={n}"
 
-    packed_s = _time_packed_step(space, table, budget, packed_reps)
-    dense_s = _time_dense_step(space, table, budget, dense_reps)
+    feature_s, live_mb, largest_mb = _time_packed_step(
+        space, table, budget, packed_reps, layout="feature")
+    gather_s = (
+        _time_packed_step(space, table, budget, packed_reps,
+                          layout="gather")[0]
+        if n <= _GATHER_MAX_N else None
+    )
+    dense_s = (
+        _time_dense_step(space, table, budget, dense_reps)
+        if n <= _DENSE_MAX_N else None
+    )
     trials = sum(len(t.tried) for t in seq)
     return {
         "n": n,
         "budget": budget,
         "n_jobs": n_jobs,
         "chunk": _CHUNK,
-        "packed_step_ms": 1e3 * packed_s,
-        "dense_step_ms": 1e3 * dense_s,
-        "step_speedup_vs_dense": dense_s / packed_s,
+        "feature_step_ms": 1e3 * feature_s,
+        "gather_step_ms": 1e3 * gather_s if gather_s is not None else None,
+        "dense_step_ms": 1e3 * dense_s if dense_s is not None else None,
+        "step_speedup_vs_dense": dense_s / feature_s if dense_s else None,
+        # Geometry memory per job: the feature layout's resident (n,d)
+        # encoding vs the (n,n) tensor the gather layout would need.
+        "geom_feature_mb": n * d * 4 / 1e6,
+        "geom_gather_mb": n * n * 4 / 1e6,
+        "live_device_mb": live_mb,
+        "largest_live_buffer_mb": largest_mb,
         "sequential_s": t_seq,
         "batched_s": t_bat,
         "speedup": t_seq / t_bat,
         "total_trials": trials,
         "traces_identical": bool(identical and check),
+        "gather_traces_identical": gather_identical,
     }
 
 
@@ -265,12 +357,17 @@ def bench_scaling(ns: Sequence[int], n_jobs: int, budget: int, check: bool,
         r = bench_scaling_point(n, n_jobs, budget, check,
                                 packed_reps=packed_reps, dense_reps=dense_reps)
         rows.append(r)
+        gather = (f"{r['gather_step_ms']:8.2f}" if r["gather_step_ms"]
+                  else "       –")
+        dense = (f"{r['dense_step_ms']:9.2f}" if r["dense_step_ms"]
+                 else "        –")
         print(f"  C. n={r['n']:5d}  B={r['budget']:3d}  "
-              f"packed step {r['packed_step_ms']:8.2f} ms/chunk  "
-              f"dense step {r['dense_step_ms']:9.2f} ms/chunk  "
-              f"({r['step_speedup_vs_dense']:6.1f}x)  "
+              f"feature step {r['feature_step_ms']:8.2f} ms/chunk  "
+              f"gather {gather} ms  dense {dense} ms  "
+              f"geom {r['geom_feature_mb']:8.2f} MB (vs "
+              f"{r['geom_gather_mb']:9.1f} MB d²)  "
               f"end-to-end {r['batched_s']:6.2f} s batched vs "
-              f"{r['sequential_s']:6.2f} s sequential "
+              f"{r['sequential_s']:7.2f} s sequential "
               f"({r['speedup']:.2f}x)")
     return {"budget": budget, "n_jobs": n_jobs, "sweep": rows}
 
@@ -384,8 +481,8 @@ def _report(tag: str, r: dict) -> None:
 
 def run(n_jobs: int = 64, check: bool = True,
         settings: BOSettings = BOSettings(), *, smoke: bool = False,
-        scaling_ns: Sequence[int] = (69, 256, 512, 1024), budget: int = 24,
-        json_path: Optional[str] = None) -> dict:
+        scaling_ns: Sequence[int] = (69, 256, 512, 1024, 8192, 32768),
+        budget: int = 24, json_path: Optional[str] = None) -> dict:
     # The repo-root BENCH_fleet.json is the committed perf baseline; only
     # the full default protocol (64 jobs, full sweep) may rewrite it —
     # smoke or reduced-job runs would replace it with non-comparable
@@ -394,10 +491,12 @@ def run(n_jobs: int = 64, check: bool = True,
         json_path = BENCH_JSON
     packed_reps, dense_reps = 20, 2
     if smoke:
-        # Seconds-scale wiring check: tiny fleet, one small sweep point, no
-        # cluster workloads (their profiling + jit warm dominates).
+        # Seconds-scale wiring check: tiny fleet, one small sweep point
+        # plus the n=32768 feature-buffer point (seconds — nothing of
+        # extent n² exists on that path), no cluster workloads (their
+        # profiling + jit warm dominates).
         n_jobs = min(n_jobs, 8)
-        scaling_ns = (64,)
+        scaling_ns = (64, 32768)
         budget = 8
         packed_reps, dense_reps = 5, 1
 
@@ -413,7 +512,9 @@ def run(n_jobs: int = 64, check: bool = True,
                       packed_reps=packed_reps, dense_reps=dense_reps)
 
     out = {"n_jobs": n_jobs, "traces_identical": bool(check),
-           "smoke": bool(smoke), "donation": donation, "scaling": c}
+           "smoke": bool(smoke), "donation": donation, "scaling": c,
+           "peak_rss_mb": _peak_rss_mb()}
+    print(f"  peak RSS over the whole run: {out['peak_rss_mb']:.0f} MB")
 
     if not smoke:
         jobs = build_fleet(n_jobs)
@@ -444,6 +545,6 @@ if __name__ == "__main__":
     ap.add_argument("--no-check", action="store_true",
                     help="skip the trace-equivalence assertion")
     ap.add_argument("--smoke", action="store_true",
-                    help="seconds-scale wiring check (tiny fleet, one sweep point)")
+                    help="seconds-scale wiring check (tiny fleet, two sweep points)")
     args = ap.parse_args()
     run(args.jobs, check=not args.no_check, smoke=args.smoke)

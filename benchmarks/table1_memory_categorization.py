@@ -4,9 +4,7 @@ from __future__ import annotations
 
 import csv
 
-from repro.cluster import ClusterSimulator
-
-from benchmarks.common import GiB, JOB_ORDER, artifact_path, profile_once
+from benchmarks.common import GiB, JOB_ORDER, artifact_path, get_sim, job_profile
 
 # Paper Table I ground truth for validation.
 PAPER = {
@@ -33,8 +31,8 @@ def run() -> dict:
     rows = []
     matches = 0
     for key in JOB_ORDER:
-        sim = ClusterSimulator.for_job(key)
-        prof = profile_once(sim)
+        sim = get_sim(key)
+        prof = job_profile(key)
         cat = prof.model.category.value
         est_gb = (
             prof.model.estimate(sim.job.input_gb * GiB) / GiB

@@ -9,9 +9,7 @@ import csv
 
 import numpy as np
 
-from repro.cluster import ClusterSimulator
-
-from benchmarks.common import JOB_ORDER, artifact_path, profile_once
+from benchmarks.common import JOB_ORDER, artifact_path, job_profile
 
 PAPER_MEAN_S = 565.0
 
@@ -19,8 +17,9 @@ PAPER_MEAN_S = 565.0
 def run() -> dict:
     rows = []
     for key in JOB_ORDER:
-        sim = ClusterSimulator.for_job(key)
-        prof = profile_once(sim)
+        # Shared fleet-job pool: the same ProfileResult the fleet replays
+        # (search_traces) and Table I read — profiled once per process.
+        prof = job_profile(key)
         rows.append({
             "job": key,
             "time_s": round(prof.total_time_s, 1),

@@ -98,6 +98,7 @@ def _bo_loop(
     candidate_order: Sequence[Sequence[int]],
     settings: BOSettings,
     to_exhaustion: bool,
+    layout: str = "feature",
 ) -> SearchTrace:
     """Shared engine.  ``candidate_order`` is a list of candidate *pools*;
     pool k+1 is only opened once pool k is exhausted (Ruya's two phases).
@@ -156,7 +157,7 @@ def _bo_loop(
                 return SearchTrace(tried, costs, stop_iteration, phase_boundary)
             if probe is None:
                 probe = fast_bo.SequentialProbe(
-                    encoded_all, capacity, xi=settings.xi
+                    encoded_all, capacity, xi=settings.xi, layout=layout
                 )
                 probe.set_pool(cand_mask)
                 probe.start(obs_mask, tried, costs)
@@ -184,10 +185,17 @@ def cherrypick_search(
     *,
     settings: BOSettings = BOSettings(),
     to_exhaustion: bool = False,
+    layout: str = "feature",
 ) -> SearchTrace:
-    """Baseline: plain CherryPick BO over the full space."""
+    """Baseline: plain CherryPick BO over the full space.
+
+    ``layout`` selects the packed engine's geometry path — "feature" (the
+    O(n·d) feature-buffer default) or "gather" (the retained O(n²)
+    d²-gather path, kept for bit-identity cross-checks).
+    """
     return _bo_loop(
-        space, cost_fn, rng, [list(range(len(space)))], settings, to_exhaustion
+        space, cost_fn, rng, [list(range(len(space)))], settings,
+        to_exhaustion, layout,
     )
 
 
@@ -200,11 +208,13 @@ def ruya_search(
     *,
     settings: BOSettings = BOSettings(),
     to_exhaustion: bool = False,
+    layout: str = "feature",
 ) -> SearchTrace:
     """Ruya: BO over the priority group first, then over the remaining space.
 
     With an empty ``remaining`` (unclear jobs, or a requirement every config
     satisfies) this degrades exactly to the baseline — the paper's fallback.
+    ``layout`` as in `cherrypick_search`.
     """
     pools = [list(priority)] + ([list(remaining)] if len(remaining) else [])
-    return _bo_loop(space, cost_fn, rng, pools, settings, to_exhaustion)
+    return _bo_loop(space, cost_fn, rng, pools, settings, to_exhaustion, layout)

@@ -1,42 +1,64 @@
 """Packed-observation, fully-jitted Bayesian-optimization step and fleet update.
 
 The paper replays every search 200× over a 69-point space; the ROADMAP's
-north star is production-scale spaces.  At most B points are ever observed
+north star is production-scale spaces (real cloud catalogs span 10⁴–10⁵
+instance-type × count combinations).  At most B points are ever observed
 per search (B = the trial budget, 16–32 in the paper's regime), so the GP
-never needs full-extent linear algebra: this module keeps the whole space
-only as masks plus a once-per-search pairwise-distance tensor, and runs all
-per-step factorizations at the fixed packed capacity B.
+never needs full-extent linear algebra — and, since PR 3, it never needs
+full-extent *geometry* either: the engine carries a packed **(B,d) feature
+buffer** of the observed points (in trial order) and computes the (B,B)
+training block and the (B,n) cross block on the fly against the static
+(n,d) encoding.  Nothing of extent n×n is ever materialized.
 
 Per-step cost (n = space extent, d = features, B = trial capacity):
 
-    layout          kernels              factorizations   posterior
-    dense (old)     6·O(n²·d)            18·O(n³)         O(n²)
-    packed (now)    6·O(B²) + O(B·n)     18·O(B³)         O(B·n)
+    layout           memory      kernel blocks          factorizations  posterior
+    dense            O(n²)       6·O(n²·d)              18·O(n³)        O(n²)
+    d²-gather (PR 2) O(n²)       gathers + 6·O(B²)      18·O(B³)        O(B·n)
+    feature (now)    O(n·d)      O(B²d + B·n·d)+6·O(B²) 18·O(B³)        O(B·n)
 
-plus one O(n²·d) distance precompute per *search* (`precompute_d2`), shared
-by every step: scalar lengthscales only rescale d², so the 18-point
-(lengthscale, noise) grid and the cross-covariance are all gathers and
-elementwise rescales of that static tensor.  Exhaustive searches (B = n)
-match the old cost; budgeted searches over large spaces drop the n³ wall.
+The d²-gather layout paid a one-off O(n²·d) `precompute_d2` per search and
+held the (n,n) tensor for its whole lifetime — an O(n²) memory wall that
+caps searches near n ≈ 10³.  The feature layout recomputes the two distance
+blocks each step (O(B²d + Bnd), trivially cheap for B ≪ n) from O(n·d)
+state, so n = 10⁴–10⁵ spaces run in megabytes.  Both layouts are retained:
+`bo_step_core` (feature) drives both engines, `bo_step_core_gather` +
+`precompute_d2` are the PR-2 path kept for cross-checking and benchmarking,
+and `bo_step_core_dense` is the original full-extent baseline.
 
-Layout.  `FleetState` holds the trial log `tried` (B,) and a packed target
-buffer `py` (B,) aligned with it — observation k lives in slot k, in trial
-order.  `bo_step_core` gathers the (B,B) training block and the (B,n)
-cross block out of the precomputed d² tensor via `tried`, standardizes the
-packed targets, selects (lengthscale, noise) by masked log marginal
-likelihood over the 18-point grid, computes the posterior over all n points
-for the winner only, and argmaxes Expected Improvement over the candidate
-mask.
+Layout.  `FleetState` holds the trial log `tried` (B,), a packed target
+buffer `py` (B,), and the packed feature buffer `feats` (B,d), all aligned
+in trial order — observation k lives in slot k.  `bo_step_core` computes
+the (B,B)/(B,n) raw squared-distance blocks from `feats` via
+`packed_sqdist_blocks`, standardizes the packed targets, selects
+(lengthscale, noise) by masked log marginal likelihood over the 18-point
+grid, computes the posterior over all n points for the winner only, and
+argmaxes Expected Improvement over the candidate mask.
+
+Bit-identity across layouts.  `packed_sqdist_blocks` computes the (B,n)
+cross block with *exactly* `gp.pairwise_sqdist`'s expansion — sum-of-
+squares per row, one matmul for the cross terms, clamp at zero — which is
+also how `precompute_d2` fills the (n,n) tensor; the contraction axis (d)
+and its summation order are identical whether the left operand has extent
+B or n, so cross rows are bitwise equal to rows of the precomputed tensor.
+The (B,B) training block is then a column gather of the cross block by
+`tried` (a second (B,d)·(d,B) self-matmul can fuse differently from the
+(n,d)·(d,n) one — observed at d = 1 — while gathers are exact), so block
+identity with the d²-gather layout holds by construction (XLA:CPU,
+float32; property-checked in `tests/test_feature_buffer.py`).  Every op
+downstream of the blocks is shared (`_packed_core`), so the two layouts
+produce bit-identical (pick, max_ei, best) — and therefore bit-identical
+search traces.
 
 Padding is exact, not approximate.  Packed slots ≥ t are masked: their
 kernel rows/columns are zeroed and their diagonal entries set to 1, so the
 (B,B) Cholesky block-decouples — L is the factor of the observed block
 direct-summed with an identity — and padded slots contribute exactly 0 to
 alpha, the posterior mean, and the variance correction (their cross rows
-are zeroed too).  Garbage in padded `tried`/`py` slots is inert as long as
-it is finite (the engine only ever writes -1/0 there); padded *space*
-points (mask-level padding) are likewise never candidates and never
-observed.
+are zeroed too).  Garbage in padded `tried`/`py`/`feats` slots is inert as
+long as it is finite (the engine only ever writes -1/0 there); padded
+*space* points (mask-level padding) are likewise never candidates and
+never observed.
 
 Float32 discipline (unchanged from the dense engine): XLA:CPU float32
 results differ between compilation contexts — batch extent 1 compiles to
@@ -56,9 +78,12 @@ so BOTH engines execute the single `fleet_step` program:
     scalars come back — no per-iteration copies of any state buffer.
 
 `tests/test_fleet.py` asserts sequential↔batched trace identity
-seed-for-seed; `tests/test_core_bo.py` property-checks the packed math
-against the readable reference in `gp.py`/`acquisition.py` and the retained
-dense path (`bo_step_core_dense`, kept as the full-extent baseline for
+seed-for-seed (both layouts, and feature↔gather cross-layout);
+`tests/test_feature_buffer.py` property-checks the feature blocks against
+the d²-gather blocks and `gp.pairwise_sqdist` bit-for-bit, including
+padded-slot inertness; `tests/test_core_bo.py` checks the packed math
+against the readable reference in `gp.py`/`acquisition.py` and the
+retained dense path (`bo_step_core_dense`, the full-extent baseline for
 `benchmarks/fleet_bench.py`'s scaling sweep).
 """
 
@@ -80,13 +105,30 @@ __all__ = [
     "bo_step",
     "bo_step_core",
     "bo_step_core_dense",
+    "bo_step_core_gather",
+    "encode_features",
     "fleet_step",
+    "gather_sqdist_blocks",
+    "packed_sqdist_blocks",
     "precompute_d2",
 ]
 
 _JITTER = 1e-8
 _LENGTHSCALES = (0.1, 0.25, 0.5, 1.0, 2.0, 4.0)
 _NOISES = (1e-4, 1e-2, 1e-1)
+
+_LAYOUTS = ("feature", "gather")
+
+
+def encode_features(encoded) -> np.ndarray:
+    """Canonical float32 host view of the encoded space.
+
+    THE single conversion both engines use for the static (n,d) geometry:
+    the feature buffer is filled with rows of exactly this array, so the
+    sequential and fleet engines (and host-side buffer reconstruction in
+    `SequentialProbe.start`) all see bit-identical features.
+    """
+    return np.asarray(encoded, np.float32)
 
 
 @jax.jit
@@ -97,11 +139,49 @@ def _pairwise_sqdist_f32(encoded: jax.Array) -> jax.Array:
 def precompute_d2(encoded) -> jax.Array:
     """(n,n) raw pairwise squared distances over the encoded space, float32.
 
-    Computed once per search — UNBATCHED, so sequential and fleet runs of
-    the same space get bit-identical tensors — and threaded through every
-    step as a constant.  No step ever touches the (n,d) features again.
+    The PR-2 d²-gather layout: computed once per search — UNBATCHED, so
+    sequential and fleet runs of the same space get bit-identical tensors —
+    and threaded through every step as a constant.  O(n²) memory; retained
+    for cross-checking the feature-buffer layout and for benchmarking, not
+    used by the default engines.
     """
-    return _pairwise_sqdist_f32(jnp.asarray(np.asarray(encoded, np.float32)))
+    return _pairwise_sqdist_f32(jnp.asarray(encode_features(encoded)))
+
+
+def packed_sqdist_blocks(
+    feats: jax.Array,  # (B, d) packed features of observed points
+    encoded: jax.Array,  # (n, d) static encoding of the whole space
+    tried: jax.Array,  # (B,) i32 trial log, -1 padded
+) -> Tuple[jax.Array, jax.Array]:
+    """((B,B), (B,n)) raw squared-distance blocks from the feature buffer.
+
+    The (B,n) cross block is `gp.pairwise_sqdist`'s expansion verbatim —
+    same sum-of-squares, same matmul contraction over d, same clamp — and
+    its rows are bitwise equal to rows of `precompute_d2`'s (n,n) tensor
+    (the contraction axis and its order are identical whether the left
+    operand has extent B or n).  The (B,B) training block is then a COLUMN
+    GATHER of the cross block by `tried`, not a second matmul: a
+    (B,d)·(d,B) self-product can fuse differently from the (n,d)·(d,n)
+    one (observed at d = 1 on XLA:CPU, last-ulp), while gathers are exact
+    — so block identity with the d²-gather layout holds by construction.
+    O(Bnd) compute and O(Bn) memory; nothing of extent n² exists.
+    """
+    d2_bn = pairwise_sqdist(feats, encoded)
+    idx = jnp.maximum(tried, 0)  # padded slots gather column 0; masked later
+    return d2_bn[:, idx], d2_bn
+
+
+def gather_sqdist_blocks(
+    d2: jax.Array,  # (n, n) precomputed raw squared distances
+    tried: jax.Array,  # (B,) i32 trial log, -1 padded
+) -> Tuple[jax.Array, jax.Array]:
+    """((B,B), (B,n)) blocks gathered from the precomputed (n,n) tensor.
+
+    The PR-2 layout; padded slots gather row 0 (finite garbage, masked
+    exactly downstream).
+    """
+    idx = jnp.maximum(tried, 0)
+    return d2[idx[:, None], idx[None, :]], d2[idx]
 
 
 def _masked_posterior(
@@ -116,7 +196,7 @@ def _masked_posterior(
 
     This is the specification `tests/test_core_bo.py` checks against the
     readable subset-GP in `gp.py`; the packed `bo_step_core` computes the
-    same math with the observed set gathered into a (B,) buffer instead of
+    same math with the observed set packed into (B,) buffers instead of
     masked in place at extent n.
     """
     m = obs_mask.astype(x.dtype)
@@ -138,25 +218,22 @@ def _masked_posterior(
     return lml, mean_n, var_n
 
 
-def bo_step_core(
-    d2: jax.Array,  # (n, n) raw pairwise squared distances (precompute_d2)
-    tried: jax.Array,  # (B,) i32 trial log in trial order, -1 padded
-    py: jax.Array,  # (B,) f32 packed observed costs, aligned with tried
+def _packed_core(
+    d2_bb: jax.Array,  # (B, B) raw squared distances, training block
+    d2_bn: jax.Array,  # (B, n) raw squared distances, cross block
+    py: jax.Array,  # (B,) f32 packed observed costs, trial order
     t: jax.Array,  # () i32 observations made (valid packed slots)
     obs_mask: jax.Array,  # (n,) bool — configurations already tried
     cand_mask: jax.Array,  # (n,) bool — current candidate pool
-    xi: float = 0.0,
+    xi: float,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """One packed BO iteration, traceable.  Returns (pick_index, max_ei, best).
-
-    All training-side linear algebra runs at the packed capacity B; the
-    space extent n only appears in gathers, the (B,n) cross rescale, and
-    the EI argmax.
+    """Everything downstream of the distance blocks, shared verbatim by the
+    feature-buffer and d²-gather layouts — the op-for-op identity of this
+    tail is what makes the two layouts' picks bit-identical.
     """
-    b = tried.shape[0]
+    b = py.shape[0]
     pmask = jnp.arange(b) < t
     pm = pmask.astype(jnp.float32)
-    idx = jnp.maximum(tried, 0)  # padded slots gather row 0; masked below
 
     py = py.astype(jnp.float32)
     n_obs = jnp.maximum(jnp.sum(pm), 1.0)
@@ -165,12 +242,9 @@ def bo_step_core(
     y_std = jnp.maximum(jnp.sqrt(y_var), 1e-8)
     y_train = jnp.where(pmask, (py - y_mean) / y_std, 0.0)
 
-    d2_bb = d2[idx[:, None], idx[None, :]]  # (B, B) training block
-    d2_bn = d2[idx]  # (B, n) cross block
-
     # The kernel depends on the lengthscale only, and a scalar lengthscale
-    # only rescales d²: 6 elementwise rescales of one gathered (B,B) block
-    # serve all 18 (lengthscale, noise) grid points.
+    # only rescales d²: 6 elementwise rescales of one (B,B) block serve all
+    # 18 (lengthscale, noise) grid points.
     ls = jnp.asarray(_LENGTHSCALES, jnp.float32)
     nz = jnp.asarray(_NOISES, jnp.float32)
     ks = jax.vmap(lambda l: matern52_from_sqdist(d2_bb, l))(ls)  # (6, B, B)
@@ -203,7 +277,7 @@ def bo_step_core(
     best_h = jnp.argmax(lmls)
 
     # Posterior over all n points for the selected hyperparameters only:
-    # one (B,n) rescale of the gathered cross block, masked training rows.
+    # one (B,n) rescale of the cross block, masked training rows.
     k_star = matern52_from_sqdist(d2_bn, ls[best_h // nz.shape[0]]) * pm[:, None]
     mean_n = k_star.T @ alphas[best_h]
     v = jax.scipy.linalg.solve_triangular(chols[best_h], k_star, lower=True)
@@ -225,6 +299,47 @@ def bo_step_core(
     return pick, jnp.max(ei), best
 
 
+def bo_step_core(
+    encoded: jax.Array,  # (n, d) static float32 encoding of the whole space
+    feats: jax.Array,  # (B, d) packed features of observed points, trial order
+    tried: jax.Array,  # (B,) i32 trial log in trial order, -1 padded
+    py: jax.Array,  # (B,) f32 packed observed costs, aligned with feats
+    t: jax.Array,  # () i32 observations made (valid packed slots)
+    obs_mask: jax.Array,  # (n,) bool — configurations already tried
+    cand_mask: jax.Array,  # (n,) bool — current candidate pool
+    xi: float = 0.0,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One feature-buffer BO iteration, traceable.  Returns
+    (pick_index, max_ei, best).
+
+    All training-side linear algebra runs at the packed capacity B; the
+    space extent n only appears in the O(Bnd) cross-block matmul, the (B,n)
+    rescale, and the EI argmax.  Nothing of extent n² exists anywhere.
+    """
+    d2_bb, d2_bn = packed_sqdist_blocks(feats, encoded, tried)
+    return _packed_core(d2_bb, d2_bn, py, t, obs_mask, cand_mask, xi)
+
+
+def bo_step_core_gather(
+    d2: jax.Array,  # (n, n) raw pairwise squared distances (precompute_d2)
+    tried: jax.Array,  # (B,) i32 trial log in trial order, -1 padded
+    py: jax.Array,  # (B,) f32 packed observed costs, aligned with tried
+    t: jax.Array,  # () i32 observations made (valid packed slots)
+    obs_mask: jax.Array,  # (n,) bool — configurations already tried
+    cand_mask: jax.Array,  # (n,) bool — current candidate pool
+    xi: float = 0.0,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """The retained PR-2 d²-gather BO iteration: blocks gathered from the
+    once-per-search (n,n) tensor instead of recomputed from features.
+
+    Kept as the cross-check for the feature-buffer layout (the two must be
+    bit-identical — `tests/test_feature_buffer.py`) and for the scaling
+    sweep in `benchmarks/fleet_bench.py`.  Not used by the default engines.
+    """
+    d2_bb, d2_bn = gather_sqdist_blocks(d2, tried)
+    return _packed_core(d2_bb, d2_bn, py, t, obs_mask, cand_mask, xi)
+
+
 def bo_step_core_dense(
     encoded: jax.Array,  # (n, d) standardized features of the whole space
     obs_mask: jax.Array,  # (n,) bool — configurations already tried
@@ -235,8 +350,8 @@ def bo_step_core_dense(
     """The pre-packed full-extent BO step: O(18n³) per call.
 
     Retained as the dense baseline `benchmarks/fleet_bench.py` times the
-    packed engine against, and as a second reference for the packed math in
-    `tests/test_core_bo.py`.  Not used by either search engine.
+    packed layouts against, and as a second reference for the packed math
+    in `tests/test_core_bo.py`.  Not used by either search engine.
     """
     x = encoded.astype(jnp.float32)
     m = obs_mask.astype(x.dtype)
@@ -298,13 +413,18 @@ def bo_step_core_dense(
 class FleetState(NamedTuple):
     """Per-job search state, device-resident between `fleet_step` calls.
 
-    The packed buffers (`tried`, `py`) have static capacity B = the job's
-    trial budget; slot k holds the k-th observation, in trial order.
+    The packed buffers (`tried`, `py`, `feats`) have static capacity B =
+    the job's trial budget; slot k holds the k-th observation, in trial
+    order.  `feats` carries the observed points' encoded features — the
+    feature-buffer layout computes its kernel blocks from it, the d²-gather
+    layout carries it untouched (zeros) so both layouts share one state
+    type and one donation contract.
     """
 
     obs: jax.Array  # (n,) bool — observation mask over the space
     tried: jax.Array  # (B,) i32 — trial log, -1 padded
     py: jax.Array  # (B,) f32 — packed observed costs, aligned with tried
+    feats: jax.Array  # (B, d) f32 — packed features of observed points
     t: jax.Array  # () i32 — trials made
     stop: jax.Array  # () i32 — stop-criterion iteration, -1 = not yet
     pb: jax.Array  # () i32 — phase boundary, -1 = still in phase 0
@@ -315,7 +435,7 @@ class FleetState(NamedTuple):
 
 def fleet_step(
     state: FleetState,
-    d2: jax.Array,  # (n, n) precomputed raw squared distances
+    geom: jax.Array,  # (n,d) encoded [feature layout] | (n,n) d2 [gather]
     costs: jax.Array,  # (n,) f32 — full observation table
     prio_mask: jax.Array,  # (n,) bool — priority pool (phase 0)
     rem_mask: jax.Array,  # (n,) bool — remaining pool (phase 1)
@@ -326,14 +446,23 @@ def fleet_step(
     ei_stop_rel: jax.Array,  # () f32 — stop when max EI < rel·best
     to_exhaustion: jax.Array,  # () bool — record the stop but keep going
     xi: float = 0.0,
+    layout: str = "feature",
 ) -> FleetState:
     """One search iteration: candidate pools → BO step → stop/phase
     bookkeeping → observation.  Applying it `max_trials` times executes one
     complete two-phase search; semantics mirror
     `repro.core.bayesopt._bo_loop` exactly.  A no-op once the job is done.
+
+    ``layout`` is trace-static: "feature" (default) takes the (n,d)
+    encoding as ``geom`` and maintains the packed feature buffer;
+    "gather" takes the precomputed (n,n) distance tensor (the retained
+    PR-2 path) and leaves ``state.feats`` untouched.
     """
-    obs, tried, py, t, stop, pb = (
-        state.obs, state.tried, state.py, state.t, state.stop, state.pb,
+    if layout not in _LAYOUTS:
+        raise ValueError(f"unknown layout {layout!r}; want one of {_LAYOUTS}")
+    obs, tried, py, feats, t, stop, pb = (
+        state.obs, state.tried, state.py, state.feats, state.t, state.stop,
+        state.pb,
     )
     n_init_slots = init_picks.shape[0]
 
@@ -352,7 +481,14 @@ def fleet_step(
     pb = jnp.where(~state.done & (pb < 0) & ~in_phase0 & jnp.any(rem_left), t, pb)
 
     is_init = t < init_count
-    bo_pick, max_ei, best = bo_step_core(d2, tried, py, t, obs, cand, xi)
+    if layout == "feature":
+        bo_pick, max_ei, best = bo_step_core(
+            geom, feats, tried, py, t, obs, cand, xi
+        )
+    else:
+        bo_pick, max_ei, best = bo_step_core_gather(
+            geom, tried, py, t, obs, cand, xi
+        )
     scripted = init_picks[jnp.clip(t, 0, n_init_slots - 1)]
     pick = jnp.where(is_init, scripted, bo_pick).astype(jnp.int32)
 
@@ -372,47 +508,57 @@ def fleet_step(
     obs = jnp.where(observe, obs.at[pick].set(True), obs)
     tried = jnp.where(observe, tried.at[slot].set(pick), tried)
     py = jnp.where(observe, py.at[slot].set(costs[pick]), py)
+    if layout == "feature":
+        # The observed point's features enter the packed buffer — the only
+        # geometry the next step's kernel blocks will read.
+        feats = jnp.where(observe, feats.at[slot].set(geom[pick]), feats)
     t = t + observe.astype(jnp.int32)
     # A job is done when its candidates ran out, its stop criterion halted
     # it, or its trial budget is exhausted (the last also settles zero-budget
     # dummy pads so early-stop polling can see an all-done chunk).
     done = state.done | (live & (~has_cand | halt)) | ~budget_left
     return FleetState(
-        obs=obs, tried=tried, py=py, t=t, stop=stop, pb=pb, done=done,
+        obs=obs, tried=tried, py=py, feats=feats, t=t, stop=stop, pb=pb,
+        done=done,
         last_ei=jnp.where(live, max_ei, state.last_ei),
         last_best=jnp.where(live, best, state.last_best),
     )
 
 
-@partial(jax.jit, static_argnames=("xi",), donate_argnums=(0,))
+@partial(jax.jit, static_argnames=("xi", "layout"), donate_argnums=(0,))
 def _probe_step(
     state2: FleetState,  # batch-extent-2 state (row 1: discarded duplicate)
-    d2_2, costs2, prio2, rem2, init_picks2, init_count2, last_cost, *, xi: float
+    geom2, costs2, prio2, rem2, init_picks2, init_count2, last_cost,
+    *, xi: float, layout: str,
 ):
     """One `fleet_step` application at batch extent 2 (extent 1 compiles to
     different float32 numerics).  The state is DONATED: XLA updates the
-    packed buffers in place instead of copying them each iteration.
+    packed buffers (including the (B,d) feature buffer) in place instead of
+    copying them each iteration.
 
     The probe runs before the cost of its pick is known, so slot t-1 holds a
     placeholder 0 from the previous call's observation; `last_cost` patches
-    in the real value before any math runs.
+    in the real value before any math runs.  (The feature buffer needs no
+    patching: the picked point's features are known at observation time.)
     """
     t_prev = state2.t[0]
     slot = jnp.maximum(t_prev - 1, 0)
     val = jnp.where(t_prev > 0, last_cost, state2.py[0, slot])
     state2 = state2._replace(py=state2.py.at[:, slot].set(val))
 
-    def one(s, dd, c, p, r, ip, ic):
+    def one(s, g, c, p, r, ip, ic):
         return fleet_step(
-            s, dd, c, p, r, ip, ic,
+            s, g, c, p, r, ip, ic,
             s.t + 1,  # budget for exactly one more trial
             jnp.asarray(0, jnp.int32),
             jnp.asarray(0.0, jnp.float32),
             jnp.asarray(True),  # never halt inside the probe
             xi,
+            layout,
         )
 
-    out = jax.vmap(one)(state2, d2_2, costs2, prio2, rem2, init_picks2, init_count2)
+    out = jax.vmap(one)(state2, geom2, costs2, prio2, rem2, init_picks2,
+                        init_count2)
     b = out.tried.shape[1]
     pick = out.tried[0, jnp.minimum(t_prev, b - 1)]
     return out, pick, out.last_ei[0], out.last_best[0]
@@ -429,15 +575,27 @@ class SequentialProbe:
     ``capacity`` must equal the trial budget the fleet engine would compute
     for the same job — both engines then factorize (B,B) systems of the
     same static extent, which is what keeps their traces bit-identical.
+
+    ``layout="feature"`` (default) keeps only the (n,d) encoding on device
+    — O(n·d) memory, the 10⁴–10⁵-point regime; ``layout="gather"`` is the
+    retained PR-2 path holding the (n,n) distance tensor.
     """
 
-    def __init__(self, encoded, capacity: int, xi: float = 0.0):
-        encoded = np.asarray(encoded, np.float32)
-        self._n = encoded.shape[0]
+    def __init__(self, encoded, capacity: int, xi: float = 0.0,
+                 layout: str = "feature"):
+        if layout not in _LAYOUTS:
+            raise ValueError(f"unknown layout {layout!r}; want one of {_LAYOUTS}")
+        enc = encode_features(encoded)
+        self._n, self._d = enc.shape
         self._b = max(int(capacity), 1)
         self._xi = float(xi)
-        d2 = precompute_d2(encoded)
-        self._d2_2 = jnp.stack([d2, d2])
+        self._layout = layout
+        self._enc = enc
+        if layout == "feature":
+            geom = jnp.asarray(enc)
+        else:
+            geom = precompute_d2(enc)
+        self._geom2 = jnp.stack([geom, geom])
         # Observation values are irrelevant inside the probe: the real cost
         # arrives via `last_cost` on the following call.
         self._costs2 = jnp.zeros((2, self._n), jnp.float32)
@@ -457,10 +615,15 @@ class SequentialProbe:
         k = len(trial_order)
         if k > self._b:
             raise ValueError(f"{k} observations exceed packed capacity {self._b}")
+        order = np.asarray(trial_order, np.int32)
         tried = np.full(self._b, -1, np.int32)
         py = np.zeros(self._b, np.float32)
-        tried[:k] = np.asarray(trial_order, np.int32)
+        feats = np.zeros((self._b, self._d), np.float32)
+        tried[:k] = order
         py[:k] = np.asarray(trial_costs, np.float32)
+        # Rows of the canonical float32 encoding — bit-identical to what the
+        # on-device observation writes would have accumulated.
+        feats[:k] = self._enc[order]
 
         def two(a):
             a = jnp.asarray(a)
@@ -470,6 +633,7 @@ class SequentialProbe:
             obs=two(np.asarray(obs_mask, bool)),
             tried=two(tried),
             py=two(py),
+            feats=two(feats),
             t=two(np.asarray(k, np.int32)),
             stop=two(np.asarray(-1, np.int32)),
             pb=two(np.asarray(-1, np.int32)),
@@ -483,9 +647,10 @@ class SequentialProbe:
         if self._state is None or self._pool2 is None:
             raise RuntimeError("call start() and set_pool() before step()")
         self._state, pick, ei, best = _probe_step(
-            self._state, self._d2_2, self._costs2, self._pool2, self._rem2,
+            self._state, self._geom2, self._costs2, self._pool2, self._rem2,
             self._init_picks2, self._init_count2,
             jnp.asarray(last_cost, jnp.float32), xi=self._xi,
+            layout=self._layout,
         )
         return int(pick), float(ei), float(best)
 
@@ -499,6 +664,7 @@ def bo_step(
     *,
     trial_order: Optional[Sequence[int]] = None,
     capacity: Optional[int] = None,
+    layout: str = "feature",
 ) -> Tuple[int, float, float]:
     """One standalone BO iteration.  Returns (pick_index, max_ei, best).
 
@@ -516,7 +682,7 @@ def bo_step(
         else np.flatnonzero(obs_mask)
     )
     cap = int(capacity) if capacity is not None else max(1, len(order))
-    probe = SequentialProbe(encoded, cap, xi=xi)
+    probe = SequentialProbe(encoded, cap, xi=xi, layout=layout)
     probe.set_pool(cand_mask)
     probe.start(obs_mask, order, y[order])
     last = float(y[order][-1]) if len(order) else 0.0

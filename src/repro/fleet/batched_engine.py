@@ -6,17 +6,23 @@ thousands of synchronizations for a fleet.  Here the whole fleet advances in
 lockstep:
 
   * `jax.vmap` over jobs lifts the per-job state (observation mask, packed
-    trial log/targets, phase/stop registers — `fast_bo.FleetState`) into
-    batched arrays that stay resident on device;
+    trial log/targets/features — `fast_bo.FleetState`) into batched arrays
+    that stay resident on device;
   * one jitted call per iteration applies `fast_bo.fleet_step` to every job
     at once, with the state DONATED to the call so XLA updates the buffers
     in place instead of copying them per iteration; the host only counts
     iterations (all bookkeeping — including per-job stopping — happens on
     device, and iterations dispatch asynchronously, so there are no
     per-step host round-trips);
-  * each job's raw pairwise-distance tensor (`fast_bo.precompute_d2`) is
-    computed once up front and threaded through every iteration as a
-    constant — the packed step only gathers and rescales it;
+  * per-job geometry is the static (n,d) float32 encoding — the
+    feature-buffer layout computes its (B,B)/(B,n) distance blocks on the
+    fly from the packed (B,d) feature buffer each step, so nothing of
+    extent n² is ever materialized and 10⁴–10⁵-point spaces run in O(n·d)
+    memory.  The retained PR-2 path (``layout="gather"``) instead threads
+    each job's precomputed (n,n) distance tensor (`fast_bo.precompute_d2`)
+    through every iteration; the two layouts are bit-identical
+    (`tests/test_feature_buffer.py`) and the gather path is kept for
+    cross-checking and benchmarking;
   * `fleet_step` is the *same compiled program* the sequential path probes,
     so the two engines are trace-identical — `tests/test_fleet.py` asserts
     equal `tried`/`costs`/`stop_iteration` sequences seed-for-seed.  (A
@@ -45,7 +51,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bayesopt import BOSettings, SearchTrace, trial_budget
-from repro.core.fast_bo import FleetState, fleet_step, precompute_d2
+from repro.core.fast_bo import (
+    _LAYOUTS,
+    FleetState,
+    encode_features,
+    fleet_step,
+    precompute_d2,
+)
 from repro.core.search_space import SearchSpace
 
 __all__ = ["BatchedTrace", "batched_search"]
@@ -100,33 +112,36 @@ _CHUNK = 8
 _POLL_PERIOD = 8
 
 
-@partial(jax.jit, static_argnames=("xi",), donate_argnums=(0,))
+@partial(jax.jit, static_argnames=("xi", "layout"), donate_argnums=(0,))
 def _fleet_update(
-    state, d2, costs, prio_mask, rem_mask, init_picks, init_count,
+    state, geom, costs, prio_mask, rem_mask, init_picks, init_count,
     max_trials, min_obs, ei_stop_rel, to_exhaustion, *, xi: float,
+    layout: str = "feature",
 ):
     """One lockstep iteration for a chunk of jobs (vmapped `fleet_step`).
 
     The state is donated: its buffers alias the outputs, so each fleet
     iteration updates in place — no per-iteration device copies of the
-    observation mask or the packed trial buffers (asserted by
-    `benchmarks/fleet_bench.py`).
+    observation mask or the packed trial/target/feature buffers (asserted
+    by `benchmarks/fleet_bench.py`).
     """
 
-    def one(s, dd, c, p, r, ip, ic, mt):
+    def one(s, g, c, p, r, ip, ic, mt):
         return fleet_step(
-            s, dd, c, p, r, ip, ic, mt, min_obs, ei_stop_rel, to_exhaustion, xi
+            s, g, c, p, r, ip, ic, mt, min_obs, ei_stop_rel, to_exhaustion,
+            xi, layout,
         )
 
     return jax.vmap(one)(
-        state, d2, costs, prio_mask, rem_mask, init_picks, init_count,
+        state, geom, costs, prio_mask, rem_mask, init_picks, init_count,
         max_trials,
     )
 
 
 def _run_chunk(
-    d2, costs, prio_mask, rem_mask, init_picks, init_count, max_trials,
-    settings: BOSettings, to_exhaustion: bool, capacity: int,
+    geom, costs, prio_mask, rem_mask, init_picks, init_count, max_trials,
+    settings: BOSettings, to_exhaustion: bool, capacity: int, feat_dim: int,
+    layout: str,
 ):
     """Drive one chunk of jobs to completion; state stays on device.
 
@@ -141,6 +156,7 @@ def _run_chunk(
         obs=jnp.zeros((j, n), bool),
         tried=jnp.full((j, capacity), -1, jnp.int32),
         py=jnp.zeros((j, capacity), jnp.float32),
+        feats=jnp.zeros((j, capacity, feat_dim), jnp.float32),
         t=jnp.zeros(j, jnp.int32),
         stop=jnp.full(j, -1, jnp.int32),
         pb=jnp.full(j, -1, jnp.int32),
@@ -149,7 +165,7 @@ def _run_chunk(
         last_best=jnp.full(j, jnp.inf, jnp.float32),
     )
     args = (
-        jnp.asarray(d2), jnp.asarray(costs), jnp.asarray(prio_mask),
+        jnp.asarray(geom), jnp.asarray(costs), jnp.asarray(prio_mask),
         jnp.asarray(rem_mask), jnp.asarray(init_picks),
         jnp.asarray(init_count), jnp.asarray(max_trials),
         jnp.asarray(settings.min_observations, jnp.int32),
@@ -161,7 +177,7 @@ def _run_chunk(
     # at its last trial, and where budget exhaustion latches `done`.
     steps = int(np.max(max_trials)) + 1 if len(max_trials) else 0
     for k in range(steps):
-        state = _fleet_update(state, *args, xi=settings.xi)
+        state = _fleet_update(state, *args, xi=settings.xi, layout=layout)
         if (
             not to_exhaustion
             and k % _POLL_PERIOD == _POLL_PERIOD - 1
@@ -191,6 +207,7 @@ def batched_search(
     remaining: Optional[Sequence[Sequence[int]]] = None,
     settings: BOSettings = BOSettings(),
     to_exhaustion: bool = False,
+    layout: str = "feature",
 ) -> BatchedTrace:
     """Run J independent BO searches in lockstep on device.
 
@@ -205,7 +222,12 @@ def batched_search(
     each job's Ruya split (omitted → plain CherryPick over the whole space).
     The random initialization consumes ``rngs[j]`` exactly like the
     sequential engine, so seed-matched runs produce identical traces.
+    ``layout`` selects the packed geometry path: "feature" (default, O(n·d)
+    memory) or "gather" (retained PR-2 (n,n)-tensor path, bit-identical,
+    kept for cross-checks — do not use it for n ≳ 10⁴ spaces).
     """
+    if layout not in _LAYOUTS:
+        raise ValueError(f"unknown layout {layout!r}; want one of {_LAYOUTS}")
     n_jobs = len(cost_tables)
     if len(rngs) != n_jobs:
         raise ValueError(f"{len(rngs)} rngs for {n_jobs} jobs")
@@ -255,16 +277,20 @@ def batched_search(
         enc = space.encoded()
         groups.setdefault((enc.shape, int(max_trials_all[j])), []).append(j)
 
-    # The distance tensor is once-per-space work (seed-replica fleets alias
-    # one SearchSpace object): computed unbatched so it is bit-identical to
-    # the sequential engine's, then stacked per chunk.
-    d2_cache: dict = {}
+    # Per-space geometry is once-per-space work (seed-replica fleets alias
+    # one SearchSpace object), computed identically to the sequential
+    # engine's, then stacked per chunk.  Feature layout: the (n,d) float32
+    # encoding.  Gather layout: the unbatched (n,n) distance tensor.
+    geom_cache: dict = {}
 
-    def space_d2(space: SearchSpace) -> np.ndarray:
+    def space_geom(space: SearchSpace) -> np.ndarray:
         key = id(space)
-        if key not in d2_cache:
-            d2_cache[key] = np.asarray(precompute_d2(space.encoded()))
-        return d2_cache[key]
+        if key not in geom_cache:
+            enc = encode_features(space.encoded())
+            geom_cache[key] = (
+                enc if layout == "feature" else np.asarray(precompute_d2(enc))
+            )
+        return geom_cache[key]
 
     for (shape, cap), members in groups.items():
         n, d = shape
@@ -290,9 +316,9 @@ def batched_search(
         for lo in range(0, g, _CHUNK):
             hi = min(lo + _CHUNK, g)
             chunk = slice(lo, hi)
-            d2 = np.stack([space_d2(space_list[j]) for j in members[lo:hi]])
+            geom = np.stack([space_geom(space_list[j]) for j in members[lo:hi]])
             parts = [
-                d2, costs[chunk], prio_mask[chunk],
+                geom, costs[chunk], prio_mask[chunk],
                 rem_mask[chunk], init_picks[chunk], init_count[chunk],
                 max_trials[chunk],
             ]
@@ -300,7 +326,7 @@ def batched_search(
                 parts = [np.concatenate([a, np.zeros_like(a[:1])]) for a in parts]
             state = _run_chunk(
                 *parts, settings=settings, to_exhaustion=to_exhaustion,
-                capacity=capacity,
+                capacity=capacity, feat_dim=int(d), layout=layout,
             )
             s_tried, s_t, s_stop, s_pb = (
                 np.asarray(state.tried), np.asarray(state.t),

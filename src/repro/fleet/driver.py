@@ -54,15 +54,20 @@ class FleetJob:
 
 
 def cluster_fleet(
-    keys: Sequence[str], *, per_node_overhead_gb: float = 0.5
+    keys: Sequence[str], *, per_node_overhead_gb: float = 0.5, sims=None
 ) -> List[FleetJob]:
-    """Build fleet jobs from the paper's emulated Spark/Hadoop workloads."""
+    """Build fleet jobs from the paper's emulated Spark/Hadoop workloads.
+
+    ``sims`` optionally supplies pre-built `ClusterSimulator`s by key
+    (callers with their own memo — e.g. `benchmarks.common` — avoid
+    re-instantiating the workload emulation).
+    """
     from repro.cluster.simulator import ClusterSimulator
 
     GiB = 1024.0**3
     jobs = []
     for key in keys:
-        sim = ClusterSimulator.for_job(key)
+        sim = (sims or {}).get(key) or ClusterSimulator.for_job(key)
         jobs.append(
             FleetJob(
                 name=key,

@@ -9,12 +9,41 @@ import os
 import subprocess
 import sys
 import textwrap
+import time
 
 import pytest
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 if SRC not in sys.path:
     sys.path.insert(0, os.path.abspath(SRC))
+
+# Tier-1 wall-clock budget (warn, not fail): the default `pytest -q` lane
+# must stay fast enough to run on every change.  Slow/bench lanes opt out
+# by selecting different markers.
+TIER1_BUDGET_S = 200.0
+_SESSION_T0 = {"t0": None}
+
+
+def pytest_sessionstart(session):
+    _SESSION_T0["t0"] = time.time()
+
+
+def pytest_terminal_summary(terminalreporter, exitstatus, config):
+    t0 = _SESSION_T0["t0"]
+    if t0 is None:
+        return
+    elapsed = time.time() - t0
+    # Only the tier-1 lane carries the budget: a custom -m selection (slow
+    # sweeps, bench smoke) is expected to take longer.
+    markexpr = getattr(config.option, "markexpr", "") or ""
+    is_tier1 = markexpr.strip() == "not slow and not bench_smoke"
+    if is_tier1 and elapsed > TIER1_BUDGET_S:
+        terminalreporter.write_line(
+            f"WARNING: tier-1 session took {elapsed:.0f}s > "
+            f"{TIER1_BUDGET_S:.0f}s budget — move new long-running tests "
+            "to the slow lane (@pytest.mark.slow) or speed them up",
+            yellow=True,
+        )
 
 
 def run_with_devices(code: str, n_devices: int = 8, timeout: int = 560) -> str:

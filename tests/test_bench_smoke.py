@@ -1,7 +1,10 @@
 """Benchmark wiring smoke (`pytest -m bench_smoke`): runs the fleet bench
-in its seconds-scale smoke mode — donation check, one small scaling-sweep
-point with trace verification, and the `BENCH_fleet.json` emission — so the
-bench plumbing is exercised without the multi-minute full sweep.
+in its seconds-scale smoke mode — donation check (including the (B,d)
+feature buffer), a small scaling-sweep point with trace verification AND
+the n = 32768 feature-buffer point (the 10⁴–10⁵ regime must stay wired:
+nothing of extent n² exists on that path, so it is seconds, not minutes),
+and the `BENCH_fleet.json` emission — so the bench plumbing is exercised
+without the multi-minute full sweep.
 
 Excluded from the default tier-1 lane (see pyproject addopts); selected
 explicitly with `pytest -m bench_smoke`, and included in the full
@@ -31,16 +34,37 @@ def test_fleet_bench_smoke(tmp_path):
 
     assert out["smoke"] is True
     assert out["donation"]["state_donated"]
+    assert "feats" in out["donation"]["buffers_checked"]
 
     rows = out["scaling"]["sweep"]
-    assert rows
+    assert [r["n"] for r in rows] == [64, 32768]
     for r in rows:
         assert r["traces_identical"]
-        # The packed step must beat the dense full-extent step even at the
-        # smoke point (B=8, n=64); the margin is large (>10x) so a loose
-        # bound survives this host's ±2x wall-clock wobble.
-        assert r["step_speedup_vs_dense"] > 2.0
-        assert r["packed_step_ms"] > 0.0
+        assert r["feature_step_ms"] > 0.0
+
+    small, large = rows
+    # The small point exercises all three layouts; the feature step must
+    # beat the dense full-extent step even at the smoke point (B=8, n=64);
+    # the margin is large (>10x) so a loose bound survives this host's
+    # ±2x wall-clock wobble.
+    assert small["gather_traces_identical"]
+    assert small["step_speedup_vs_dense"] > 2.0
+
+    # The n=32768 point runs the feature buffer only: the dense step
+    # (O(18n³)) and the gather layout (a 4 GiB (n,n) tensor per job) are
+    # exactly the walls it removes.
+    assert large["dense_step_ms"] is None
+    assert large["gather_step_ms"] is None
+    assert large["gather_traces_identical"] is None
+    # Memory reporting: the resident geometry is the (n,d) encoding — under
+    # a few MB — while the d²-gather layout would need n²·4 bytes ≈ 4.3 GB;
+    # and no live device buffer is anywhere near (n,n).
+    assert large["geom_feature_mb"] < 4.0
+    assert large["geom_gather_mb"] > 1000.0
+    assert large["largest_live_buffer_mb"] < large["geom_gather_mb"] / 50.0
+    # Peak RSS is monotone over the process, so it is reported once per
+    # run, not per sweep point.
+    assert out["peak_rss_mb"] > 0.0
 
     data = json.loads(path.read_text())
     assert data["scaling"]["sweep"][0]["n"] == rows[0]["n"]

@@ -1,10 +1,12 @@
 """Property tests: the jitted packed-observation fast path (`fast_bo`)
 against the readable reference GP (`gp.py` + `acquisition.py`).
 
-The fast path packs the observed set into a fixed-capacity (B,) buffer in
-trial order and gathers its kernel blocks from a precomputed distance
-tensor; padding must be *exact* — padded packed slots (and mask-level
-padded space points) contribute nothing to the posterior, bit for bit.
+The fast path packs the observed set into fixed-capacity (B,) buffers in
+trial order and computes its kernel blocks from the packed (B,d) feature
+buffer (or, on the retained d²-gather layout, gathers them from a
+precomputed distance tensor); padding must be *exact* — padded packed
+slots (and mask-level padded space points) contribute nothing to the
+posterior, bit for bit.
 These tests check that claim over randomized observation sets and buffer
 capacities (including the full-buffer B = t and B = 1 edges), the EI/pick
 agreement of `bo_step` with the reference pipeline and with the retained
@@ -25,6 +27,8 @@ from repro.core.fast_bo import (
     bo_step,
     bo_step_core,
     bo_step_core_dense,
+    bo_step_core_gather,
+    encode_features,
     precompute_d2,
 )
 from repro.core.gp import (
@@ -205,28 +209,44 @@ class TestPackedEngine:
     @pytest.mark.parametrize("seed", range(4))
     def test_padded_slots_are_bitwise_inert(self, seed):
         """Finite garbage in packed slots ≥ t must not change a single bit
-        of (pick, max_ei, best) — the padding is exact, not approximate."""
+        of (pick, max_ei, best) — the padding is exact, not approximate —
+        on BOTH packed layouts (feature buffer and the retained d²-gather).
+        """
         x, obs_mask, y = random_case(seed)
         cand = ~obs_mask
         capacity = 12
         tried, py, k = self._packed_inputs(x, obs_mask, y, capacity)
+        enc = encode_features(x)
+        feats = np.zeros((capacity, enc.shape[1]), np.float32)
+        feats[:k] = enc[tried[:k]]
         d2 = precompute_d2(x)
-        core = jax.jit(bo_step_core)
+        core_f = jax.jit(bo_step_core)
+        core_g = jax.jit(bo_step_core_gather)
+        args_tail = (jnp.asarray(k, jnp.int32), jnp.asarray(obs_mask),
+                     jnp.asarray(cand))
 
-        ref = core(d2, jnp.asarray(tried), jnp.asarray(py),
-                   jnp.asarray(k, jnp.int32), jnp.asarray(obs_mask),
-                   jnp.asarray(cand))
+        ref = core_f(jnp.asarray(enc), jnp.asarray(feats),
+                     jnp.asarray(tried), jnp.asarray(py), *args_tail)
+        rng = np.random.default_rng(100 + seed)
         tried_g = tried.copy()
         py_g = py.copy()
-        rng = np.random.default_rng(100 + seed)
+        feats_g = feats.copy()
         tried_g[k:] = rng.integers(0, len(x), size=capacity - k)
         py_g[k:] = 1e6 * rng.standard_normal(capacity - k)
-        got = core(d2, jnp.asarray(tried_g), jnp.asarray(py_g),
-                   jnp.asarray(k, jnp.int32), jnp.asarray(obs_mask),
-                   jnp.asarray(cand))
+        feats_g[k:] = 1e6 * rng.standard_normal((capacity - k, enc.shape[1]))
+        got = core_f(jnp.asarray(enc), jnp.asarray(feats_g),
+                     jnp.asarray(tried_g), jnp.asarray(py_g), *args_tail)
         assert int(got[0]) == int(ref[0])
         assert float(got[1]) == float(ref[1])  # bitwise, no tolerance
         assert float(got[2]) == float(ref[2])
+
+        # The retained gather layout: same inertness, and the same bits as
+        # the feature layout.
+        gat_ref = core_g(d2, jnp.asarray(tried), jnp.asarray(py), *args_tail)
+        gat = core_g(d2, jnp.asarray(tried_g), jnp.asarray(py_g), *args_tail)
+        assert int(gat[0]) == int(gat_ref[0]) == int(ref[0])
+        assert float(gat[1]) == float(gat_ref[1]) == float(ref[1])
+        assert float(gat[2]) == float(gat_ref[2]) == float(ref[2])
 
     @pytest.mark.parametrize("seed", range(4))
     def test_full_buffer_matches_reference(self, seed):

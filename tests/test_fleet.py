@@ -6,10 +6,13 @@ sequences between `batched_search` (J jobs advanced in device-resident
 lockstep) and J runs of the sequential engine with the same seeds — the
 contract that makes fleet mode a pure execution optimization — including
 across packed-buffer capacities (heterogeneous trial budgets group by
-(shape, B)) and space extents (n = 69 exhaustion = full buffer, synthetic
-n = 512 in the budgeted B ≪ n regime).  The fast tests mostly share array
-shapes so the engine compiles few programs; the exhaustive 69-config
-cluster sweep is marked `slow`.
+(shape, B)), space extents (n = 69 exhaustion = full buffer, synthetic
+n = 512 and n = 8192 in the budgeted B ≪ n regime), and packed geometry
+layouts (the default feature buffer vs the retained d²-gather path,
+`layout="gather"` — both must land on identical bits).  The fast tests
+mostly share array shapes so the engine compiles few programs; the
+exhaustive 69-config cluster sweep and the n = 8192 identity are marked
+`slow`.
 """
 
 import numpy as np
@@ -269,9 +272,21 @@ class TestTraceEquivalenceScaling:
             space, [table] * 2, [np.random.default_rng(s) for s in range(2)],
             to_exhaustion=True,
         )
+        # The retained d²-gather layout must land on the identical traces —
+        # sequential↔batched↔feature↔gather, all four bit-for-bit.
+        bt_g = batched_search(
+            space, [table] * 2, [np.random.default_rng(s) for s in range(2)],
+            to_exhaustion=True, layout="gather",
+        )
+        seq_g = cherrypick_search(
+            space, lambda i: float(table[i]), np.random.default_rng(0),
+            to_exhaustion=True, layout="gather",
+        )
         for j, ref in enumerate(refs):
             assert len(ref.tried) == 69
             assert_traces_equal(bt.job_trace(j), ref)
+            assert_traces_equal(bt_g.job_trace(j), ref)
+        assert_traces_equal(seq_g, refs[0])
 
     def test_n512_budgeted_identical(self):
         space, table = synth_space_table(512)
@@ -289,9 +304,51 @@ class TestTraceEquivalenceScaling:
             priority=[prio] * 3, remaining=[rest] * 3, settings=st,
             to_exhaustion=True,
         )
+        bt_g = batched_search(
+            space, [table] * 3, [np.random.default_rng(s) for s in range(3)],
+            priority=[prio] * 3, remaining=[rest] * 3, settings=st,
+            to_exhaustion=True, layout="gather",
+        )
         for j, ref in enumerate(refs):
             assert len(ref.tried) == 10
             assert_traces_equal(bt.job_trace(j), ref)
+            assert_traces_equal(bt_g.job_trace(j), ref)
+
+
+@pytest.mark.slow
+class TestTraceEquivalenceLargeSpace:
+    """The 10⁴-regime identity (slow lane): a budgeted search over n = 8192
+    must produce bit-identical traces from the sequential feature-buffer
+    engine, the batched feature-buffer engine, and the retained d²-gather
+    engine (which at this extent holds a 268 MB (n,n) tensor — the memory
+    wall the feature buffer removes; this is the largest space the gather
+    cross-check runs on)."""
+
+    def test_n8192_budgeted_identical(self):
+        space, table = synth_space_table(8192)
+        st = BOSettings(max_iters=12)
+        prio = list(range(0, 64))
+        rest = list(range(64, 8192))
+        refs = [
+            ruya_search(space, lambda i: float(table[i]),
+                        np.random.default_rng(s), prio, rest, settings=st,
+                        to_exhaustion=True)
+            for s in range(2)
+        ]
+        bt = batched_search(
+            space, [table] * 2, [np.random.default_rng(s) for s in range(2)],
+            priority=[prio] * 2, remaining=[rest] * 2, settings=st,
+            to_exhaustion=True,
+        )
+        bt_g = batched_search(
+            space, [table] * 2, [np.random.default_rng(s) for s in range(2)],
+            priority=[prio] * 2, remaining=[rest] * 2, settings=st,
+            to_exhaustion=True, layout="gather",
+        )
+        for j, ref in enumerate(refs):
+            assert len(ref.tried) == 12
+            assert_traces_equal(bt.job_trace(j), ref)
+            assert_traces_equal(bt_g.job_trace(j), ref)
 
 
 @pytest.mark.slow

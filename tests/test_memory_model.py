@@ -61,6 +61,64 @@ class TestCategorization:
         assert req == pytest.approx(20.0 * 1.1 + 2.0)
 
 
+class TestDegenerateProfiles:
+    """Pin `fit_memory_model`'s fallback behavior on degenerate profiling
+    runs BEFORE the large-space searches lean on the split it produces:
+    each of these must fall back deterministically (never crash, never
+    mis-categorize as LINEAR)."""
+
+    def test_constant_memory_across_samples(self):
+        """Flat readings over varying sizes: ss_tot = 0 is defined as R²=0
+        (a constant model has no correlation with input size) → FLAT, and
+        the estimate is the constant itself at any extrapolation."""
+        sizes = [1.0 * GiB, 2.0 * GiB, 5.0 * GiB]
+        m = fit_memory_model(sizes, [7.0 * GiB] * 3)
+        assert m.category is MemoryCategory.FLAT
+        assert m.r2 == 0.0
+        assert m.slope == 0.0
+        for probe in (0.0, 1.0 * GiB, 1e6 * GiB):
+            assert m.estimate(probe) == pytest.approx(7.0 * GiB)
+
+    def test_identical_sample_sizes_degenerate_ols(self):
+        """All sample sizes equal: sxx = 0, OLS is undefined — the fallback
+        is slope 0 / intercept mean / R² 0, which lands in FLAT (no
+        extrapolation is ever attempted from a single abscissa)."""
+        m = fit_memory_model([3.0 * GiB] * 4, [1.0, 2.0, 3.0, 4.0])
+        assert m.category is MemoryCategory.FLAT
+        assert m.r2 == 0.0
+        assert m.slope == 0.0
+        assert m.estimate(10.0 * GiB) == pytest.approx(2.5)
+
+    def test_single_sample_rejected(self):
+        """One profiling sample cannot be fit — must raise, not guess."""
+        with pytest.raises(ValueError):
+            fit_memory_model([1.0 * GiB], [2.0 * GiB])
+
+    def test_negative_ols_slope_is_not_linear(self):
+        """A perfect negative line has R² = 1 but is NOT the paper's linear
+        growth pattern: the category must fall back to UNCLEAR (plain-BO
+        fallback), the exported slope must be zeroed, and the estimate must
+        be NaN so no caller can silently extrapolate from it."""
+        sizes = [1.0, 2.0, 3.0, 4.0, 5.0]
+        m = fit_memory_model(sizes, [10.0 - 2.0 * s for s in sizes])
+        assert m.category is MemoryCategory.UNCLEAR
+        assert m.r2 == pytest.approx(1.0)
+        assert m.slope == 0.0
+        assert np.isnan(m.estimate(10.0))
+
+    @given(
+        slope=st.floats(-10.0, -0.1),
+        intercept=st.floats(50.0, 100.0),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_negative_slopes_never_linear(self, slope, intercept):
+        sizes = [float(i + 1) for i in range(5)]
+        readings = [slope * s + intercept for s in sizes]
+        m = fit_memory_model(sizes, readings)
+        assert m.category is not MemoryCategory.LINEAR
+        assert m.slope == 0.0
+
+
 class TestProperties:
     @given(
         slope=st.floats(0.5, 10.0),
