@@ -1,6 +1,6 @@
 """Fleet-scale search benchmark: packed batched engine vs sequential loop.
 
-Three measurements, all trace-checked against the sequential engine:
+Four measurements; A–C are trace-checked against the sequential engine:
 
   A. **Paper replay** — the 16 evaluation jobs × 4 seeds, full two-phase
      Ruya search over the 69-config space, to exhaustion (the Table II
@@ -21,6 +21,13 @@ Three measurements, all trace-checked against the sequential engine:
      largest live device buffer, peak RSS).  This is the feature-buffer
      engine's target regime — B ≪ n, n up to 10⁴–10⁵ — where the gather
      engine was memory-bound and the dense engine flops-bound.
+  D. **Streaming session** (`--session` to run it alone) — 64 recurring
+     paper jobs arriving in 8 waves against one `TuningSession` with
+     warm-starting on: wave 0 is cold, later waves hit the probe cache and
+     are seeded from their memory-signature class's completed trials.
+     Asserts warm-started searches reach the EI convergence threshold in
+     strictly fewer fresh trials than cold starts, and reports cache hit
+     rates and the seeded-trial counts.
 
 The sweep also asserts **buffer donation**: the lockstep update consumes
 (donates) its input state, so each fleet iteration updates the observation
@@ -372,6 +379,85 @@ def bench_scaling(ns: Sequence[int], n_jobs: int, budget: int, check: bool,
     return {"budget": budget, "n_jobs": n_jobs, "sweep": rows}
 
 
+def bench_session_streaming(
+    n_jobs: int, waves: int, check: bool,
+    settings: BOSettings = BOSettings(),
+) -> dict:
+    """Workload D: streaming `TuningSession` — jobs arriving in waves.
+
+    ``n_jobs`` recurring paper jobs (the first ``n_jobs // waves`` catalog
+    keys, cycling) arrive in ``waves`` submission waves against ONE
+    session with warm-starting on and a session-owned `ProfileCache`.
+    Wave 0 is all cold; later waves re-submit the same workload keys, hit
+    the probe cache, and are warm-started from their signature class's
+    completed trials.  The scenario measures the amortization claim:
+    fresh trials until the EI convergence threshold fires, warm vs cold
+    (asserted strictly fewer when ``check``), plus cache hit rates and
+    end-to-end wall time.
+    """
+    from benchmarks.common import get_sim
+    from repro.fleet import ProfileCache, TuningSession
+
+    per = max(n_jobs // waves, 1)
+    wave_keys = [JOB_ORDER[i % len(JOB_ORDER)] for i in range(per)]
+    # Build every wave's job objects up front (through the shared simulator
+    # memo): the timed region below measures the SESSION — probe/profile,
+    # on-device split, lockstep search, warm seeding — not harness setup.
+    wave_jobs = [
+        cluster_fleet(wave_keys, sims={k: get_sim(k) for k in wave_keys})
+        for _ in range(waves)
+    ]
+    session = TuningSession(
+        settings=settings, cache=ProfileCache(), warm_start=True,
+        to_exhaustion=False,
+    )
+    t0 = time.perf_counter()
+    submitted = 0
+    for jobs in wave_jobs:
+        for i, job in enumerate(jobs):
+            session.submit(job, seed=1000 + submitted + i)
+        submitted += len(jobs)
+        # Drain the wave: one batched BO iteration per step for every live
+        # search (a real service would interleave submissions here).
+        while session.step():
+            pass
+    elapsed = time.perf_counter() - t0
+
+    outs = session.results()
+    warm = [o for o in outs if o.seeded]
+    cold = [o for o in outs if not o.seeded]
+    mean = lambda xs: float(np.mean(xs)) if xs else None
+    cold_iters = mean([len(o.records) for o in cold])
+    warm_iters = mean([len(o.records) for o in warm])
+    row = {
+        "n_jobs": submitted,
+        "waves": waves,
+        "jobs_per_wave": len(wave_keys),
+        "cold_jobs": len(cold),
+        "warm_jobs": len(warm),
+        "warm_seeded_trials": session.warm_trials,
+        "cold_mean_fresh_trials": cold_iters,
+        "warm_mean_fresh_trials": warm_iters,
+        # None = fully amortized (warm searches needed zero fresh trials).
+        "fresh_trial_reduction": (
+            cold_iters / warm_iters
+            if (warm_iters is not None and warm_iters > 0) else None
+        ),
+        "cold_mean_best": mean([o.best_cost for o in cold]),
+        "warm_mean_best": mean([o.best_cost for o in warm]),
+        "profile_cache_hits": session.cache.hits,
+        "profile_cache_misses": session.cache.misses,
+        "session_s": elapsed,
+    }
+    if check:
+        assert warm and cold, "streaming scenario needs cold AND warm jobs"
+        assert warm_iters < cold_iters, (
+            f"warm-started searches should converge in fewer fresh trials: "
+            f"warm {warm_iters} vs cold {cold_iters}"
+        )
+    return row
+
+
 def bench_paper_replay(jobs, check: bool, settings: BOSettings) -> dict:
     """Workload A: full two-phase Ruya search over the 69-config space."""
     n_jobs = len(jobs)
@@ -479,10 +565,25 @@ def _report(tag: str, r: dict) -> None:
     print(f"    speedup           : {r['speedup']:7.2f}x")
 
 
+def _report_session(r: dict) -> None:
+    print(f"  D. streaming session ({r['n_jobs']} jobs in {r['waves']} waves,"
+          f" {r['warm_jobs']} warm-started, "
+          f"{r['profile_cache_hits']}/{r['profile_cache_hits'] + r['profile_cache_misses']}"
+          f" probe-cache hits)")
+    red = r["fresh_trial_reduction"]
+    print(f"    fresh trials to convergence: cold "
+          f"{r['cold_mean_fresh_trials']:.1f} vs warm "
+          f"{r['warm_mean_fresh_trials']:.1f} "
+          f"({f'{red:.1f}x fewer' if red is not None else 'fully amortized'})")
+    print(f"    end-to-end: {r['session_s']:.2f} s "
+          f"({r['warm_seeded_trials']} trials seeded from class history)")
+
+
 def run(n_jobs: int = 64, check: bool = True,
         settings: BOSettings = BOSettings(), *, smoke: bool = False,
         scaling_ns: Sequence[int] = (69, 256, 512, 1024, 8192, 32768),
-        budget: int = 24, json_path: Optional[str] = None) -> dict:
+        budget: int = 24, json_path: Optional[str] = None,
+        session_only: bool = False) -> dict:
     # The repo-root BENCH_fleet.json is the committed perf baseline; only
     # the full default protocol (64 jobs, full sweep) may rewrite it —
     # smoke or reduced-job runs would replace it with non-comparable
@@ -502,7 +603,14 @@ def run(n_jobs: int = 64, check: bool = True,
 
     print(f"\n== Fleet bench: {n_jobs} jobs, traces "
           f"{'verified identical' if check else 'unchecked'}"
-          f"{', SMOKE mode' if smoke else ''} ==")
+          f"{', SMOKE mode' if smoke else ''}"
+          f"{', SESSION scenario only' if session_only else ''} ==")
+
+    if session_only:
+        d = bench_session_streaming(n_jobs, waves=8, check=check)
+        _report_session(d)
+        return {"n_jobs": n_jobs, "smoke": False,
+                "session_streaming": d}
 
     donation = check_buffer_donation()
     print("  donation: lockstep state buffers consumed in place "
@@ -516,6 +624,16 @@ def run(n_jobs: int = 64, check: bool = True,
            "peak_rss_mb": _peak_rss_mb()}
     print(f"  peak RSS over the whole run: {out['peak_rss_mb']:.0f} MB")
 
+    if smoke:
+        # Streaming-session wiring check: 16 recurring jobs in 4 waves at a
+        # reduced trial budget (small packed capacity → seconds of compile);
+        # the warm-vs-cold convergence assertion still runs.
+        d = bench_session_streaming(
+            16, waves=4, check=check, settings=BOSettings(max_iters=16),
+        )
+        _report_session(d)
+        out["session_streaming"] = d
+
     if not smoke:
         jobs = build_fleet(n_jobs)
         b = bench_priority_service(jobs, check, settings, n_jobs)
@@ -528,7 +646,13 @@ def run(n_jobs: int = 64, check: bool = True,
               " space extent\n     — the dense-regime floor; the scaling sweep"
               " C is the budgeted B << n\n     regime the packed engine"
               " targets.)")
-        out.update({"paper_replay": a, "priority_service": b})
+        # Workload D: the full streaming scenario — 64 jobs in 8 waves of
+        # the recurring paper workloads, natural EI stopping (the packed
+        # capacity matches workload A's, so the lockstep compile is shared).
+        d = bench_session_streaming(n_jobs, waves=8, check=check)
+        _report_session(d)
+        out.update({"paper_replay": a, "priority_service": b,
+                    "session_streaming": d})
         with open(artifact_path("fleet", f"fleet_bench_{n_jobs}.json"), "w") as f:
             json.dump(out, f, indent=1)
 
@@ -546,5 +670,9 @@ if __name__ == "__main__":
                     help="skip the trace-equivalence assertion")
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-scale wiring check (tiny fleet, two sweep points)")
+    ap.add_argument("--session", action="store_true",
+                    help="run ONLY the streaming TuningSession scenario "
+                         "(jobs arriving in 8 waves, warm-start amortization)")
     args = ap.parse_args()
-    run(args.jobs, check=not args.no_check, smoke=args.smoke)
+    run(args.jobs, check=not args.no_check, smoke=args.smoke,
+        session_only=args.session)

@@ -5,9 +5,12 @@
     PYTHONPATH=src python -m benchmarks.run --only fleet --smoke
 
 `--only fleet` (re)writes the machine-readable perf baseline
-`BENCH_fleet.json` at the repo root.  `--smoke` runs suites that support it
-in a seconds-scale wiring mode (currently: fleet) — the same mode
-`pytest -m bench_smoke` exercises.
+`BENCH_fleet.json` at the repo root — including the streaming
+`TuningSession` scenario (workload D: 64 recurring jobs in 8 waves,
+warm-start amortization; standalone via `python -m benchmarks.fleet_bench
+--session`).  `--smoke` runs suites that support it in a seconds-scale
+wiring mode (currently: fleet) — the same mode `pytest -m bench_smoke`
+exercises.
 
 Env: RUYA_BENCH_REPS (default 50; the paper used 200 repetitions).
 """

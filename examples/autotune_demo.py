@@ -23,11 +23,12 @@ import numpy as np
 
 
 def demo_cluster(seeds: int = 15) -> None:
-    """Each job's ``seeds`` repetitions run as ONE batched fleet call per
-    searcher (`repro.fleet`) — trace-identical to looping the sequential
+    """Each job's ``seeds`` repetitions run through ONE streaming
+    `TuningSession` per job class — every replica of both searchers advances
+    in device-resident lockstep, trace-identical to looping the sequential
     engine, minus thousands of per-step host round-trips."""
     from repro.core.profiler import profile_job
-    from repro.fleet import cluster_fleet, replay_seeds, tune_fleet
+    from repro.fleet import TuningSession, cluster_fleet
 
     print("=== A. Ruya on the paper's own domain (3 job classes) ===")
     for key in ["kmeans/spark/huge", "terasort/hadoop/bigdata",
@@ -35,12 +36,18 @@ def demo_cluster(seeds: int = 15) -> None:
         job = cluster_fleet([key])[0]
         # Profile once; the paper only re-profiles when the context changes.
         job.profile_result = profile_job(job.profile_run, job.full_input_size)
-        jobs, rngs = replay_seeds(job, range(seeds))
-        ruya = tune_fleet(jobs, rngs, to_exhaustion=True)
-        cp = tune_fleet(jobs, [np.random.default_rng(s) for s in range(seeds)],
-                        mode="cherrypick", to_exhaustion=True)
-        ruya_iters = [r.trace.iterations_until(1.0) for r in ruya]
-        cp_iters = [c.trace.iterations_until(1.0) for c in cp]
+        # Warm-starting stays off: this demo compares COLD searches across
+        # seeds (the paper's repetition protocol), so replicas must not
+        # seed each other.
+        session = TuningSession(to_exhaustion=True, warm_start=False)
+        ruya = [session.submit(job, seed=s) for s in range(seeds)]
+        cp = [
+            session.submit(job, seed=s, mode="cherrypick")
+            for s in range(seeds)
+        ]
+        session.drain()
+        ruya_iters = [h.outcome().iterations_until(1.0) for h in ruya]
+        cp_iters = [h.outcome().iterations_until(1.0) for h in cp]
         category = job.profile_result.model.category.value
         print(f"  {key:28s} [{category:7s}] "
               f"iterations-to-optimal: Ruya {np.mean(ruya_iters):5.1f} "

@@ -1,8 +1,9 @@
 """Quickstart: the three things this framework does, in 90 seconds on CPU.
 
-  1. Run the PAPER's algorithm: memory-aware profiling + two-phase Bayesian
-     search for the cheapest cluster configuration (vs the CherryPick
-     baseline) on the emulated Scout evaluation.
+  1. Run the PAPER's algorithm through the streaming session API
+     (`repro.fleet.TuningSession`): memory-aware profiling + two-phase
+     Bayesian search for the cheapest cluster configuration (vs the
+     CherryPick baseline) on the emulated Scout evaluation.
   2. Train a reduced LM from the architecture zoo with the fault-tolerant
      loop (checkpoints land in ./quickstart_ckpt).
   3. Serve it: prefill + batched greedy decode.
@@ -23,31 +24,24 @@ import numpy as np
 
 def part1_ruya_search():
     print("\n=== 1. Ruya vs CherryPick on the emulated Scout cluster ===")
-    from repro.cluster import ClusterSimulator
-    from repro.core import run_cherrypick, run_ruya
+    from repro.fleet import TuningSession, cluster_fleet
 
     GiB = 1024**3
-    sim = ClusterSimulator.for_job("kmeans/spark/huge")
-    rep = run_ruya(
-        profile_run=sim.profile_run_fn(),
-        full_input_size=sim.job.input_gb * GiB,
-        space=sim.space,
-        cost_fn=sim.cost_fn(),
-        rng=np.random.default_rng(0),
-        per_node_overhead=0.5 * GiB,
-        to_exhaustion=True,
-    )
-    cp = run_cherrypick(
-        space=sim.space, cost_fn=sim.cost_fn(),
-        rng=np.random.default_rng(0), to_exhaustion=True,
-    )
+    # One streaming session serves every search style: submit jobs (they are
+    # profiled and split on admission), drain, read first-class outcomes.
+    # Both searches share one session — and one lockstep device chunk.
+    session = TuningSession(to_exhaustion=True)
+    job = cluster_fleet(["kmeans/spark/huge"])[0]
+    h_ruya = session.submit(job, seed=0)                      # two-phase Ruya
+    h_cp = session.submit(job, seed=0, mode="cherrypick")     # baseline
+    session.drain()
+    rep, cp = h_ruya.outcome(), h_cp.outcome()
     mm = rep.memory_model
     print(f"  profiled memory model: {mm.category.value}, "
-          f"estimate {mm.estimate(sim.job.input_gb * GiB)/GiB:.0f} GB "
-          f"(ground truth {sim.job.mem_requirement_gb:.0f} GB)")
+          f"estimate {mm.estimate(job.full_input_size)/GiB:.0f} GB")
     print(f"  priority group: {len(rep.priority)}/69 configurations")
     print(f"  iterations to the optimal config: "
-          f"Ruya {rep.trace.iterations_until(1.0)} vs "
+          f"Ruya {rep.iterations_until(1.0)} vs "
           f"CherryPick {cp.iterations_until(1.0)}")
 
 

@@ -28,7 +28,12 @@ from repro.core.memory_model import (
     fit_memory_model,
 )
 from repro.core.profiler import ProfileResult, profile_job, schedule_sample_sizes
-from repro.core.search_space import Configuration, SearchSpace, split_search_space
+from repro.core.search_space import (
+    Configuration,
+    SearchSpace,
+    split_masks_device,
+    split_search_space,
+)
 from repro.core.tuner import RuyaReport, run_cherrypick, run_ruya
 
 __all__ = [
@@ -55,5 +60,6 @@ __all__ = [
     "run_cherrypick",
     "run_ruya",
     "schedule_sample_sizes",
+    "split_masks_device",
     "split_search_space",
 ]

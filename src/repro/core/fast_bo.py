@@ -10,12 +10,22 @@ buffer** of the observed points (in trial order) and computes the (B,B)
 training block and the (B,n) cross block on the fly against the static
 (n,d) encoding.  Nothing of extent n×n is ever materialized.
 
-Per-step cost (n = space extent, d = features, B = trial capacity):
+Per-step cost (n = space extent, d = features, B = trial capacity,
+w = warm-start seeds):
 
     layout           memory      kernel blocks          factorizations  posterior
     dense            O(n²)       6·O(n²·d)              18·O(n³)        O(n²)
     d²-gather (PR 2) O(n²)       gathers + 6·O(B²)      18·O(B³)        O(B·n)
     feature (now)    O(n·d)      O(B²d + B·n·d)+6·O(B²) 18·O(B³)        O(B·n)
+
+Session-era paths ride the same step with zero new device code (PR 4):
+
+    warm seeding     O(w·d) host prefill of the packed (B,)/(B,d) buffers
+                     before the first step; a seeded search starts at t = w,
+                     so it runs ≤ B − w fresh steps at unchanged extents
+    on-device split  O(n log n) §III-D mask build once per admission
+                     (search_space.split_masks_device), float64, bit-equal
+                     to the host rule — no O(n) Python narrowing loop
 
 The d²-gather layout paid a one-off O(n²·d) `precompute_d2` per search and
 held the (n,n) tensor for its whole lifetime — an O(n²) memory wall that
@@ -58,7 +68,11 @@ alpha, the posterior mean, and the variance correction (their cross rows
 are zeroed too).  Garbage in padded `tried`/`py`/`feats` slots is inert as
 long as it is finite (the engine only ever writes -1/0 there); padded
 *space* points (mask-level padding) are likewise never candidates and
-never observed.
+never observed.  Warm-start seeding composes with this unchanged: seeds
+occupy slots < t like any observation (index in `tried`, float32 cost in
+`py`, the canonical encoding row in `feats`, observation mask set), so the
+padding proof applies verbatim to a seeded buffer — slots ≥ t stay inert,
+slots < t are ordinary training points.
 
 Float32 discipline (unchanged from the dense engine): XLA:CPU float32
 results differ between compilation contexts — batch extent 1 compiles to

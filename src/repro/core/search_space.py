@@ -12,6 +12,16 @@ metadata (node count, prices, mesh/remat details for the TPU tuner, ...).
             extremes (very high and very low total memory).
   FLAT    → the 10–20 % of configs with the lowest total memory.
   UNCLEAR → no split (priority group = whole space → plain CherryPick).
+
+``split_masks_device`` is the same rule computed ON DEVICE over the space's
+static per-config arrays (total memories, node counts), returning the
+(n,) priority mask directly — the narrowing then scales with the catalog
+(one vectorized comparison + a stable sort instead of a Python loop over
+10⁴–10⁵ configs).  It runs in float64 (`jax.experimental.enable_x64`) so
+every comparison and the stable sort are bit-equal to the host rule —
+`tests/test_search_space.py` pins mask == list equality, which is what lets
+`repro.fleet.session.TuningSession` use the device split while staying
+trace-identical to the host-split drivers.
 """
 
 from __future__ import annotations
@@ -23,7 +33,12 @@ import numpy as np
 
 from repro.core.memory_model import MemoryCategory, MemoryModel
 
-__all__ = ["Configuration", "SearchSpace", "split_search_space"]
+__all__ = [
+    "Configuration",
+    "SearchSpace",
+    "split_masks_device",
+    "split_search_space",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +64,14 @@ class SearchSpace:
         std = feats.std(axis=0)
         std = np.where(std > 1e-12, std, 1.0)
         self._encoded = (feats - mean) / std
+        # Static per-config arrays, built once: the §III-D split (host or
+        # device) reads these instead of looping over Configuration objects.
+        self._memories = np.asarray(
+            [c.total_memory for c in self.configs], np.float64
+        )
+        self._num_nodes = np.asarray(
+            [c.num_nodes for c in self.configs], np.float64
+        )
 
     def __len__(self) -> int:
         return len(self.configs)
@@ -60,7 +83,10 @@ class SearchSpace:
         return self._encoded[np.asarray(indices, np.int64)]
 
     def memories(self) -> np.ndarray:
-        return np.asarray([c.total_memory for c in self.configs], np.float64)
+        return self._memories
+
+    def num_nodes(self) -> np.ndarray:
+        return self._num_nodes
 
 
 def split_search_space(
@@ -114,3 +140,89 @@ def split_search_space(
         return all_idx, []
     rest = sorted(set(all_idx) - set(prio))
     return prio, rest
+
+
+def _jit64(fun):
+    """jit a float64 split kernel lazily (jax import deferred to first use)."""
+    cache = {}
+
+    def wrapper(*args, k: int):
+        import jax
+
+        if "fn" not in cache:
+            cache["fn"] = jax.jit(fun, static_argnames=("k",))
+        return cache["fn"](*args, k=k)
+
+    return wrapper
+
+
+@_jit64
+def _flat_prio_mask(mems, *, k: int):
+    """FLAT rule: True at the k lowest-memory configs (stable ties)."""
+    import jax.numpy as jnp
+
+    order = jnp.argsort(mems, stable=True)
+    return jnp.zeros(mems.shape[0], bool).at[order[:k]].set(True)
+
+
+@_jit64
+def _linear_prio_mask(mems, nodes, req_base, leeway, overhead, *, k: int):
+    """LINEAR rule: memory ≥ requirement, else the very-high/very-low extremes."""
+    import jax.numpy as jnp
+
+    requirement = req_base * (1.0 + leeway) + overhead * nodes
+    qualify = mems >= requirement
+    order = jnp.argsort(mems, stable=True)
+    extremes = (
+        jnp.zeros(mems.shape[0], bool)
+        .at[order[:k]].set(True)
+        .at[order[-k:]].set(True)
+    )
+    return jnp.where(jnp.any(qualify), qualify, extremes)
+
+
+def split_masks_device(
+    space: SearchSpace,
+    model: MemoryModel,
+    input_size: float,
+    *,
+    per_node_overhead: float = 0.0,
+    leeway: float = 0.10,
+    flat_fraction: float = 1.0 / 7.0,
+    extreme_fraction: float = 0.15,
+):
+    """§III-D priority split computed ON DEVICE; returns the (n,) bool mask.
+
+    Bit-equal to `split_search_space` by construction: the per-config
+    requirement math runs elementwise in float64 (under
+    `jax.experimental.enable_x64`, so device IEEE ops match the host's), the
+    FLAT / extremes selections use a stable argsort (same permutation as
+    `np.argsort(kind="stable")`), and the group sizes ``k`` are rounded on
+    the host with the same expressions.  The remaining mask is always the
+    complement (`~prio`) — including the all-qualify LINEAR case, where the
+    complement of an all-True mask is the host rule's empty remainder.
+
+    The host-side cost is O(1): the static per-config arrays come from the
+    `SearchSpace` cache, so narrowing a 10⁴–10⁵-point catalog is one device
+    comparison + sort instead of a Python loop over configs.
+    """
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    n = len(space)
+    if model.category is MemoryCategory.UNCLEAR:
+        return jnp.ones(n, bool)
+    with enable_x64():
+        mems = jnp.asarray(space.memories())
+        if model.category is MemoryCategory.FLAT:
+            k = max(1, int(round(flat_fraction * n)))
+            return _flat_prio_mask(mems, k=min(k, n))
+        k = max(1, int(round(extreme_fraction * n)))
+        return _linear_prio_mask(
+            mems,
+            jnp.asarray(space.num_nodes()),
+            jnp.asarray(np.float64(model.estimate(input_size))),
+            jnp.asarray(np.float64(leeway)),
+            jnp.asarray(np.float64(per_node_overhead)),
+            k=min(k, n),
+        )

@@ -11,10 +11,12 @@ Two environments ship with the repo: the Scout-like cluster emulator
 sharding-configuration autotuner (`repro.launch.autotune`).
 
 Both execution styles run the packed-observation BO engine (`fast_bo`):
-`cost_table` replay goes through the batched fleet engine, a live
+`cost_table` replay goes through the batched fleet engine (since PR 4 a
+deprecation shim over `repro.fleet.session.TuningSession`), a live
 `cost_fn` through the sequential driver's device-resident probe — one
 shared compiled step, identical traces (see `fast_bo` for the layout and
-the float32 discipline).
+the float32 discipline).  For streaming workloads, shared profiling, and
+cross-job warm-starting, hold a `TuningSession` directly.
 """
 
 from __future__ import annotations
@@ -72,6 +74,13 @@ def run_ruya(
     engine) or from ``cost_table`` (recorded/emulated workload replay, driven
     by the batched fleet engine as a fleet of one).  Both engines are
     trace-identical, so the choice is purely about execution style.
+
+    .. deprecated:: PR 4
+        The ``cost_table`` path is a one-shot deprecation shim over
+        `repro.fleet.session.TuningSession` (a session of one job, drained
+        immediately — bit-identical, pinned by `tests/test_session.py`).
+        New replay/fleet code should hold a session; the live ``cost_fn``
+        path remains the sequential probe driver.
     """
     if (cost_fn is None) == (cost_table is None):
         raise ValueError("provide exactly one of cost_fn / cost_table")
@@ -130,7 +139,8 @@ def run_cherrypick(
     """The baseline, for side-by-side evaluation (paper §IV-C).
 
     Like `run_ruya`, accepts either a live ``cost_fn`` or a recorded
-    ``cost_table`` (the latter runs on the batched fleet engine).
+    ``cost_table`` (the latter runs on the batched fleet engine — since
+    PR 4 a deprecation shim over `repro.fleet.session.TuningSession`).
     """
     if (cost_fn is None) == (cost_table is None):
         raise ValueError("provide exactly one of cost_fn / cost_table")

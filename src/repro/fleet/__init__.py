@@ -1,23 +1,36 @@
-"""Fleet tuning subsystem: batched multi-job Bayesian-optimized search.
+"""Fleet tuning subsystem: streaming multi-job Bayesian-optimized search.
 
 The paper evaluates Ruya one job at a time; related work (Flora, Blink)
 pushes toward tuning as a *fleet service* — many jobs, shared knowledge,
 negligible per-job overhead.  This package provides:
 
-  * `batched_engine.batched_search` — J independent Ruya/CherryPick searches
-    advanced in device-resident lockstep (one jitted vmapped `fleet_step`
-    per fleet iteration), trace-identical to the sequential engine in
-    `repro.core.bayesopt`.
+  * `session.TuningSession` — THE tuning engine: submit jobs over time,
+    `step()` advances every live search one batched BO iteration (newly
+    submitted jobs are admitted into lockstep chunks between steps),
+    `drain()`/`results()` return first-class `TrialRecord`/`SearchOutcome`
+    structures.  The session owns the `ProfileCache`, computes the §III-D
+    split on device, and warm-starts searches from completed trials in the
+    same memory-signature class.
+  * `batched_engine.batched_search` — one-shot shim over a session: J
+    independent Ruya/CherryPick searches in device-resident lockstep (one
+    jitted vmapped `fleet_step` per iteration), trace-identical to the
+    sequential engine in `repro.core.bayesopt`.
   * `profile_cache.ProfileCache` — Flora-style reuse of profiling runs
     across jobs whose memory patterns match (category + fitted coefficients).
-  * `driver.tune_fleet` — the end-to-end fleet pipeline: probe/profile (with
-    cache), split each job's space, run the batched search, return one
-    `RuyaReport` per job — the same API `repro.core.tuner` exposes for J=1.
+  * `driver.tune_fleet` — one-shot shim: probe/profile (with cache), split,
+    search, one `RuyaReport` per job — the same API `repro.core.tuner`
+    exposes for J=1.
 """
 
 from repro.fleet.batched_engine import BatchedTrace, batched_search
 from repro.fleet.driver import FleetJob, cluster_fleet, replay_seeds, tune_fleet
 from repro.fleet.profile_cache import MemorySignature, ProfileCache
+from repro.fleet.session import (
+    JobHandle,
+    SearchOutcome,
+    TrialRecord,
+    TuningSession,
+)
 
 __all__ = [
     "BatchedTrace",
@@ -26,6 +39,10 @@ __all__ = [
     "cluster_fleet",
     "replay_seeds",
     "tune_fleet",
+    "JobHandle",
     "MemorySignature",
     "ProfileCache",
+    "SearchOutcome",
+    "TrialRecord",
+    "TuningSession",
 ]

@@ -3,7 +3,11 @@
 The sequential engine (`repro.core.bayesopt._bo_loop`) drives one job per
 Python-loop iteration, paying a dispatch + host round-trip per BO step —
 thousands of synchronizations for a fleet.  Here the whole fleet advances in
-lockstep:
+lockstep.  (Since the `TuningSession` redesign the chunk lifecycle — group,
+admit, step, retire — lives in `repro.fleet.session`, which also serves
+streaming submission and warm-starting; `batched_search` below is the
+retained one-shot shim, and this module keeps the jitted lockstep update
+`_fleet_update` plus the chunking constants both entry points share.)
 
   * `jax.vmap` over jobs lifts the per-job state (observation mask, packed
     trial log/targets/features — `fast_bo.FleetState`) into batched arrays
@@ -47,17 +51,10 @@ from functools import partial
 from typing import List, Optional, Sequence, Union
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bayesopt import BOSettings, SearchTrace, trial_budget
-from repro.core.fast_bo import (
-    _LAYOUTS,
-    FleetState,
-    encode_features,
-    fleet_step,
-    precompute_d2,
-)
+from repro.core.fast_bo import _LAYOUTS, fleet_step
 from repro.core.search_space import SearchSpace
 
 __all__ = ["BatchedTrace", "batched_search"]
@@ -138,55 +135,6 @@ def _fleet_update(
     )
 
 
-def _run_chunk(
-    geom, costs, prio_mask, rem_mask, init_picks, init_count, max_trials,
-    settings: BOSettings, to_exhaustion: bool, capacity: int, feat_dim: int,
-    layout: str,
-):
-    """Drive one chunk of jobs to completion; state stays on device.
-
-    The host loop makes no data-dependent decisions (`fleet_step` is a no-op
-    for finished jobs), so all iterations dispatch asynchronously; with
-    early stopping it additionally polls the done flags every few steps to
-    cut the tail.
-    """
-    j = costs.shape[0]
-    n = costs.shape[1]
-    state = FleetState(
-        obs=jnp.zeros((j, n), bool),
-        tried=jnp.full((j, capacity), -1, jnp.int32),
-        py=jnp.zeros((j, capacity), jnp.float32),
-        feats=jnp.zeros((j, capacity, feat_dim), jnp.float32),
-        t=jnp.zeros(j, jnp.int32),
-        stop=jnp.full(j, -1, jnp.int32),
-        pb=jnp.full(j, -1, jnp.int32),
-        done=jnp.zeros(j, bool),
-        last_ei=jnp.zeros(j, jnp.float32),
-        last_best=jnp.full(j, jnp.inf, jnp.float32),
-    )
-    args = (
-        jnp.asarray(geom), jnp.asarray(costs), jnp.asarray(prio_mask),
-        jnp.asarray(rem_mask), jnp.asarray(init_picks),
-        jnp.asarray(init_count), jnp.asarray(max_trials),
-        jnp.asarray(settings.min_observations, jnp.int32),
-        jnp.asarray(settings.ei_stop_rel, jnp.float32),
-        jnp.asarray(to_exhaustion),
-    )
-    # One extra pass beyond the trial budget: it observes nothing, but it is
-    # where a budget-capped job records a phase boundary it reached exactly
-    # at its last trial, and where budget exhaustion latches `done`.
-    steps = int(np.max(max_trials)) + 1 if len(max_trials) else 0
-    for k in range(steps):
-        state = _fleet_update(state, *args, xi=settings.xi, layout=layout)
-        if (
-            not to_exhaustion
-            and k % _POLL_PERIOD == _POLL_PERIOD - 1
-            and bool(jnp.all(state.done))
-        ):
-            break
-    return state
-
-
 def _as_space_list(
     spaces: Union[SearchSpace, Sequence[SearchSpace]], n_jobs: int
 ) -> List[SearchSpace]:
@@ -225,7 +173,17 @@ def batched_search(
     ``layout`` selects the packed geometry path: "feature" (default, O(n·d)
     memory) or "gather" (retained PR-2 (n,n)-tensor path, bit-identical,
     kept for cross-checks — do not use it for n ≳ 10⁴ spaces).
+
+    Since the `TuningSession` redesign this is a thin shim: submit every
+    job to a fresh session (no profiling, no warm-starting — the splits are
+    passed verbatim), drain it, and repackage the outcomes.  A statically
+    submitted session runs the identical grouping/chunking/array program
+    this module ran pre-redesign, so traces are unchanged bit-for-bit
+    (`tests/test_fleet.py` / `tests/test_session.py`).
     """
+    from repro.fleet.driver import FleetJob
+    from repro.fleet.session import TuningSession
+
     if layout not in _LAYOUTS:
         raise ValueError(f"unknown layout {layout!r}; want one of {_LAYOUTS}")
     n_jobs = len(cost_tables)
@@ -237,112 +195,36 @@ def batched_search(
     if remaining is None:
         remaining = [[] for _ in range(n_jobs)]
 
-    init_lists: List[List[int]] = []
-    max_trials_all = np.zeros(n_jobs, np.int32)
+    session = TuningSession(
+        settings=settings, mode="cherrypick", warm_start=False,
+        to_exhaustion=to_exhaustion, layout=layout,
+    )
     for j, (space, table, rng) in enumerate(zip(space_list, cost_tables, rngs)):
-        n = len(space)
-        table = np.asarray(table, np.float64)
-        if table.shape != (n,):
-            raise ValueError(f"cost table {j} has shape {table.shape}, want ({n},)")
-        prio = [int(i) for i in priority[j]]
-        rem = [int(i) for i in remaining[j]]
-        if set(prio) & set(rem):
-            raise ValueError(f"job {j}: priority and remaining pools overlap")
-        # Scripted random initialization — the same draw, in the same order,
-        # as `_bo_loop`'s phase-0 block, so traces match seed-for-seed.
-        # Drawn up front (in job order) regardless of grouping.
-        if prio:
-            n_init = min(settings.n_init, len(prio))
-            picked = rng.choice(len(prio), size=n_init, replace=False)
-            init_lists.append([prio[int(i)] for i in picked])
-        else:
-            init_lists.append([])
-        # Shared with the sequential engine: the budget is also the packed
-        # capacity B, and the engines must agree on it exactly.
-        max_trials_all[j] = trial_budget(len(prio), len(rem), settings)
+        session.submit(
+            FleetJob(name=f"job{j}", space=space, cost_table=table),
+            rng,
+            priority=[int(i) for i in priority[j]],
+            remaining=[int(i) for i in remaining[j]],
+        )
+    outs = session.drain()
 
-    max_T = max(int(max_trials_all.max()) if n_jobs else 0, 1)
+    budgets = [
+        trial_budget(len(priority[j]), len(remaining[j]), settings)
+        for j in range(n_jobs)
+    ]
+    max_T = max(max(budgets, default=0), 1)
     tried = np.full((n_jobs, max_T), -1, np.int32)
+    out_costs = np.zeros((n_jobs, max_T), np.float64)
     n_tried = np.zeros(n_jobs, np.int32)
     stop = np.full(n_jobs, -1, np.int32)
     pb = np.full(n_jobs, -1, np.int32)
-
-    # Group jobs by (space shape, packed capacity); each group runs unpadded
-    # at its own static extents, in cache-friendly lockstep chunks.  Chunks
-    # of one job are padded with an inert dummy (zero trial budget): XLA:CPU
-    # collapses singleton batch dims into unbatched programs with different
-    # float32 numerics, so every call must run at extent ≥ 2.
-    groups: dict = {}
-    for j, space in enumerate(space_list):
-        enc = space.encoded()
-        groups.setdefault((enc.shape, int(max_trials_all[j])), []).append(j)
-
-    # Per-space geometry is once-per-space work (seed-replica fleets alias
-    # one SearchSpace object), computed identically to the sequential
-    # engine's, then stacked per chunk.  Feature layout: the (n,d) float32
-    # encoding.  Gather layout: the unbatched (n,n) distance tensor.
-    geom_cache: dict = {}
-
-    def space_geom(space: SearchSpace) -> np.ndarray:
-        key = id(space)
-        if key not in geom_cache:
-            enc = encode_features(space.encoded())
-            geom_cache[key] = (
-                enc if layout == "feature" else np.asarray(precompute_d2(enc))
-            )
-        return geom_cache[key]
-
-    for (shape, cap), members in groups.items():
-        n, d = shape
-        g = len(members)
-        capacity = max(cap, 1)
-        costs = np.zeros((g, n), np.float32)
-        prio_mask = np.zeros((g, n), bool)
-        rem_mask = np.zeros((g, n), bool)
-        n_init_slots = max(1, max(len(init_lists[j]) for j in members))
-        init_picks = np.zeros((g, n_init_slots), np.int32)
-        init_count = np.zeros(g, np.int32)
-        max_trials = np.zeros(g, np.int32)
-        for i, j in enumerate(members):
-            costs[i] = np.asarray(cost_tables[j], np.float32)
-            prio_mask[i, np.asarray(priority[j], np.int64)] = True
-            if len(remaining[j]):
-                rem_mask[i, np.asarray(remaining[j], np.int64)] = True
-            il = init_lists[j]
-            init_picks[i, : len(il)] = il
-            init_count[i] = len(il)
-            max_trials[i] = max_trials_all[j]
-
-        for lo in range(0, g, _CHUNK):
-            hi = min(lo + _CHUNK, g)
-            chunk = slice(lo, hi)
-            geom = np.stack([space_geom(space_list[j]) for j in members[lo:hi]])
-            parts = [
-                geom, costs[chunk], prio_mask[chunk],
-                rem_mask[chunk], init_picks[chunk], init_count[chunk],
-                max_trials[chunk],
-            ]
-            if hi - lo == 1:
-                parts = [np.concatenate([a, np.zeros_like(a[:1])]) for a in parts]
-            state = _run_chunk(
-                *parts, settings=settings, to_exhaustion=to_exhaustion,
-                capacity=capacity, feat_dim=int(d), layout=layout,
-            )
-            s_tried, s_t, s_stop, s_pb = (
-                np.asarray(state.tried), np.asarray(state.t),
-                np.asarray(state.stop), np.asarray(state.pb),
-            )
-            for i, j in enumerate(members[lo:hi]):
-                tried[j, :capacity] = s_tried[i]
-                n_tried[j] = int(s_t[i])
-                stop[j] = int(s_stop[i])
-                pb[j] = int(s_pb[i])
-    # Costs are reported from the float64 tables (the engine's float32 copy
-    # is only the GP's view), matching the sequential trace exactly.
-    out_costs = np.zeros(tried.shape, np.float64)
-    for j, table in enumerate(cost_tables):
-        k = int(n_tried[j])
-        out_costs[j, :k] = np.asarray(table, np.float64)[tried[j, :k]]
+    for j, out in enumerate(outs):
+        k = len(out.records)
+        tried[j, :k] = [r.index for r in out.records]
+        out_costs[j, :k] = [r.cost for r in out.records]
+        n_tried[j] = k
+        stop[j] = -1 if out.stop_iteration is None else out.stop_iteration
+        pb[j] = -1 if out.phase_boundary is None else out.phase_boundary
     return BatchedTrace(
         tried=tried,
         costs=out_costs,

@@ -7,6 +7,12 @@ batched engine call.  Every job comes back as the same `RuyaReport` the
 single-job pipeline (`repro.core.tuner.run_ruya`) produces, so benchmarks,
 examples and the tuner API are engine-agnostic: J=1 is just a fleet of one.
 
+Since the `TuningSession` redesign, `tune_fleet` is a one-shot deprecation
+shim: it submits every job to a fresh `repro.fleet.session.TuningSession`
+and drains it (bit-identical to the pre-session batched engine).  Hold a
+session directly for streaming submission, profile-cache ownership, and
+cross-job warm-starting.
+
 `cluster_fleet` replays paper workloads through `repro.cluster.simulator`;
 `replay_seeds` expands one job into a fleet of seed-replicas — the paper's
 "repeat every search 200×" protocol becomes a single batched call (and,
@@ -25,7 +31,6 @@ from repro.core.bayesopt import BOSettings, SearchTrace, ruya_search
 from repro.core.profiler import ProfileResult, profile_job
 from repro.core.search_space import SearchSpace, split_search_space
 from repro.core.tuner import RuyaReport
-from repro.fleet.batched_engine import batched_search
 from repro.fleet.profile_cache import ProfileCache
 
 __all__ = ["FleetJob", "cluster_fleet", "replay_seeds", "tune_fleet"]
@@ -118,6 +123,14 @@ def tune_fleet(
     uses the jitted multi-job engine; ``engine="sequential"`` drives the
     per-job engine in a Python loop — both produce identical traces, the
     sequential path exists for verification and J=1 fallback.
+
+    .. deprecated:: PR 4
+        This is a one-shot deprecation shim over
+        `repro.fleet.session.TuningSession` (submit everything, drain once
+        — bit-identical to the pre-session engine, pinned by
+        `tests/test_session.py`).  New code should hold a session: it
+        admits jobs over time, owns the `ProfileCache`, and warm-starts
+        recurring signature classes.
     """
     if mode not in ("ruya", "cherrypick"):
         raise ValueError(f"unknown mode {mode!r}")
@@ -126,6 +139,20 @@ def tune_fleet(
     if len(jobs) != len(rngs):
         raise ValueError(f"{len(jobs)} jobs but {len(rngs)} rngs")
 
+    if engine == "batched":
+        from repro.fleet.session import TuningSession
+
+        session = TuningSession(
+            settings=settings, mode=mode, cache=cache, warm_start=False,
+            to_exhaustion=to_exhaustion,
+        )
+        for job, rng in zip(jobs, rngs):
+            session.submit(job, rng)
+        return [out.report() for out in session.drain()]
+
+    # Sequential verification path: the pre-session per-job engine, with
+    # the host-side §III-D split (the reference `TuningSession`'s on-device
+    # split is pinned against).
     profiles: List[Optional[ProfileResult]] = []
     priority: List[List[int]] = []
     remaining: List[List[int]] = []
@@ -151,31 +178,18 @@ def tune_fleet(
         priority.append(list(prio))
         remaining.append(list(rest))
 
-    if engine == "batched":
-        bt = batched_search(
-            [job.space for job in jobs],
-            [job.cost_table for job in jobs],
-            rngs,
-            priority=priority,
-            remaining=remaining,
+    traces: List[SearchTrace] = [
+        ruya_search(
+            job.space,
+            lambda i, _t=np.asarray(job.cost_table, np.float64): float(_t[i]),
+            rng,
+            prio,
+            rest,
             settings=settings,
             to_exhaustion=to_exhaustion,
         )
-        traces: List[SearchTrace] = bt.traces()
-    else:
-        traces = [
-            ruya_search(
-                job.space,
-                lambda i, _t=np.asarray(job.cost_table, np.float64): float(_t[i]),
-                rng,
-                prio,
-                rest,
-                settings=settings,
-                to_exhaustion=to_exhaustion,
-            )
-            for job, rng, prio, rest in zip(jobs, rngs, priority, remaining)
-        ]
-
+        for job, rng, prio, rest in zip(jobs, rngs, priority, remaining)
+    ]
     return [
         RuyaReport(
             profile=prof,

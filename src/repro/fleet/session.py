@@ -1,0 +1,781 @@
+"""`TuningSession`: one streaming session API over every tuning path.
+
+Ruya's workflow is inherently incremental — profile, narrow, iterate BO
+until convergence — but the repo historically exposed it as three one-shot
+entry points (`run_ruya`, `run_cherrypick`, `tune_fleet`) that assume every
+job is known up front.  The session turns tuning into a service:
+
+    session = TuningSession(cache=ProfileCache(), warm_start=True)
+    handle  = session.submit(job, seed=0)     # profile → split → enqueue
+    session.step()                            # ONE batched BO iteration for
+                                              # every live search; newly
+                                              # submitted jobs are admitted
+                                              # into lockstep chunks between
+                                              # steps
+    outcomes = session.drain()                # step until everything is done
+    handle.outcome().records                  # first-class TrialRecords
+
+Execution model.  Submitted jobs wait in a pending queue; at the next
+`step()` they are grouped by (space shape, packed capacity B) — the same
+grouping rule as `repro.fleet.batched_engine` — and formed into lockstep
+chunks of ≤ `_CHUNK` jobs.  Each `step()` applies the donated, vmapped
+`fast_bo.fleet_step` update once to every live chunk, so the whole session
+advances one BO iteration per call with no data-dependent host decisions;
+chunks retire when their step budget is exhausted (or, with early stopping,
+when a periodic poll of the on-device done flags comes back all-True).
+Draining a statically submitted fleet therefore replays `batched_search`'s
+exact array program — same grouping, same chunking, same scripted-init
+draws in submission order, same singleton dummy padding, same jitted update
+— and is bitwise trace-identical to the pre-session engines
+(`tests/test_session.py` pins this seed-for-seed against the sequential
+engine for both packed geometry layouts).
+
+Cross-job warm-starting (Flora's signature classes, Blink's recurring-job
+amortization).  The session owns the tuning state: give it a
+`ProfileCache` to share probe-classified profiles across jobs (without
+one, each distinct job profiles exactly once, like the one-shot drivers);
+either way every profiled job gets a `MemorySignature`, and completed
+trials are logged per (signature, space shape) class.  A job submitted into a class with history is *seeded*: its
+packed `(B,)` trial/target buffers and `(B,d)` feature buffer start
+pre-filled with up to B − reserve class trials (capacity-aware — the seeds
+consume packed slots and trial budget, so a seeded search runs at the same
+static extents as a cold one), its observation mask marks the seeded
+configs, and the scripted random initialization is skipped — the GP opens
+with the class's knowledge and typically fires the EI convergence
+threshold after a handful of fresh trials.  Seeding preserves `fast_bo`'s
+exact padding rules: seeded slots are ordinary observations (slots < t),
+written with the same canonical float32 encoding rows an on-device
+observation would have produced.  A warm-started search is a deterministic
+function of (class history, seed): the history is ordered by completion,
+deduplicated by config index, and truncated capacity-aware, and no RNG is
+consumed when seeding happens.
+
+Memory-aware narrowing runs ON DEVICE: the §III-D priority split comes from
+`repro.core.search_space.split_masks_device` (float64 on device, bit-equal
+to the host rule), so admission cost scales with the catalog — no Python
+loop over 10⁴–10⁵ configurations.
+
+`run_ruya` / `run_cherrypick` / `tune_fleet` / `batched_search` remain as
+thin deprecation shims over this engine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import weakref
+from typing import Dict, List, Optional, Sequence, Set, Tuple, TYPE_CHECKING
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.bayesopt import BOSettings, SearchTrace, trial_budget
+from repro.core.fast_bo import (
+    _LAYOUTS,
+    FleetState,
+    encode_features,
+    precompute_d2,
+)
+from repro.core.profiler import ProfileResult, profile_job
+from repro.core.search_space import split_masks_device
+from repro.core.tuner import RuyaReport
+# The jitted lockstep update and the chunking constants are shared verbatim
+# with the pre-session engine (see `repro.fleet.batched_engine` for why 8:
+# f32 numerics are batch-extent-invariant only in [2, 8] on XLA:CPU, and
+# chunks of one are padded with an inert dummy because extent-1 programs
+# compile to different float32 numerics).
+from repro.fleet.batched_engine import _CHUNK, _POLL_PERIOD, _fleet_update
+from repro.fleet.profile_cache import MemorySignature, ProfileCache
+
+if TYPE_CHECKING:  # import cycle: driver imports session for tune_fleet
+    from repro.fleet.driver import FleetJob
+
+__all__ = ["JobHandle", "SearchOutcome", "TrialRecord", "TuningSession"]
+
+_TRIAL_SOURCES = ("init", "search", "warm")
+
+
+@dataclasses.dataclass(frozen=True)
+class TrialRecord:
+    """One observation: which config, what it cost, when, and why.
+
+    ``slot`` is the packed-buffer slot (= engine trial counter value when the
+    observation was made, warm seeds included).  ``source`` is "init"
+    (scripted random initialization), "search" (BO pick), or "warm" (seeded
+    from the signature class's history — the cost is the donor's).
+    """
+
+    index: int
+    cost: float
+    slot: int
+    source: str = "search"
+
+    def as_dict(self) -> dict:
+        return {
+            "index": int(self.index),
+            "cost": float(self.cost),
+            "slot": int(self.slot),
+            "source": str(self.source),
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TrialRecord":
+        src = str(d["source"])
+        if src not in _TRIAL_SOURCES:
+            raise ValueError(f"unknown trial source {src!r}")
+        return cls(
+            index=int(d["index"]), cost=float(d["cost"]),
+            slot=int(d["slot"]), source=src,
+        )
+
+
+@dataclasses.dataclass
+class SearchOutcome:
+    """Everything one finished search produced — subsumes
+    `SearchTrace`/`RuyaReport` (both are views: `trace()` / `report()`).
+
+    ``records`` are the trials THIS search executed (sources "init" and
+    "search"), in trial order; ``seeded`` are the warm-start seeds that
+    pre-filled the packed buffers (source "warm", donor costs).
+    ``stop_iteration`` / ``phase_boundary`` are the engine's registers and
+    count packed slots — i.e. seeds included; `trace()` re-bases them onto
+    the executed trials so cold searches round-trip exactly.
+    """
+
+    name: str
+    records: List[TrialRecord]
+    seeded: List[TrialRecord]
+    stop_iteration: Optional[int]
+    phase_boundary: Optional[int]
+    priority: Tuple[int, ...]
+    remaining: Tuple[int, ...]
+    profile: Optional[ProfileResult] = None
+    signature: Optional[MemorySignature] = None
+
+    @property
+    def memory_model(self):
+        return None if self.profile is None else self.profile.model
+
+    @property
+    def observations(self) -> List[TrialRecord]:
+        """Seeds + executed trials, in packed-slot order."""
+        return list(self.seeded) + list(self.records)
+
+    @property
+    def best_cost(self) -> float:
+        """Lowest recorded cost over seeds + executed trials (seeds carry
+        donor costs — for recurring same-class jobs these are the point)."""
+        return min(r.cost for r in self.observations)
+
+    @property
+    def best_index(self) -> int:
+        return min(self.observations, key=lambda r: r.cost).index
+
+    def iterations_until(self, threshold_cost: float) -> Optional[int]:
+        """1-based EXECUTED trial at which cost ≤ threshold was first seen
+        (seeds excluded — this measures what the search itself had to do)."""
+        for i, r in enumerate(self.records):
+            if r.cost <= threshold_cost:
+                return i + 1
+        return None
+
+    def trace(self) -> SearchTrace:
+        """The executed trials as the legacy `SearchTrace` (bit-exact for
+        cold searches; warm searches re-base the registers past the seeds)."""
+        w = len(self.seeded)
+        stop = self.stop_iteration
+        pb = self.phase_boundary
+        return SearchTrace(
+            tried=[r.index for r in self.records],
+            costs=[r.cost for r in self.records],
+            stop_iteration=None if stop is None else max(stop - w, 0),
+            phase_boundary=None if pb is None else max(pb - w, 0),
+        )
+
+    def report(self) -> RuyaReport:
+        """The legacy `RuyaReport` view (single-job / fleet driver output)."""
+        return RuyaReport(
+            profile=self.profile,
+            priority=self.priority,
+            remaining=self.remaining,
+            trace=self.trace(),
+        )
+
+    def as_dict(self) -> dict:
+        """JSON-able view; drops `profile`/`signature` (not serializable)."""
+        return {
+            "name": self.name,
+            "records": [r.as_dict() for r in self.records],
+            "seeded": [r.as_dict() for r in self.seeded],
+            "stop_iteration": self.stop_iteration,
+            "phase_boundary": self.phase_boundary,
+            "priority": [int(i) for i in self.priority],
+            "remaining": [int(i) for i in self.remaining],
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "SearchOutcome":
+        stop = d["stop_iteration"]
+        pb = d["phase_boundary"]
+        return cls(
+            name=str(d["name"]),
+            records=[TrialRecord.from_dict(r) for r in d["records"]],
+            seeded=[TrialRecord.from_dict(r) for r in d["seeded"]],
+            stop_iteration=None if stop is None else int(stop),
+            phase_boundary=None if pb is None else int(pb),
+            priority=tuple(int(i) for i in d["priority"]),
+            remaining=tuple(int(i) for i in d["remaining"]),
+        )
+
+
+@dataclasses.dataclass
+class JobHandle:
+    """Ticket for one submitted job; query it any time.
+
+    The session is held through a weakref and the outcome is attached to
+    the handle at retirement, so handles never keep a drained session (and
+    its cached device geometry) alive — one-shot shims create a session per
+    call, and it must be reclaimed by refcount the moment the call returns.
+    """
+
+    uid: int
+    name: str
+    _session: "weakref.ref[TuningSession]" = dataclasses.field(repr=False)
+    _outcome: Optional[SearchOutcome] = dataclasses.field(
+        default=None, repr=False
+    )
+
+    @property
+    def done(self) -> bool:
+        return self._outcome is not None
+
+    @property
+    def status(self) -> str:
+        if self.done:
+            return "done"
+        session = self._session()
+        if session is None:
+            return "detached"  # session dropped before the job finished
+        if any(r.handle.uid == self.uid for r in session._pending):
+            return "pending"
+        return "running"
+
+    def outcome(self) -> SearchOutcome:
+        if self._outcome is None:
+            raise RuntimeError(
+                f"job {self.name!r} (uid {self.uid}) has not finished — "
+                "call session.step()/drain() first"
+            )
+        return self._outcome
+
+
+@dataclasses.dataclass
+class _JobRec:
+    """Internal per-job state between submit and retire."""
+
+    handle: JobHandle
+    job: "FleetJob"
+    table64: np.ndarray  # (n,) float64 — authoritative cost table
+    enc: np.ndarray  # (n,d) canonical float32 encoding (encode_features)
+    prio_mask: np.ndarray  # (n,) bool
+    rem_mask: np.ndarray  # (n,) bool
+    init_list: List[int]
+    seed_trials: List[TrialRecord]
+    budget: int  # trial budget == packed capacity B (trial_budget)
+    profile: Optional[ProfileResult]
+    signature: Optional[MemorySignature]
+    class_key: Optional[Tuple[MemorySignature, int, int]]
+    prio_idx: np.ndarray  # (p,) int64, pool order
+    rem_idx: np.ndarray  # (r,) int64, pool order
+
+
+class _LiveChunk:
+    """One lockstep chunk mid-flight: device state + static step args."""
+
+    __slots__ = ("state", "args", "members", "capacity", "steps_done",
+                 "steps_needed")
+
+    def __init__(self, state, args, members, capacity, steps_needed):
+        self.state = state
+        self.args = args
+        self.members = members
+        self.capacity = capacity
+        self.steps_done = 0
+        self.steps_needed = steps_needed
+
+
+class _SpaceEntry:
+    """Refcounted per-space cache: the strong reference to the space keeps
+    its id() stable for the entry's lifetime; the entry (and the cached
+    encoding/geometry, including a gather layout's (n,n) tensor) is evicted
+    when the last active submission over the space retires."""
+
+    __slots__ = ("space", "count", "enc", "geom")
+
+    def __init__(self, space):
+        self.space = space
+        self.count = 0
+        self.enc: Optional[np.ndarray] = None
+        self.geom: Optional[np.ndarray] = None
+
+
+class TuningSession:
+    """Streaming multi-job tuning session (see module docstring).
+
+    ``settings``/``to_exhaustion``/``layout`` are session-wide (jobs group
+    by packed capacity, which `BOSettings` helps determine — one settings
+    object per session keeps the grouping sound).  ``mode`` is the default
+    per-submit mode ("ruya" profiles + splits; "cherrypick" searches the
+    whole space).  ``cache`` is the session-owned `ProfileCache`: give one
+    to enable Flora-style probe-classified profile SHARING across jobs;
+    with ``cache=None`` (default) each distinct job is profiled exactly
+    once, like the one-shot drivers — sharing profiles changes splits and
+    traces, so it must be opted into.  Warm-start seeding works either way
+    (the signature class key comes from each job's own resolved profile).
+    ``warm_start`` enables signature-class seeding; ``warm_reserve`` packed
+    slots are always left for fresh trials (default: max(n_init, 1)).
+
+    Finished jobs release their per-job state: cost tables, masks, cached
+    encodings and geometry (refcounted per space — a gather layout's (n,n)
+    tensor is evicted with its last job) are dropped at retirement, so a
+    long-lived service session holds only the outcomes and the per-class
+    trial history (bounded by deduplication at ≤ n entries per class).
+    """
+
+    def __init__(
+        self,
+        *,
+        settings: BOSettings = BOSettings(),
+        mode: str = "ruya",
+        cache: Optional[ProfileCache] = None,
+        warm_start: bool = True,
+        warm_reserve: Optional[int] = None,
+        to_exhaustion: bool = False,
+        layout: str = "feature",
+    ) -> None:
+        if mode not in ("ruya", "cherrypick"):
+            raise ValueError(f"unknown mode {mode!r}")
+        if layout not in _LAYOUTS:
+            raise ValueError(f"unknown layout {layout!r}; want one of {_LAYOUTS}")
+        self.settings = settings
+        self.mode = mode
+        self.cache = cache
+        self.warm_start = bool(warm_start)
+        self.warm_reserve = (
+            max(int(warm_reserve), 0) if warm_reserve is not None
+            else max(settings.n_init, 1)
+        )
+        self.to_exhaustion = bool(to_exhaustion)
+        self.layout = layout
+
+        self.warm_hits = 0  # jobs that were seeded
+        self.warm_trials = 0  # total seeded observations
+
+        self._pending: List[_JobRec] = []
+        self._chunks: List[_LiveChunk] = []
+        self._order: List[JobHandle] = []  # submission order
+        self._outcomes: Dict[int, SearchOutcome] = {}
+        # id(space) → refcounted encoding/geometry (strong space ref inside)
+        self._spaces: Dict[int, _SpaceEntry] = {}
+        # id(job) → [job, active submissions, profile]; evicted at zero
+        self._jobs: Dict[int, list] = {}
+        # (signature, n, d) → (ordered [(index, cost)], seen index set)
+        self._history: Dict[tuple, Tuple[List[Tuple[int, float]], Set[int]]] = {}
+
+    # ------------------------------------------------------------- submit
+
+    def submit(
+        self,
+        job: "FleetJob",
+        rng: Optional[np.random.Generator] = None,
+        *,
+        seed: Optional[int] = None,
+        mode: Optional[str] = None,
+        priority: Optional[Sequence[int]] = None,
+        remaining: Optional[Sequence[int]] = None,
+        warm_start: Optional[bool] = None,
+    ) -> JobHandle:
+        """Register one job; it joins a lockstep chunk at the next `step()`.
+
+        ``rng`` (or ``seed``) scripts the random initialization exactly like
+        the sequential engine.  ``mode`` defaults to the session mode.
+        Passing ``priority``/``remaining`` explicitly skips profiling and
+        uses the given split verbatim (the `batched_search` shim's path);
+        otherwise "ruya" resolves a profile (``job.profile_result``, else the
+        session `ProfileCache`) and computes the §III-D split on device,
+        while "cherrypick" searches the whole space.  ``warm_start``
+        overrides the session default for this job; seeding only happens for
+        profiled jobs (the signature is the class key) and consumes no RNG.
+        """
+        if (rng is None) == (seed is None):
+            raise ValueError("provide exactly one of rng / seed")
+        if rng is None:
+            rng = np.random.default_rng(seed)
+        mode = self.mode if mode is None else mode
+        if mode not in ("ruya", "cherrypick"):
+            raise ValueError(f"unknown mode {mode!r}")
+        warm = self.warm_start if warm_start is None else bool(warm_start)
+
+        space = job.space
+        n = len(space)
+        d = space.encoded().shape[1]
+        table64 = np.asarray(job.cost_table, np.float64)
+        if table64.shape != (n,):
+            raise ValueError(
+                f"job {job.name!r}: cost table has shape {table64.shape}, "
+                f"want ({n},)"
+            )
+
+        profile: Optional[ProfileResult] = None
+        signature: Optional[MemorySignature] = None
+        if priority is not None:
+            prio_idx = np.asarray(priority, np.int64).reshape(-1)
+            rem_idx = (
+                np.zeros(0, np.int64) if remaining is None
+                else np.asarray(remaining, np.int64).reshape(-1)
+            )
+            if len(np.intersect1d(prio_idx, rem_idx)):
+                raise ValueError(
+                    f"job {job.name!r}: priority and remaining pools overlap"
+                )
+            prio_mask = np.zeros(n, bool)
+            prio_mask[prio_idx] = True
+            rem_mask = np.zeros(n, bool)
+            if rem_idx.size:
+                rem_mask[rem_idx] = True
+        elif mode == "cherrypick":
+            prio_idx = np.arange(n, dtype=np.int64)
+            rem_idx = np.zeros(0, np.int64)
+            prio_mask = np.ones(n, bool)
+            rem_mask = np.zeros(n, bool)
+        else:
+            profile = self._resolve_profile(job)
+            signature = (
+                self.cache.signature(profile.model)
+                if self.cache is not None
+                else MemorySignature.of(profile.model)
+            )
+            # §III-D narrowing, computed on device from the static
+            # per-config arrays; remaining is always the complement.
+            prio_dev = split_masks_device(
+                space,
+                profile.model,
+                job.full_input_size,
+                per_node_overhead=job.per_node_overhead,
+                leeway=job.leeway,
+                flat_fraction=job.flat_fraction,
+            )
+            prio_mask = np.asarray(prio_dev)
+            rem_mask = ~prio_mask
+            prio_idx = np.flatnonzero(prio_mask)
+            rem_idx = np.flatnonzero(rem_mask)
+
+        budget = trial_budget(len(prio_idx), len(rem_idx), self.settings)
+
+        # Warm-start seeding — decided (and the history snapshot taken) at
+        # submit time, so a search is a deterministic function of (class
+        # history, seed) no matter how the session is stepped afterwards.
+        seed_trials: List[TrialRecord] = []
+        class_key = (signature, n, d) if signature is not None else None
+        if warm and class_key is not None and class_key in self._history:
+            room = max(budget - self.warm_reserve, 0)
+            hist = self._history[class_key][0][:room]
+            seed_trials = [
+                TrialRecord(index=i, cost=c, slot=s, source="warm")
+                for s, (i, c) in enumerate(hist)
+            ]
+            if seed_trials:
+                self.warm_hits += 1
+                self.warm_trials += len(seed_trials)
+
+        # Scripted random initialization — the same draw, in the same order
+        # (submission order), as the sequential engine's phase-0 block.  A
+        # seeded search skips it (the GP already has observations) and
+        # consumes no RNG.
+        init_list: List[int] = []
+        if len(prio_idx) and not seed_trials:
+            n_init = min(self.settings.n_init, len(prio_idx))
+            picked = rng.choice(len(prio_idx), size=n_init, replace=False)
+            init_list = [int(prio_idx[int(i)]) for i in picked]
+
+        # Past the last possible raise: retain the refcounted per-space /
+        # per-job entries and register the submission.
+        handle = JobHandle(
+            uid=len(self._order), name=job.name, _session=weakref.ref(self)
+        )
+        self._retain(job)
+        rec = _JobRec(
+            handle=handle,
+            job=job,
+            table64=table64,
+            enc=self._encoding(space),
+            prio_mask=prio_mask,
+            rem_mask=rem_mask,
+            init_list=init_list,
+            seed_trials=seed_trials,
+            budget=budget,
+            profile=profile,
+            signature=signature,
+            class_key=class_key,
+            prio_idx=prio_idx,
+            rem_idx=rem_idx,
+        )
+        self._order.append(handle)
+        self._pending.append(rec)
+        return handle
+
+    # -------------------------------------------------------------- step
+
+    def step(self) -> int:
+        """Admit pending jobs into lockstep chunks, then advance every live
+        chunk by ONE batched BO iteration.  Returns the number of jobs still
+        unfinished (0 → everything has retired)."""
+        self._admit()
+        live: List[_LiveChunk] = []
+        for ch in self._chunks:
+            ch.state = _fleet_update(
+                ch.state, *ch.args, xi=self.settings.xi, layout=self.layout
+            )
+            ch.steps_done += 1
+            retire = ch.steps_done >= ch.steps_needed
+            if (
+                not retire
+                and not self.to_exhaustion
+                and ch.steps_done % _POLL_PERIOD == 0
+            ):
+                retire = bool(jnp.all(ch.state.done))
+            if retire:
+                self._retire(ch)
+            else:
+                live.append(ch)
+        self._chunks = live
+        return sum(len(c.members) for c in self._chunks) + len(self._pending)
+
+    def drain(self) -> List[SearchOutcome]:
+        """Step until every submitted job has finished; returns all outcomes
+        (cumulative over the session's lifetime) in submission order."""
+        while self._pending or self._chunks:
+            self.step()
+        return self.results()
+
+    def results(self) -> List[SearchOutcome]:
+        """Outcomes of all FINISHED jobs, in submission order."""
+        return [
+            self._outcomes[h.uid] for h in self._order
+            if h.uid in self._outcomes
+        ]
+
+    def outcome(self, handle: JobHandle) -> SearchOutcome:
+        return handle.outcome()
+
+    def __len__(self) -> int:
+        return len(self._order)
+
+    # ---------------------------------------------------------- internals
+
+    def _resolve_profile(self, job: "FleetJob") -> ProfileResult:
+        if job.profile_result is not None:
+            return job.profile_result
+        if job.profile_run is None:
+            raise ValueError(
+                f"job {job.name!r} has neither profile_result nor profile_run"
+            )
+        # Memoized per job OBJECT (seed-replica fleets alias one FleetJob):
+        # each distinct job profiles once.  An explicit session cache adds
+        # Flora-style probe-classified sharing ACROSS jobs; without one the
+        # semantics match the one-shot drivers exactly.
+        entry = self._jobs.setdefault(id(job), [job, 0, None])
+        if entry[2] is None:
+            entry[2] = (
+                self.cache.get_or_profile(job.profile_run, job.full_input_size)
+                if self.cache is not None
+                else profile_job(job.profile_run, job.full_input_size)
+            )
+        return entry[2]
+
+    def _retain(self, job: "FleetJob") -> None:
+        """Bump the refcounted per-space and per-job cache entries."""
+        space = job.space
+        se = self._spaces.get(id(space))
+        if se is None:
+            se = self._spaces[id(space)] = _SpaceEntry(space)
+        se.count += 1
+        je = self._jobs.setdefault(id(job), [job, 0, None])
+        je[1] += 1
+
+    def _release(self, rec: _JobRec) -> None:
+        """Drop the retired job's share of the caches; evict empty entries
+        (including a gather layout's (n,n) geometry tensor)."""
+        sid = id(rec.job.space)
+        se = self._spaces.get(sid)
+        if se is not None:
+            se.count -= 1
+            if se.count <= 0:
+                del self._spaces[sid]
+        jid = id(rec.job)
+        je = self._jobs.get(jid)
+        if je is not None:
+            je[1] -= 1
+            if je[1] <= 0:
+                del self._jobs[jid]
+
+    def _encoding(self, space) -> np.ndarray:
+        entry = self._spaces[id(space)]
+        if entry.enc is None:
+            entry.enc = encode_features(space.encoded())
+        return entry.enc
+
+    def _geom(self, space) -> np.ndarray:
+        """Per-space geometry, once per space (seed-replica fleets alias one
+        SearchSpace): the (n,d) encoding (feature layout) or the (n,n)
+        distance tensor (retained gather layout)."""
+        entry = self._spaces[id(space)]
+        if entry.geom is None:
+            enc = self._encoding(space)
+            entry.geom = (
+                enc if self.layout == "feature"
+                else np.asarray(precompute_d2(enc))
+            )
+        return entry.geom
+
+    def _admit(self) -> None:
+        """Form lockstep chunks from the pending queue — the same (space
+        shape, packed capacity) grouping and ≤`_CHUNK` slicing as
+        `batched_search`, so a statically submitted fleet compiles and runs
+        the identical array program."""
+        if not self._pending:
+            return
+        groups: Dict[tuple, List[_JobRec]] = {}
+        for rec in self._pending:
+            groups.setdefault((rec.enc.shape, rec.budget), []).append(rec)
+        self._pending = []
+        for (shape, cap), members in groups.items():
+            n_init_slots = max(1, max(len(r.init_list) for r in members))
+            for lo in range(0, len(members), _CHUNK):
+                self._chunks.append(
+                    self._build_chunk(
+                        members[lo : lo + _CHUNK], shape, cap, n_init_slots
+                    )
+                )
+
+    def _build_chunk(
+        self, members: List[_JobRec], shape, cap: int, n_init_slots: int
+    ) -> _LiveChunk:
+        n, d = shape
+        g = len(members)
+        capacity = max(cap, 1)
+        # Chunks of one are padded with an inert dummy row (zero trial
+        # budget, cold defaults): XLA:CPU collapses singleton batch dims
+        # into unbatched programs with different float32 numerics.
+        rows = g if g >= 2 else 2
+
+        geom_one = self._geom(members[0].job.space)
+        geom = np.zeros((rows,) + geom_one.shape, geom_one.dtype)
+        costs = np.zeros((rows, n), np.float32)
+        prio_mask = np.zeros((rows, n), bool)
+        rem_mask = np.zeros((rows, n), bool)
+        init_picks = np.zeros((rows, n_init_slots), np.int32)
+        init_count = np.zeros(rows, np.int32)
+        max_trials = np.zeros(rows, np.int32)
+        obs0 = np.zeros((rows, n), bool)
+        tried0 = np.full((rows, capacity), -1, np.int32)
+        py0 = np.zeros((rows, capacity), np.float32)
+        feats0 = np.zeros((rows, capacity, d), np.float32)
+        t0 = np.zeros(rows, np.int32)
+
+        for i, rec in enumerate(members):
+            geom[i] = self._geom(rec.job.space)
+            costs[i] = rec.table64.astype(np.float32)
+            prio_mask[i] = rec.prio_mask
+            rem_mask[i] = rec.rem_mask
+            init_picks[i, : len(rec.init_list)] = rec.init_list
+            init_count[i] = len(rec.init_list)
+            max_trials[i] = rec.budget
+            w = len(rec.seed_trials)
+            if w:
+                idx = np.asarray([s.index for s in rec.seed_trials], np.int64)
+                obs0[i, idx] = True
+                tried0[i, :w] = idx.astype(np.int32)
+                py0[i, :w] = np.asarray(
+                    [s.cost for s in rec.seed_trials], np.float32
+                )
+                # Rows of the canonical float32 encoding — bit-identical to
+                # what on-device observation writes would have accumulated.
+                feats0[i, :w] = rec.enc[idx]
+                t0[i] = w
+
+        state = FleetState(
+            obs=jnp.asarray(obs0),
+            tried=jnp.asarray(tried0),
+            py=jnp.asarray(py0),
+            feats=jnp.asarray(feats0),
+            t=jnp.asarray(t0),
+            stop=jnp.full(rows, -1, jnp.int32),
+            pb=jnp.full(rows, -1, jnp.int32),
+            done=jnp.zeros(rows, bool),
+            last_ei=jnp.zeros(rows, jnp.float32),
+            last_best=jnp.full(rows, jnp.inf, jnp.float32),
+        )
+        args = (
+            jnp.asarray(geom), jnp.asarray(costs), jnp.asarray(prio_mask),
+            jnp.asarray(rem_mask), jnp.asarray(init_picks),
+            jnp.asarray(init_count), jnp.asarray(max_trials),
+            jnp.asarray(self.settings.min_observations, jnp.int32),
+            jnp.asarray(self.settings.ei_stop_rel, jnp.float32),
+            jnp.asarray(self.to_exhaustion),
+        )
+        # One extra pass beyond the largest fresh-trial budget: it observes
+        # nothing, but it is where a budget-capped job records a phase
+        # boundary reached exactly at its last trial, and where budget
+        # exhaustion latches `done` (same schedule as the one-shot engine).
+        steps_needed = int(max(max_trials[i] - t0[i] for i in range(rows))) + 1
+        return _LiveChunk(state, args, members, capacity, steps_needed)
+
+    def _retire(self, ch: _LiveChunk) -> None:
+        s_tried = np.asarray(ch.state.tried)
+        s_t = np.asarray(ch.state.t)
+        s_stop = np.asarray(ch.state.stop)
+        s_pb = np.asarray(ch.state.pb)
+        for i, rec in enumerate(ch.members):
+            k = int(s_t[i])
+            w = len(rec.seed_trials)
+            n_init = len(rec.init_list)
+            records = []
+            for slot in range(w, k):
+                idx = int(s_tried[i, slot])
+                records.append(
+                    TrialRecord(
+                        index=idx,
+                        cost=float(rec.table64[idx]),
+                        slot=slot,
+                        source="init" if slot < n_init else "search",
+                    )
+                )
+            stop = int(s_stop[i])
+            pb = int(s_pb[i])
+            outcome = SearchOutcome(
+                name=rec.job.name,
+                records=records,
+                seeded=list(rec.seed_trials),
+                stop_iteration=stop if stop >= 0 else None,
+                phase_boundary=pb if pb >= 0 else None,
+                # tolist() boxes at C speed; built once, at retirement.
+                priority=tuple(rec.prio_idx.tolist()),
+                remaining=tuple(rec.rem_idx.tolist()),
+                profile=rec.profile,
+                signature=rec.signature,
+            )
+            self._outcomes[rec.handle.uid] = outcome
+            rec.handle._outcome = outcome
+            if rec.class_key is not None:
+                hist, seen = self._history.setdefault(
+                    rec.class_key, ([], set())
+                )
+                for r in records:
+                    if r.index not in seen:
+                        seen.add(r.index)
+                        hist.append((r.index, r.cost))
+            # The rec (cost table, masks, encoding share) dies with the
+            # chunk; evict its cache shares so a long-lived session holds
+            # only outcomes and class history.
+            self._release(rec)

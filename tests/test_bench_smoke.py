@@ -3,8 +3,9 @@ in its seconds-scale smoke mode — donation check (including the (B,d)
 feature buffer), a small scaling-sweep point with trace verification AND
 the n = 32768 feature-buffer point (the 10⁴–10⁵ regime must stay wired:
 nothing of extent n² exists on that path, so it is seconds, not minutes),
-and the `BENCH_fleet.json` emission — so the bench plumbing is exercised
-without the multi-minute full sweep.
+the streaming `TuningSession` scenario (recurring jobs in waves,
+warm-start amortization asserted), and the `BENCH_fleet.json` emission —
+so the bench plumbing is exercised without the multi-minute full sweep.
 
 Excluded from the default tier-1 lane (see pyproject addopts); selected
 explicitly with `pytest -m bench_smoke`, and included in the full
@@ -66,5 +67,16 @@ def test_fleet_bench_smoke(tmp_path):
     # run, not per sweep point.
     assert out["peak_rss_mb"] > 0.0
 
+    # Streaming-session scenario: recurring jobs in waves must produce both
+    # cold and warm-started searches, the warm ones converging in strictly
+    # fewer fresh trials (the bench itself asserts the strict inequality;
+    # re-checked here against the emitted entry).
+    d = out["session_streaming"]
+    assert d["cold_jobs"] > 0 and d["warm_jobs"] > 0
+    assert d["warm_seeded_trials"] > 0
+    assert d["profile_cache_hits"] > 0
+    assert d["warm_mean_fresh_trials"] < d["cold_mean_fresh_trials"]
+
     data = json.loads(path.read_text())
     assert data["scaling"]["sweep"][0]["n"] == rows[0]["n"]
+    assert data["session_streaming"]["warm_jobs"] == d["warm_jobs"]
