@@ -28,6 +28,13 @@ Four measurements; A–C are trace-checked against the sequential engine:
      Asserts warm-started searches reach the EI convergence threshold in
      strictly fewer fresh trials than cold starts, and reports cache hit
      rates and the seeded-trial counts.
+  E. **Job-axis sharding** (`--shards N [N ...]`) — the service fleet (B)
+     re-run with the lockstep chunks sharded across JAX devices
+     (`repro.fleet.sharding`): per shard count, best-of wall clock vs the
+     single-device reference and a bit-identity assertion on every trace.
+     On CPU the devices come from --xla_force_host_platform_device_count
+     (forced at the top of this module and by `benchmarks/run.py` when
+     nothing set it).  Target on the 2-core container: ≥ 1.5× at 2 shards.
 
 The sweep also asserts **buffer donation**: the lockstep update consumes
 (donates) its input state, so each fleet iteration updates the observation
@@ -59,6 +66,44 @@ import time
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
+
+# The sharded lanes need a multi-device CPU topology, which must be forced
+# before the JAX backend initializes.  Under pytest, conftest.py has done
+# it; `benchmarks.run` does it when (and only when) the fleet suite is
+# selected; the block below covers `python -m benchmarks.fleet_bench`
+# directly — gated on __main__ so that merely IMPORTING this module (e.g.
+# `benchmarks.run --only table2` imports every suite) never changes
+# another benchmark's device topology.  Forcing MORE devices than needed
+# is not free — the single-device baseline loses wall clock to the extra
+# device plumbing — so exactly max(--shards, 2) are forced, and only when
+# the caller forced nothing.
+def shard_device_count(argv: Sequence[str]) -> int:
+    """max(requested --shards, 2), pre-parsed from raw argv — this must
+    run before argparse (and therefore before the jax-importing module
+    body) can."""
+    want = [2]
+    argv = list(argv)
+    for i, a in enumerate(argv):
+        if a == "--shards":  # space-separated: --shards 2 4
+            tail = argv[i + 1:]
+        elif a.startswith("--shards="):  # argparse's --shards=4 spelling
+            tail = [a.split("=", 1)[1]]
+        else:
+            continue
+        for v in tail:
+            if v.startswith("-"):
+                break
+            try:
+                want.append(int(v))
+            except ValueError:  # argparse will reject it properly later
+                break
+    return max(want)
+
+
+if __name__ == "__main__":
+    from repro.hostdevices import force_host_device_count
+
+    force_host_device_count(shard_device_count(sys.argv[1:]))
 
 import jax
 import jax.numpy as jnp
@@ -485,16 +530,12 @@ def bench_paper_replay(jobs, check: bool, settings: BOSettings) -> dict:
             "speedup": t_seq / t_bat, "total_trials": trials}
 
 
-def bench_priority_service(jobs, check: bool, settings: BOSettings,
-                           n_jobs: int) -> dict:
-    """Workload B: recurring jobs re-tuned within their priority group only.
-
-    The service scenario: the recurring flat-memory jobs (terasort, join,
-    Hadoop pagerank — the ETL-style workloads a cluster re-tunes routinely)
-    searched inside their ~10-config priority groups, ``n_jobs`` runs total.
-    Unclear jobs have no priority group and linear jobs' groups vary per
-    job; the flat fleet is the uniform, dispatch-bound service case.
-    """
+def service_fleet_spaces(
+    jobs, n_jobs: int
+) -> Tuple[List[SearchSpace], List[np.ndarray]]:
+    """The priority-only service workload's (spaces, tables): recurring
+    flat-memory jobs searched within their memory-derived priority groups
+    (~10 configs each) — shared by workload B and the `--shards` sweep."""
     from repro.core.memory_model import MemoryCategory
 
     flat = [
@@ -519,6 +560,20 @@ def bench_priority_service(jobs, check: bool, settings: BOSettings,
         )
         spaces.append(SearchSpace([job.space.configs[k] for k in prio]))
         tables.append(np.asarray(job.cost_table)[np.asarray(prio, np.int64)])
+    return spaces, tables
+
+
+def bench_priority_service(jobs, check: bool, settings: BOSettings,
+                           n_jobs: int) -> dict:
+    """Workload B: recurring jobs re-tuned within their priority group only.
+
+    The service scenario: the recurring flat-memory jobs (terasort, join,
+    Hadoop pagerank — the ETL-style workloads a cluster re-tunes routinely)
+    searched inside their ~10-config priority groups, ``n_jobs`` runs total.
+    Unclear jobs have no priority group and linear jobs' groups vary per
+    job; the flat fleet is the uniform, dispatch-bound service case.
+    """
+    spaces, tables = service_fleet_spaces(jobs, n_jobs)
 
     cost_fns = [lambda i, t=t: float(t[i]) for t in tables]
     # Warm both paths, covering every distinct space shape the sequential
@@ -556,6 +611,89 @@ def bench_priority_service(jobs, check: bool, settings: BOSettings,
             "mean_space": float(np.mean([len(s) for s in spaces]))}
 
 
+def bench_sharded(
+    spaces: Sequence[SearchSpace], tables: Sequence[np.ndarray],
+    check: bool, settings: BOSettings, shards: Sequence[int],
+    reps: int = 3, workload: str = "priority_service",
+) -> dict:
+    """The ``--shards`` axis: the batched engine with the job axis sharded
+    across devices vs the single-device lockstep reference, same fleet.
+
+    Best-of-``reps`` wall clock on both sides (this host wobbles ±2×, and
+    the quantity of interest — dispatch+execute throughput at a fixed
+    array program — is the minimum, not the mean).  Sharded traces are
+    asserted bit-identical to the unsharded run when ``check``; shard
+    counts above the visible device count are recorded as skipped rather
+    than silently run unsharded.
+    """
+    n_jobs = len(tables)
+
+    def run_once(shard):
+        t0 = time.perf_counter()
+        bt = batched_search(
+            spaces, tables, _rngs(n_jobs), settings=settings,
+            to_exhaustion=True, shard=shard,
+        )
+        return time.perf_counter() - t0, bt
+
+    run_once(None)  # compile warm-up
+    t_un = float("inf")
+    for _ in range(reps):
+        t, ref = run_once(None)
+        t_un = min(t_un, t)
+
+    rows = []
+    for s in shards:
+        if s < 2 or s > jax.device_count():
+            rows.append({
+                "shards": s, "skipped":
+                f"{jax.device_count()} device(s) visible; want ≥ {max(s, 2)}",
+            })
+            continue
+        run_once(s)  # compile warm-up for the sharded programs
+        t_s = float("inf")
+        for _ in range(reps):
+            t, bt = run_once(s)
+            t_s = min(t_s, t)
+        identical = None  # null = unchecked (--no-check), like the sweep
+        if check:
+            identical = all(
+                bt.job_trace(j).tried == ref.job_trace(j).tried
+                and bt.job_trace(j).costs == ref.job_trace(j).costs
+                and bt.job_trace(j).stop_iteration
+                == ref.job_trace(j).stop_iteration
+                for j in range(n_jobs)
+            )
+            assert identical, f"sharded (S={s}) traces diverged from lockstep"
+        rows.append({
+            "shards": s,
+            "batched_s": t_s,
+            "speedup_vs_unsharded": t_un / t_s,
+            "traces_identical": identical,
+        })
+    return {
+        "workload": workload,
+        "n_jobs": n_jobs,
+        "devices_visible": jax.device_count(),
+        "reps_best_of": reps,
+        "unsharded_s": t_un,
+        "shards": rows,
+    }
+
+
+def _report_sharded(r: dict) -> None:
+    print(f"  --shards axis ({r['workload']}, {r['n_jobs']} jobs, "
+          f"{r['devices_visible']} devices, best of {r['reps_best_of']}): "
+          f"unsharded {r['unsharded_s']:.3f} s")
+    for row in r["shards"]:
+        if "skipped" in row:
+            print(f"    S={row['shards']}: skipped ({row['skipped']})")
+        else:
+            print(f"    S={row['shards']}: {row['batched_s']:.3f} s  "
+                  f"({row['speedup_vs_unsharded']:.2f}x vs unsharded, "
+                  f"traces {'identical' if row['traces_identical'] else 'UNCHECKED'})")
+
+
 def _report(tag: str, r: dict) -> None:
     print(f"  {tag}")
     print(f"    sequential engine : {r['sequential_s']:7.2f} s  "
@@ -583,7 +721,7 @@ def run(n_jobs: int = 64, check: bool = True,
         settings: BOSettings = BOSettings(), *, smoke: bool = False,
         scaling_ns: Sequence[int] = (69, 256, 512, 1024, 8192, 32768),
         budget: int = 24, json_path: Optional[str] = None,
-        session_only: bool = False) -> dict:
+        session_only: bool = False, shards: Sequence[int] = (2,)) -> dict:
     # The repo-root BENCH_fleet.json is the committed perf baseline; only
     # the full default protocol (64 jobs, full sweep) may rewrite it —
     # smoke or reduced-job runs would replace it with non-comparable
@@ -625,6 +763,14 @@ def run(n_jobs: int = 64, check: bool = True,
     print(f"  peak RSS over the whole run: {out['peak_rss_mb']:.0f} MB")
 
     if smoke:
+        # Sharded-lane wiring check: an 8-job synthetic service-like fleet
+        # (10-config spaces, exhaustion) across the requested shard counts,
+        # traces verified against the lockstep reference.
+        sp_s, tb_s = synthetic_space(10)
+        sh = bench_sharded([sp_s] * 8, [tb_s] * 8, check, BOSettings(),
+                           shards, reps=2, workload="synthetic_service")
+        _report_sharded(sh)
+        out["sharding"] = sh
         # Streaming-session wiring check: 16 recurring jobs in 4 waves at a
         # reduced trial budget (small packed capacity → seconds of compile);
         # the warm-vs-cold convergence assertion still runs.
@@ -639,6 +785,13 @@ def run(n_jobs: int = 64, check: bool = True,
         b = bench_priority_service(jobs, check, settings, n_jobs)
         _report(f"B. priority-only service fleet ({b['n_jobs']} recurring jobs,"
                 f" ~{b['mean_space']:.0f}-config spaces, {b['total_trials']} trials)", b)
+        # The --shards axis on the same service fleet: the 64-job
+        # dispatch-bound workload is exactly where job-axis sharding must
+        # pay (target: ≥ 1.5× at 2 shards on the 2-core container).
+        sp_b, tb_b = service_fleet_spaces(jobs, n_jobs)
+        sh = bench_sharded(sp_b, tb_b, check, settings, shards)
+        _report_sharded(sh)
+        out["sharding"] = sh
         a = bench_paper_replay(jobs, check, settings)
         _report(f"A. paper replay, two-phase over 69 configs "
                 f"({a['total_trials']} trials)", a)
@@ -673,6 +826,9 @@ if __name__ == "__main__":
     ap.add_argument("--session", action="store_true",
                     help="run ONLY the streaming TuningSession scenario "
                          "(jobs arriving in 8 waves, warm-start amortization)")
+    ap.add_argument("--shards", type=int, nargs="*", default=[2],
+                    help="shard counts for the job-axis sharding sweep on "
+                         "the service fleet (default: 2)")
     args = ap.parse_args()
     run(args.jobs, check=not args.no_check, smoke=args.smoke,
-        session_only=args.session)
+        session_only=args.session, shards=tuple(args.shards))

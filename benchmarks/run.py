@@ -8,9 +8,13 @@
 `BENCH_fleet.json` at the repo root — including the streaming
 `TuningSession` scenario (workload D: 64 recurring jobs in 8 waves,
 warm-start amortization; standalone via `python -m benchmarks.fleet_bench
---session`).  `--smoke` runs suites that support it in a seconds-scale
-wiring mode (currently: fleet) — the same mode `pytest -m bench_smoke`
-exercises.
+--session`) and the job-axis sharding sweep (workload E; `--shards N ...`
+is passed through to the fleet bench, default 2 — when the fleet suite is
+selected, and only then, this driver forces
+--xla_force_host_platform_device_count=max(--shards, 2) before JAX
+initializes so the shard lanes have devices to run on).  `--smoke` runs suites that
+support it in a seconds-scale wiring mode (currently: fleet) — the same
+mode `pytest -m bench_smoke` exercises.
 
 Env: RUYA_BENCH_REPS (default 50; the paper used 200 repetitions).
 """
@@ -23,7 +27,6 @@ import sys
 import time
 import traceback
 
-
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None,
@@ -33,7 +36,20 @@ def main() -> None:
                     help="skip the compile-heavy tuner benchmark")
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-scale wiring mode for suites that support it")
+    ap.add_argument("--shards", type=int, nargs="*", default=None,
+                    help="shard counts for the fleet bench's job-axis "
+                         "sharding sweep (passed through to --only fleet)")
     args = ap.parse_args()
+
+    if args.only is None or "fleet" in args.only:
+        # The fleet suite's sharded lanes need a multi-device CPU topology,
+        # forced before the jax-importing benchmark modules below can
+        # initialize the backend.  Only the fleet suite pays for it: extra
+        # forced devices dilute the intra-op thread pool, and the other
+        # suites' absolute numbers must stay comparable to their baselines.
+        from repro.hostdevices import force_host_device_count
+
+        force_host_device_count(max([2] + list(args.shards or [])))
 
     from benchmarks import (
         fig1_memory_cliff,
@@ -73,10 +89,13 @@ def main() -> None:
         print(f"\n{'='*72}\nBENCH {name}\n{'='*72}")
         try:
             fn = suites[name]
-            if args.smoke and "smoke" in inspect.signature(fn).parameters:
-                fn(smoke=True)
-            else:
-                fn()
+            kwargs = {}
+            params = inspect.signature(fn).parameters
+            if args.smoke and "smoke" in params:
+                kwargs["smoke"] = True
+            if args.shards is not None and "shards" in params:
+                kwargs["shards"] = tuple(args.shards)
+            fn(**kwargs)
             print(f"[{name}] done in {time.time()-t0:.0f}s")
         except Exception:
             failures.append(name)

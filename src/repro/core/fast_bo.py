@@ -26,6 +26,13 @@ Session-era paths ride the same step with zero new device code (PR 4):
     on-device split  O(n log n) §III-D mask build once per admission
                      (search_space.split_masks_device), float64, bit-equal
                      to the host rule — no O(n) Python narrowing loop
+    sharded step     one `shard_map` dispatch advances S chunks, one per
+                     device (repro.fleet.sharding): per-device compute is
+                     the unchanged extent-r chunk program, communication
+                     is ZERO bytes per step (searches are independent, no
+                     collectives) — only the O(S·r·(n·d + B·d + n))
+                     placement at admission and the O(S·r·B) register
+                     gather at retirement, once per chunk lifetime
 
 The d²-gather layout paid a one-off O(n²·d) `precompute_d2` per search and
 held the (n,n) tensor for its whole lifetime — an O(n²) memory wall that
@@ -85,6 +92,11 @@ so BOTH engines execute the single `fleet_step` program:
   * the fleet engine (`repro.fleet.batched_engine`) vmaps it over lockstep
     chunks of 2–8 jobs, grouped by (space shape, packed capacity B) so
     every job factorizes the same static extents as a solo run would;
+  * the sharded fleet engine (`repro.fleet.sharding`) runs the SAME
+    vmapped program per device under `shard_map` — the body is traced at
+    the per-device chunk extent (still 2–8), so sharding adds no new
+    compilation context and stays bit-identical (pinned by the
+    golden-trace harness in `tests/golden/`);
   * the sequential driver's `SequentialProbe` carries a batch-extent-2
     state (row 1 a discarded duplicate) on device across a whole search,
     donating it to each jitted probe call: per step one f32 scalar goes up

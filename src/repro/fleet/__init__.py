@@ -20,11 +20,16 @@ negligible per-job overhead.  This package provides:
   * `driver.tune_fleet` — one-shot shim: probe/profile (with cache), split,
     search, one `RuyaReport` per job — the same API `repro.core.tuner`
     exposes for J=1.
+  * `sharding` — job-axis sharding across JAX devices: lockstep chunks are
+    bundled S at a time and advanced by one `shard_map` dispatch
+    (`TuningSession(shard=...)` / `batched_search(shard=...)`), pinned
+    bit-identical to the single-device reference by `tests/golden/`.
 """
 
 from repro.fleet.batched_engine import BatchedTrace, batched_search
 from repro.fleet.driver import FleetJob, cluster_fleet, replay_seeds, tune_fleet
 from repro.fleet.profile_cache import MemorySignature, ProfileCache
+from repro.fleet.sharding import resolve_shard_devices
 from repro.fleet.session import (
     JobHandle,
     SearchOutcome,
@@ -42,6 +47,7 @@ __all__ = [
     "JobHandle",
     "MemorySignature",
     "ProfileCache",
+    "resolve_shard_devices",
     "SearchOutcome",
     "TrialRecord",
     "TuningSession",

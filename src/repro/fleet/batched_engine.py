@@ -7,7 +7,10 @@ lockstep.  (Since the `TuningSession` redesign the chunk lifecycle — group,
 admit, step, retire — lives in `repro.fleet.session`, which also serves
 streaming submission and warm-starting; `batched_search` below is the
 retained one-shot shim, and this module keeps the jitted lockstep update
-`_fleet_update` plus the chunking constants both entry points share.)
+`_fleet_update` plus the chunking constants both entry points share.
+With `shard=`/`devices=`, chunks are additionally bundled across JAX
+devices and advanced by one `shard_map` dispatch — see
+`repro.fleet.sharding`; traces stay bit-identical either way.)
 
   * `jax.vmap` over jobs lifts the per-job state (observation mask, packed
     trial log/targets/features — `fast_bo.FleetState`) into batched arrays
@@ -156,6 +159,8 @@ def batched_search(
     settings: BOSettings = BOSettings(),
     to_exhaustion: bool = False,
     layout: str = "feature",
+    shard=None,
+    devices=None,
 ) -> BatchedTrace:
     """Run J independent BO searches in lockstep on device.
 
@@ -173,6 +178,9 @@ def batched_search(
     ``layout`` selects the packed geometry path: "feature" (default, O(n·d)
     memory) or "gather" (retained PR-2 (n,n)-tensor path, bit-identical,
     kept for cross-checks — do not use it for n ≳ 10⁴ spaces).
+    ``shard``/``devices`` shard the job axis across JAX devices
+    (`repro.fleet.sharding`) — a pure execution optimization, pinned
+    bit-identical to the single-device default by `tests/golden/`.
 
     Since the `TuningSession` redesign this is a thin shim: submit every
     job to a fresh session (no profiling, no warm-starting — the splits are
@@ -197,7 +205,8 @@ def batched_search(
 
     session = TuningSession(
         settings=settings, mode="cherrypick", warm_start=False,
-        to_exhaustion=to_exhaustion, layout=layout,
+        to_exhaustion=to_exhaustion, layout=layout, shard=shard,
+        devices=devices,
     )
     for j, (space, table, rng) in enumerate(zip(space_list, cost_tables, rngs)):
         session.submit(

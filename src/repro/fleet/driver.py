@@ -114,6 +114,7 @@ def tune_fleet(
     to_exhaustion: bool = False,
     cache: Optional[ProfileCache] = None,
     engine: str = "batched",
+    shard=None,
 ) -> List[RuyaReport]:
     """Tune J jobs; returns one `RuyaReport` per job.
 
@@ -122,7 +123,9 @@ def tune_fleet(
     (no profiling, the report's ``profile`` is None).  ``engine="batched"``
     uses the jitted multi-job engine; ``engine="sequential"`` drives the
     per-job engine in a Python loop — both produce identical traces, the
-    sequential path exists for verification and J=1 fallback.
+    sequential path exists for verification and J=1 fallback.  ``shard``
+    (batched engine only) spreads the job axis across JAX devices — see
+    `repro.fleet.sharding`; traces stay bit-identical.
 
     .. deprecated:: PR 4
         This is a one-shot deprecation shim over
@@ -136,6 +139,8 @@ def tune_fleet(
         raise ValueError(f"unknown mode {mode!r}")
     if engine not in ("batched", "sequential"):
         raise ValueError(f"unknown engine {engine!r}")
+    if shard is not None and engine == "sequential":
+        raise ValueError("shard= requires the batched engine")
     if len(jobs) != len(rngs):
         raise ValueError(f"{len(jobs)} jobs but {len(rngs)} rngs")
 
@@ -144,7 +149,7 @@ def tune_fleet(
 
         session = TuningSession(
             settings=settings, mode=mode, cache=cache, warm_start=False,
-            to_exhaustion=to_exhaustion,
+            to_exhaustion=to_exhaustion, shard=shard,
         )
         for job, rng in zip(jobs, rngs):
             session.submit(job, rng)

@@ -63,10 +63,13 @@ from __future__ import annotations
 
 import dataclasses
 import weakref
-from typing import Dict, List, Optional, Sequence, Set, Tuple, TYPE_CHECKING
+from typing import (
+    Dict, List, Optional, Sequence, Set, Tuple, TYPE_CHECKING, Union,
+)
 
 import numpy as np
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.bayesopt import BOSettings, SearchTrace, trial_budget
@@ -86,6 +89,7 @@ from repro.core.tuner import RuyaReport
 # compile to different float32 numerics).
 from repro.fleet.batched_engine import _CHUNK, _POLL_PERIOD, _fleet_update
 from repro.fleet.profile_cache import MemorySignature, ProfileCache
+from repro.fleet.sharding import resolve_shard_devices, sharded_update
 
 if TYPE_CHECKING:  # import cycle: driver imports session for tune_fleet
     from repro.fleet.driver import FleetJob
@@ -290,16 +294,28 @@ class _JobRec:
 
 
 class _LiveChunk:
-    """One lockstep chunk mid-flight: device state + static step args."""
+    """One lockstep chunk (or sharded chunk bundle) mid-flight.
 
-    __slots__ = ("state", "args", "members", "capacity", "steps_done",
-                 "steps_needed")
+    ``update`` is the jitted step program — the donated single-device
+    `_fleet_update` for a plain chunk, or the `shard_map` bundle update
+    (`repro.fleet.sharding.sharded_update`) when the session shards the
+    job axis.  Member i always lives at flat row i of the state buffers
+    once any leading shard axis is collapsed (`_retire` reshapes to
+    (-1, ...)): shards slice the member list contiguously and dummy pads
+    only trail the last rows of a shard — so retirement is layout-agnostic
+    with no explicit row map.
+    """
 
-    def __init__(self, state, args, members, capacity, steps_needed):
+    __slots__ = ("state", "args", "members", "capacity", "update",
+                 "steps_done", "steps_needed")
+
+    def __init__(self, state, args, members, capacity, update,
+                 steps_needed):
         self.state = state
         self.args = args
         self.members = members
         self.capacity = capacity
+        self.update = update
         self.steps_done = 0
         self.steps_needed = steps_needed
 
@@ -335,6 +351,24 @@ class TuningSession:
     ``warm_start`` enables signature-class seeding; ``warm_reserve`` packed
     slots are always left for fresh trials (default: max(n_init, 1)).
 
+    ``shard``/``devices`` switch on job-axis sharding: with S > 1 devices
+    resolved (``shard=S``, ``shard="auto"``, or an explicit device list),
+    each (shape, capacity) group's lockstep chunks are bundled S at a time
+    and advanced by ONE `shard_map` dispatch per step, one chunk per
+    device (`repro.fleet.sharding`).  The default (``shard=None``) is the
+    single-device reference path, and a sharded session is pinned
+    bit-identical to it by the golden-trace harness (`tests/golden/`): the
+    per-device program is the same vmapped `fast_bo.fleet_step` at a row
+    extent in [2, 8], so the established batch-extent invariance carries
+    the proof.  Sharded groups re-chunk to rows = min(8, ceil(M/S)) so
+    small fleets spread across devices too — chunk membership never
+    affects traces (each job's state and static extents are its own).
+    Caveat: bundles RETIRE as a unit, so with warm-starting on, a job
+    submitted mid-flight (no intervening drain) may see a different
+    class-history snapshot — and different warm seeds — across shard
+    counts; drain boundaries make warm seeding shard-count-independent
+    (see `repro.fleet.sharding`).
+
     Finished jobs release their per-job state: cost tables, masks, cached
     encodings and geometry (refcounted per space — a gather layout's (n,n)
     tensor is evicted with its last job) are dropped at retirement, so a
@@ -352,11 +386,16 @@ class TuningSession:
         warm_reserve: Optional[int] = None,
         to_exhaustion: bool = False,
         layout: str = "feature",
+        shard: Union[None, int, str] = None,
+        devices: Optional[Sequence] = None,
     ) -> None:
         if mode not in ("ruya", "cherrypick"):
             raise ValueError(f"unknown mode {mode!r}")
         if layout not in _LAYOUTS:
             raise ValueError(f"unknown layout {layout!r}; want one of {_LAYOUTS}")
+        # None → single-device reference path; else a tuple of ≥ 2 devices
+        # the job axis is sharded over.
+        self.shard_devices = resolve_shard_devices(shard, devices)
         self.settings = settings
         self.mode = mode
         self.cache = cache
@@ -533,9 +572,7 @@ class TuningSession:
         self._admit()
         live: List[_LiveChunk] = []
         for ch in self._chunks:
-            ch.state = _fleet_update(
-                ch.state, *ch.args, xi=self.settings.xi, layout=self.layout
-            )
+            ch.state = ch.update(ch.state, ch.args)
             ch.steps_done += 1
             retire = ch.steps_done >= ch.steps_needed
             if (
@@ -642,7 +679,8 @@ class TuningSession:
         """Form lockstep chunks from the pending queue — the same (space
         shape, packed capacity) grouping and ≤`_CHUNK` slicing as
         `batched_search`, so a statically submitted fleet compiles and runs
-        the identical array program."""
+        the identical array program.  With sharding on, each group's chunks
+        are instead bundled across the shard devices (`_build_sharded`)."""
         if not self._pending:
             return
         groups: Dict[tuple, List[_JobRec]] = {}
@@ -651,6 +689,11 @@ class TuningSession:
         self._pending = []
         for (shape, cap), members in groups.items():
             n_init_slots = max(1, max(len(r.init_list) for r in members))
+            if self.shard_devices is not None:
+                self._chunks.extend(
+                    self._build_sharded(members, shape, cap, n_init_slots)
+                )
+                continue
             for lo in range(0, len(members), _CHUNK):
                 self._chunks.append(
                     self._build_chunk(
@@ -658,16 +701,99 @@ class TuningSession:
                     )
                 )
 
+    def _build_sharded(
+        self, members: List[_JobRec], shape, cap: int, n_init_slots: int
+    ) -> List[_LiveChunk]:
+        """Bundle one (shape, capacity) group's jobs across the shard
+        devices: chunks of ``rows`` jobs, up to S of them per bundle, one
+        `shard_map` dispatch per bundle per step.
+
+        Rows are min(_CHUNK, ceil(M/S)) so a small fleet still spreads
+        across devices — legal because chunk membership never affects
+        traces (each job carries its own state and the row extent stays in
+        the batch-extent-invariant [2, 8] window; pinned by the golden
+        harness and the shard-invariance property suite).  A leftover
+        bundle with a single chunk takes the plain single-device path.
+        """
+        S = len(self.shard_devices)
+        m = len(members)
+        rows = min(_CHUNK, max(2, -(-m // S)))
+        out: List[_LiveChunk] = []
+        for lo in range(0, m, S * rows):
+            sl = members[lo : lo + S * rows]
+            n_shards = -(-len(sl) // rows)
+            if n_shards == 1:
+                out.append(self._build_chunk(sl, shape, cap, n_init_slots))
+                continue
+            parts = [
+                self._chunk_arrays(
+                    sl[k * rows : (k + 1) * rows], shape, cap, n_init_slots,
+                    rows,
+                )
+                for k in range(n_shards)
+            ]
+            update, sharding = sharded_update(
+                self.shard_devices[:n_shards], self.settings.xi, self.layout
+            )
+            state = jax.tree_util.tree_map(
+                lambda *xs: jax.device_put(np.stack(xs), sharding),
+                *[p[0] for p in parts],
+            )
+            args = tuple(
+                jax.device_put(np.stack(xs), sharding)
+                for xs in zip(*[p[1] for p in parts])
+            ) + tuple(
+                jax.device_put(np.stack([v] * n_shards), sharding)
+                for v in (
+                    np.asarray(self.settings.min_observations, np.int32),
+                    np.asarray(self.settings.ei_stop_rel, np.float32),
+                    np.asarray(self.to_exhaustion),
+                )
+            )
+            out.append(
+                _LiveChunk(
+                    state=state,
+                    args=args,
+                    members=sl,
+                    capacity=max(cap, 1),
+                    update=lambda st, a, _u=update: _u(st, *a),
+                    steps_needed=max(p[2] for p in parts),
+                )
+            )
+        return out
+
     def _build_chunk(
         self, members: List[_JobRec], shape, cap: int, n_init_slots: int
     ) -> _LiveChunk:
+        state_np, args_np, steps_needed = self._chunk_arrays(
+            members, shape, cap, n_init_slots, max(len(members), 2)
+        )
+        state = jax.tree_util.tree_map(jnp.asarray, state_np)
+        args = tuple(jnp.asarray(a) for a in args_np) + (
+            jnp.asarray(self.settings.min_observations, jnp.int32),
+            jnp.asarray(self.settings.ei_stop_rel, jnp.float32),
+            jnp.asarray(self.to_exhaustion),
+        )
+        xi, layout = self.settings.xi, self.layout
+        return _LiveChunk(
+            state=state,
+            args=args,
+            members=members,
+            capacity=max(cap, 1),
+            update=lambda st, a: _fleet_update(st, *a, xi=xi, layout=layout),
+            steps_needed=steps_needed,
+        )
+
+    def _chunk_arrays(
+        self, members: List[_JobRec], shape, cap: int, n_init_slots: int,
+        rows: int,
+    ) -> Tuple[FleetState, tuple, int]:
+        """Host-side state/args for one lockstep chunk of ``rows`` rows
+        (members first, then inert dummy rows — zero trial budget, cold
+        defaults; rows ≥ 2 because XLA:CPU collapses singleton batch dims
+        into unbatched programs with different float32 numerics)."""
         n, d = shape
-        g = len(members)
         capacity = max(cap, 1)
-        # Chunks of one are padded with an inert dummy row (zero trial
-        # budget, cold defaults): XLA:CPU collapses singleton batch dims
-        # into unbatched programs with different float32 numerics.
-        rows = g if g >= 2 else 2
 
         geom_one = self._geom(members[0].job.space)
         geom = np.zeros((rows,) + geom_one.shape, geom_one.dtype)
@@ -705,37 +831,36 @@ class TuningSession:
                 t0[i] = w
 
         state = FleetState(
-            obs=jnp.asarray(obs0),
-            tried=jnp.asarray(tried0),
-            py=jnp.asarray(py0),
-            feats=jnp.asarray(feats0),
-            t=jnp.asarray(t0),
-            stop=jnp.full(rows, -1, jnp.int32),
-            pb=jnp.full(rows, -1, jnp.int32),
-            done=jnp.zeros(rows, bool),
-            last_ei=jnp.zeros(rows, jnp.float32),
-            last_best=jnp.full(rows, jnp.inf, jnp.float32),
+            obs=obs0,
+            tried=tried0,
+            py=py0,
+            feats=feats0,
+            t=t0,
+            stop=np.full(rows, -1, np.int32),
+            pb=np.full(rows, -1, np.int32),
+            done=np.zeros(rows, bool),
+            last_ei=np.zeros(rows, np.float32),
+            last_best=np.full(rows, np.inf, np.float32),
         )
         args = (
-            jnp.asarray(geom), jnp.asarray(costs), jnp.asarray(prio_mask),
-            jnp.asarray(rem_mask), jnp.asarray(init_picks),
-            jnp.asarray(init_count), jnp.asarray(max_trials),
-            jnp.asarray(self.settings.min_observations, jnp.int32),
-            jnp.asarray(self.settings.ei_stop_rel, jnp.float32),
-            jnp.asarray(self.to_exhaustion),
+            geom, costs, prio_mask, rem_mask, init_picks, init_count,
+            max_trials,
         )
         # One extra pass beyond the largest fresh-trial budget: it observes
         # nothing, but it is where a budget-capped job records a phase
         # boundary reached exactly at its last trial, and where budget
         # exhaustion latches `done` (same schedule as the one-shot engine).
         steps_needed = int(max(max_trials[i] - t0[i] for i in range(rows))) + 1
-        return _LiveChunk(state, args, members, capacity, steps_needed)
+        return state, args, steps_needed
 
     def _retire(self, ch: _LiveChunk) -> None:
-        s_tried = np.asarray(ch.state.tried)
-        s_t = np.asarray(ch.state.t)
-        s_stop = np.asarray(ch.state.stop)
-        s_pb = np.asarray(ch.state.pb)
+        # Collapse any leading shard axis: member i lives at flat row i
+        # whether the chunk ran on one device or a mesh (see _LiveChunk).
+        cap = ch.capacity
+        s_tried = np.asarray(ch.state.tried).reshape(-1, cap)
+        s_t = np.asarray(ch.state.t).reshape(-1)
+        s_stop = np.asarray(ch.state.stop).reshape(-1)
+        s_pb = np.asarray(ch.state.pb).reshape(-1)
         for i, rec in enumerate(ch.members):
             k = int(s_t[i])
             w = len(rec.seed_trials)

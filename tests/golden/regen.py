@@ -1,0 +1,125 @@
+"""Regenerate the committed golden-trace fixtures.
+
+    PYTHONPATH=src python -m tests.golden.regen [--check]
+
+For each pinned scenario this runs the UNSHARDED feature-layout
+`TuningSession` (the reference engine) and, where a per-job sequential
+reference exists (the cold scenarios), cross-checks it trace-for-trace
+with `cherrypick_search`/`ruya_search` before writing the fixture — a
+fixture can only change when the reference numerics deliberately change.
+``--check`` verifies the committed fixtures instead of rewriting them
+(exit 1 on drift).
+
+The env must match the test environment: the CPU backend is forced to
+multiple host devices before JAX initializes, exactly like
+`tests/conftest.py` (device count does not affect single-device numerics,
+but keeping the environments identical removes the variable entirely).
+"""
+
+import os
+import sys
+
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
+_SRC = os.path.join(_ROOT, "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+from repro.hostdevices import force_host_device_count  # noqa: E402
+
+force_host_device_count(4)  # same topology as tests/conftest.py
+
+import argparse
+import json
+
+import numpy as np
+
+
+def _sequential_crosscheck(name, outcomes):
+    """Pin the fixture to the per-job sequential engine where one exists."""
+    from repro.core.bayesopt import BOSettings, cherrypick_search, ruya_search
+
+    from . import scenarios as sc
+
+    if name == "n69-exhaustion":
+        space, table = sc.synth_space_table(69)
+        refs = [
+            cherrypick_search(
+                space, lambda i: float(table[i]), np.random.default_rng(s),
+                to_exhaustion=True,
+            )
+            for s in range(len(outcomes))
+        ]
+    elif name == "n512-budgeted":
+        space, table = sc.synth_space_table(512)
+        st = BOSettings(max_iters=10)
+        prio = list(range(0, 50))
+        rest = list(range(50, 512))
+        refs = [
+            ruya_search(
+                space, lambda i: float(table[i]), np.random.default_rng(s),
+                prio, rest, settings=st, to_exhaustion=True,
+            )
+            for s in range(len(outcomes))
+        ]
+    else:  # warm-session: no sequential analogue (seeding is session-only)
+        return 0
+    for j, (out, ref) in enumerate(zip(outcomes, refs)):
+        tr = out.trace()
+        assert tr.tried == ref.tried, f"{name} job {j}: session != sequential"
+        assert tr.costs == ref.costs, f"{name} job {j}: session != sequential"
+        assert tr.stop_iteration == ref.stop_iteration
+        assert tr.phase_boundary == ref.phase_boundary
+    return len(refs)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--check", action="store_true",
+                    help="verify committed fixtures instead of rewriting")
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="subset of scenario names")
+    args = ap.parse_args(argv)
+
+    from . import fixture_path
+    from .scenarios import SCENARIOS
+
+    names = args.only or list(SCENARIOS)
+    drift = []
+    for name in names:
+        if name not in SCENARIOS:
+            print(f"unknown scenario {name!r}; have {list(SCENARIOS)}")
+            return 2
+        outcomes = SCENARIOS[name]()  # unsharded, feature layout
+        checked = _sequential_crosscheck(name, outcomes)
+        payload = {
+            "scenario": name,
+            "engine": "TuningSession(layout='feature', shard=None)",
+            "sequential_crosschecked_jobs": checked,
+            "regen": "PYTHONPATH=src python -m tests.golden.regen",
+            "outcomes": [
+                json.loads(json.dumps(o.as_dict())) for o in outcomes
+            ],
+        }
+        path = fixture_path(name)
+        if args.check:
+            with open(path) as f:
+                committed = json.load(f)
+            same = committed["outcomes"] == payload["outcomes"]
+            print(f"{name}: {'OK' if same else 'DRIFT'} "
+                  f"({len(outcomes)} jobs, {checked} sequential-checked)")
+            if not same:
+                drift.append(name)
+            continue
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {path} ({len(outcomes)} jobs, "
+              f"{checked} sequential-checked)")
+    if drift:
+        print(f"FIXTURE DRIFT: {drift}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -3,9 +3,11 @@ in its seconds-scale smoke mode — donation check (including the (B,d)
 feature buffer), a small scaling-sweep point with trace verification AND
 the n = 32768 feature-buffer point (the 10⁴–10⁵ regime must stay wired:
 nothing of extent n² exists on that path, so it is seconds, not minutes),
-the streaming `TuningSession` scenario (recurring jobs in waves,
-warm-start amortization asserted), and the `BENCH_fleet.json` emission —
-so the bench plumbing is exercised without the multi-minute full sweep.
+the `--shards` job-axis sharding sweep (entries recorded, sharded traces
+asserted identical to the lockstep reference), the streaming
+`TuningSession` scenario (recurring jobs in waves, warm-start amortization
+asserted), and the `BENCH_fleet.json` emission — so the bench plumbing is
+exercised without the multi-minute full sweep.
 
 Excluded from the default tier-1 lane (see pyproject addopts); selected
 explicitly with `pytest -m bench_smoke`, and included in the full
@@ -67,6 +69,24 @@ def test_fleet_bench_smoke(tmp_path):
     # run, not per sweep point.
     assert out["peak_rss_mb"] > 0.0
 
+    # The --shards axis: sharded entries must be recorded and the sharded
+    # traces must have been verified identical to the lockstep reference
+    # (conftest forces a multi-device CPU topology, so the lane really
+    # shards here rather than recording a skip).
+    import jax
+
+    sh = out["sharding"]
+    assert sh["workload"] == "synthetic_service"
+    assert [row["shards"] for row in sh["shards"]] == [2]
+    assert sh["unsharded_s"] > 0.0
+    if jax.device_count() >= 2:
+        row = sh["shards"][0]
+        assert "skipped" not in row
+        assert row["traces_identical"]
+        assert row["batched_s"] > 0.0 and row["speedup_vs_unsharded"] > 0.0
+    else:  # pragma: no cover - exotic invocation without forced devices
+        assert "skipped" in sh["shards"][0]
+
     # Streaming-session scenario: recurring jobs in waves must produce both
     # cold and warm-started searches, the warm ones converging in strictly
     # fewer fresh trials (the bench itself asserts the strict inequality;
@@ -80,3 +100,4 @@ def test_fleet_bench_smoke(tmp_path):
     data = json.loads(path.read_text())
     assert data["scaling"]["sweep"][0]["n"] == rows[0]["n"]
     assert data["session_streaming"]["warm_jobs"] == d["warm_jobs"]
+    assert data["sharding"]["shards"] == sh["shards"]

@@ -1,0 +1,111 @@
+"""Golden-trace differential tests (`pytest -m golden`): every engine
+variant must reproduce the committed fixtures bit-for-bit.
+
+This is the acceptance harness of the sharded fleet engine: the three
+pinned scenarios (n = 69 exhaustion, n = 512 budgeted two-phase, and a
+streaming warm-start session — `tests/golden/scenarios.py`) are replayed
+through the unsharded reference AND across shard counts 2/4, on both
+packed-geometry layouts, and compared to `tests/golden/*.json` with the
+shared `assert_outcomes_match` helper.  The sequential per-job engine is
+pinned against the same fixtures, which closes the loop:
+
+    sequential == golden == session(layout × shard count)
+
+Fixtures regenerate via `PYTHONPATH=src python -m tests.golden.regen`
+(which re-runs the sequential cross-check before writing); drift in a
+regenerated fixture means the reference numerics changed and must be an
+explicit, reviewed decision.
+
+These tests run in the default tier-1 lane and are additionally selectable
+alone with `-m golden`.  Shard lanes need the multi-device CPU topology
+`conftest.py` forces (guarded with a skip for exotic invocations).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from golden import assert_outcomes_match, assert_traces_match, load
+from golden.scenarios import SCENARIOS, synth_space_table
+from repro.core.bayesopt import BOSettings, cherrypick_search, ruya_search
+
+pytestmark = pytest.mark.golden
+
+SHARD_COUNTS = (None, 2, 4)  # None = the single-device reference path
+
+
+def _need_devices(shard):
+    if shard is not None and jax.device_count() < shard:
+        pytest.skip(
+            f"needs {shard} devices; XLA_FLAGS force-count not in effect"
+        )
+
+
+@pytest.mark.parametrize("shard", SHARD_COUNTS)
+@pytest.mark.parametrize("layout", ("feature", "gather"))
+@pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+def test_scenario_matches_golden(scenario, layout, shard):
+    _need_devices(shard)
+    outcomes = SCENARIOS[scenario](layout=layout, shard=shard)
+    assert_outcomes_match(scenario, outcomes)
+
+
+class TestSequentialReference:
+    """The per-job sequential engine reproduces the golden fixtures (a
+    2-job prefix keeps the Python-loop engine's cost down; the full-width
+    fleet identity rides the session lanes above)."""
+
+    def test_n69_exhaustion_sequential(self):
+        space, table = synth_space_table(69)
+        traces = [
+            cherrypick_search(
+                space, lambda i: float(table[i]), np.random.default_rng(s),
+                to_exhaustion=True,
+            )
+            for s in range(2)
+        ]
+        assert_traces_match("n69-exhaustion", traces, jobs=[0, 1])
+
+    def test_n69_exhaustion_sequential_gather_layout(self):
+        space, table = synth_space_table(69)
+        trace = cherrypick_search(
+            space, lambda i: float(table[i]), np.random.default_rng(0),
+            to_exhaustion=True, layout="gather",
+        )
+        assert_traces_match("n69-exhaustion", [trace], jobs=[0])
+
+    def test_n512_budgeted_sequential(self):
+        space, table = synth_space_table(512)
+        st = BOSettings(max_iters=10)
+        prio = list(range(0, 50))
+        rest = list(range(50, 512))
+        traces = [
+            ruya_search(
+                space, lambda i: float(table[i]), np.random.default_rng(s),
+                prio, rest, settings=st, to_exhaustion=True,
+            )
+            for s in range(2)
+        ]
+        assert_traces_match("n512-budgeted", traces, jobs=[0, 1])
+
+
+class TestFixtureIntegrity:
+    def test_fixtures_declare_their_regen_path(self):
+        for name in SCENARIOS:
+            d = load(name)
+            assert d["scenario"] == name
+            assert "tests.golden.regen" in d["regen"]
+            assert d["outcomes"], f"{name}: empty fixture"
+
+    def test_warm_session_fixture_is_really_warm(self):
+        """The streaming scenario must pin actual warm-start behavior:
+        seeded jobs exist, their seeds carry donor costs, and the cold
+        CherryPick neighbors sharing their chunks are unseeded."""
+        outs = load("warm-session")["outcomes"]
+        warm = [o for o in outs if o["seeded"]]
+        cold = [o for o in outs if not o["seeded"]]
+        assert len(warm) == 2 and len(cold) == 5
+        for o in warm:
+            assert all(s["source"] == "warm" for s in o["seeded"])
+            assert len(o["records"]) == 0  # fully amortized on this class

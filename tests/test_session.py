@@ -4,12 +4,14 @@ grouping), cross-job warm-start seeding/determinism, and the
 `TrialRecord`/`SearchOutcome` round-trip property lane.
 
 The identity tests pin the acceptance contract of the session redesign:
-draining a statically submitted fleet must reproduce the sequential
-engine's traces seed-for-seed (the retained pre-redesign reference), for
-both packed geometry layouts, on n = 69 (exhaustion, full packed buffer)
-and n = 512 (budgeted B ≪ n) — and the legacy shims (`run_ruya`,
-`run_cherrypick`, `tune_fleet`, `batched_search`) must keep returning the
-same bits now that they route through the session.
+draining a statically submitted fleet must reproduce the golden-trace
+fixtures (`tests/golden/` — themselves cross-checked against the
+sequential engine at regen time, and re-pinned against it by
+`tests/test_golden_traces.py`), for both packed geometry layouts, on
+n = 69 (exhaustion, full packed buffer) and n = 512 (budgeted B ≪ n) —
+and the legacy shims (`run_ruya`, `run_cherrypick`, `tune_fleet`,
+`batched_search`) must keep returning the same bits now that they route
+through the session.
 """
 
 import json
@@ -17,6 +19,7 @@ import json
 import numpy as np
 import pytest
 
+from golden import assert_outcomes_match
 from hypothesis_compat import HAVE_HYPOTHESIS, given, settings as hyp_settings, st
 
 from repro.core.bayesopt import (
@@ -105,20 +108,17 @@ def assert_trace_equal(trace, ref):
 
 
 class TestStaticDrainIdentity:
-    """drain() of a statically submitted fleet == the pre-redesign engines."""
+    """drain() of a statically submitted fleet == the golden fixtures (the
+    pre-redesign engines' pinned bits — `tests/golden/`)."""
 
-    def test_drain_matches_sequential_n69_exhaustion(self):
+    def test_drain_matches_golden_n69_exhaustion(self):
         """n = 69 to exhaustion: packed buffer completely full (B = n).
-        The gather-layout variant of this identity rides on
-        `tests/test_fleet.py` (batched_search is now a session shim)."""
+        A 2-job prefix of the pinned fleet, submitted through handles —
+        lockstep extent 2 here vs 4 in the fixture run, so this also
+        re-pins the batch-extent invariance the chunking rests on.  (The
+        gather-layout and sharded variants ride `tests/test_golden_traces`;
+        `batched_search` is now a session shim.)"""
         space, table = synth_space_table(69)
-        refs = [
-            cherrypick_search(
-                space, lambda i: float(table[i]), np.random.default_rng(s),
-                to_exhaustion=True,
-            )
-            for s in range(2)
-        ]
         session = TuningSession(mode="cherrypick", to_exhaustion=True)
         handles = [
             session.submit(
@@ -128,23 +128,17 @@ class TestStaticDrainIdentity:
             for s in range(2)
         ]
         session.drain()
-        for h, ref in zip(handles, refs):
-            out = h.outcome()
+        outs = [h.outcome() for h in handles]
+        for out in outs:
             assert len(out.records) == 69
             assert not out.seeded
-            assert_trace_equal(out.trace(), ref)
+        assert_outcomes_match("n69-exhaustion", outs, jobs=[0, 1])
 
-    def test_drain_matches_sequential_n512_budgeted_two_phase(self):
+    def test_drain_matches_golden_n512_budgeted_two_phase(self):
         space, table = synth_space_table(512)
         st_ = BOSettings(max_iters=10)
         prio = list(range(0, 50))
         rest = list(range(50, 512))
-        refs = [
-            ruya_search(space, lambda i: float(table[i]),
-                        np.random.default_rng(s), prio, rest, settings=st_,
-                        to_exhaustion=True)
-            for s in range(3)
-        ]
         for layout in ("feature", "gather"):
             session = TuningSession(settings=st_, to_exhaustion=True,
                                     layout=layout)
@@ -156,9 +150,10 @@ class TestStaticDrainIdentity:
                 for s in range(3)
             ]
             session.drain()
-            for h, ref in zip(handles, refs):
-                assert len(h.outcome().records) == 10
-                assert_trace_equal(h.outcome().trace(), ref)
+            outs = [h.outcome() for h in handles]
+            for out in outs:
+                assert len(out.records) == 10
+            assert_outcomes_match("n512-budgeted", outs, jobs=[0, 1, 2])
 
     def test_shims_pin_ruya_pipeline_bits(self):
         """run_ruya(cost_table) — now session-backed, with the on-device

@@ -1,0 +1,185 @@
+"""Shard-invariance property suite: sharding the job axis is a pure
+execution optimization.
+
+Random job mixes of heterogeneous (space shape, packed capacity B) groups
+are drained through an unsharded lockstep session and through sharded
+sessions (2/3/4 shards), and every `TrialRecord` — index, cost, slot,
+source — plus the stop/phase registers must be bitwise equal
+(`SearchOutcome.as_dict` compared verbatim).  Because the sharded chunking
+re-slices groups to rows = min(8, ceil(M/S)) and pads trailing rows with
+inert dummy jobs, these mixes exercise exactly the two claims the sharded
+engine rests on: batch-extent invariance of the float32 step in [2, 8]
+and padded-slot/dummy-row inertness — now across device boundaries.
+
+Hypothesis lane when the package is installed (`tests/hypothesis_compat`),
+always-on seeded lane otherwise, same property; plus direct unit tests of
+`repro.fleet.sharding.resolve_shard_devices` and the loud failure mode
+when more shards are requested than devices exist.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings as hyp_settings, st
+
+from repro.core.bayesopt import BOSettings
+from repro.core.search_space import Configuration, SearchSpace
+from repro.fleet import FleetJob, TuningSession, resolve_shard_devices
+
+N_SPACES = ((12, 3), (18, 5))  # (n, d) — two shapes so groups really mix
+
+
+def _spaces_tables():
+    out = []
+    for n, d in N_SPACES:
+        rng = np.random.default_rng(n * 7 + d)
+        feats = rng.normal(size=(n, d))
+        space = SearchSpace(
+            [
+                Configuration(
+                    name=f"s{i}",
+                    features=tuple(float(v) for v in feats[i]),
+                    total_memory=float(i),
+                )
+                for i in range(n)
+            ]
+        )
+        w = rng.normal(size=d)
+        z = feats @ w
+        z = (z - z.mean()) / max(float(z.std()), 1e-9)
+        out.append((space, 1.0 + (z - 0.7) ** 2 + 0.05 * rng.random(n)))
+    return out
+
+
+SPACES = _spaces_tables()
+SETTINGS = BOSettings(max_iters=6)
+
+
+def _drain_mix(mix, shard):
+    """mix: [(space_idx, pool_size, seed)] — returns outcome dicts in
+    submission order.  pool_size < n drives heterogeneous packed
+    capacities B = min(pool, max_iters) inside one session."""
+    session = TuningSession(
+        mode="cherrypick", to_exhaustion=True, settings=SETTINGS,
+        shard=shard,
+    )
+    handles = []
+    for k, (si, pool, seed) in enumerate(mix):
+        space, table = SPACES[si]
+        handles.append(
+            session.submit(
+                FleetJob(name=f"m{k}", space=space, cost_table=table),
+                seed=seed, priority=list(range(pool)),
+            )
+        )
+    session.drain()
+    return [h.outcome().as_dict() for h in handles]
+
+
+def _assert_shard_invariant(mix, shards=(2, 3, 4)):
+    ref = _drain_mix(mix, None)
+    for s in shards:
+        if jax.device_count() < s:
+            pytest.skip(f"needs {s} devices")
+        got = _drain_mix(mix, s)
+        assert got == ref, (
+            f"sharded (S={s}) outcomes diverged from lockstep on mix {mix}"
+        )
+    return ref
+
+
+class TestShardInvariance:
+    if HAVE_HYPOTHESIS:
+
+        @given(
+            mix=st.lists(
+                st.tuples(
+                    st.integers(0, len(SPACES) - 1),
+                    st.integers(4, 6),
+                    st.integers(0, 10**6),
+                ),
+                min_size=1, max_size=7,
+            ),
+            shard=st.sampled_from((2, 4)),
+        )
+        @hyp_settings(max_examples=8, deadline=None)
+        def test_random_mix_shard_invariant_hypothesis(self, mix, shard):
+            if jax.device_count() < shard:
+                pytest.skip(f"needs {shard} devices")
+            assert _drain_mix(mix, shard) == _drain_mix(mix, None)
+
+    def test_random_mix_shard_invariant_seeded(self):
+        rng = np.random.default_rng(4242)
+        for _ in range(4):
+            j = int(rng.integers(1, 8))
+            mix = [
+                (int(rng.integers(0, len(SPACES))),
+                 int(rng.integers(4, 7)),
+                 int(rng.integers(0, 10**6)))
+                for _ in range(j)
+            ]
+            _assert_shard_invariant(mix, shards=(2, 4))
+
+    def test_dummy_rows_and_chunk_splits_are_inert(self):
+        """An odd group at S=2 re-chunks to [rows, rows-1+dummy]; every
+        job's trace must equal BOTH the unsharded lockstep run and its own
+        solo single-job session — dummy rows and bundle membership leak
+        nothing."""
+        mix = [(0, 5, 11), (0, 5, 22), (0, 5, 33)]  # one group of 3
+        ref = _assert_shard_invariant(mix, shards=(2,))
+        for k, (si, pool, seed) in enumerate(mix):
+            solo = _drain_mix([(si, pool, seed)], None)[0]
+            solo["name"] = ref[k]["name"]  # submission-order names differ
+            assert solo == ref[k]
+
+    def test_warm_and_cold_neighbors_shard_invariant(self):
+        """Warm-start seeding composes with sharding: a seeded job sharing
+        a sharded bundle with cold jobs reproduces the unsharded session's
+        records exactly (seeds included)."""
+        from golden.scenarios import run_warm_session
+
+        if jax.device_count() < 3:
+            pytest.skip("needs 3 devices")
+        ref = [o.as_dict() for o in run_warm_session(shard=None)]
+        got = [o.as_dict() for o in run_warm_session(shard=3)]
+        assert got == ref
+
+
+class TestResolveShardDevices:
+    def test_default_is_unsharded(self):
+        assert resolve_shard_devices() is None
+        assert resolve_shard_devices(1) is None
+
+    def test_auto_uses_local_devices(self):
+        devs = resolve_shard_devices("auto")
+        if jax.device_count() > 1:
+            assert devs is not None and len(devs) == jax.device_count()
+        else:
+            assert devs is None
+
+    def test_explicit_count(self):
+        if jax.device_count() < 2:
+            pytest.skip("needs 2 devices")
+        devs = resolve_shard_devices(2)
+        assert len(devs) == 2
+
+    def test_too_many_shards_fails_loudly(self):
+        with pytest.raises(ValueError, match="device"):
+            resolve_shard_devices(jax.device_count() + 1)
+        with pytest.raises(ValueError):
+            resolve_shard_devices(0)
+
+    def test_explicit_devices_win(self):
+        devs = tuple(jax.devices()[:1])
+        assert resolve_shard_devices(devices=devs) is None  # 1 device → ref
+        if jax.device_count() >= 2:
+            two = tuple(jax.devices()[:2])
+            assert resolve_shard_devices(devices=two) == two
+            with pytest.raises(ValueError, match="disagrees"):
+                resolve_shard_devices(shard=3, devices=two)
+
+    def test_session_rejects_impossible_shard_count(self):
+        with pytest.raises(ValueError, match="device"):
+            TuningSession(shard=jax.device_count() + 1)
