@@ -15,7 +15,13 @@ from repro.cluster.nodes import (
     enumerate_cluster_configs,
     make_cluster_search_space,
 )
-from repro.cluster.workloads import JOBS, JobSpec
+from repro.cluster.faults import FaultPlan
+from repro.cluster.workloads import (
+    JOBS,
+    JobSpec,
+    drift_spec,
+    failure_scenario_jobs,
+)
 from repro.cluster.simulator import (
     ClusterSimulator,
     job_cost_table,
@@ -25,11 +31,14 @@ from repro.cluster.simulator import (
 __all__ = [
     "ClusterConfig",
     "ClusterSimulator",
+    "FaultPlan",
     "JOBS",
     "JobSpec",
     "NODE_TYPES",
     "NodeType",
+    "drift_spec",
     "enumerate_cluster_configs",
+    "failure_scenario_jobs",
     "job_cost_table",
     "make_cluster_search_space",
     "make_profile_run_fn",

@@ -30,16 +30,17 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Callable, List, Tuple
+from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
+from repro.cluster.faults import FaultPlan
 from repro.cluster.nodes import (
     ClusterConfig,
     enumerate_cluster_configs,
     make_cluster_search_space,
 )
-from repro.cluster.workloads import JOBS, JobSpec
+from repro.cluster.workloads import JOBS, JobSpec, failure_scenario_jobs
 from repro.core.search_space import SearchSpace
 
 __all__ = [
@@ -139,20 +140,35 @@ def make_profile_run_fn(job: JobSpec) -> Callable[[float], Tuple[float, float]]:
 
 @dataclasses.dataclass
 class ClusterSimulator:
-    """Bundles everything a searcher needs for one job."""
+    """Bundles everything a searcher needs for one job.
+
+    ``faults`` optionally attaches a `repro.cluster.faults.FaultPlan`:
+    `profile_run_fn` then injects the plan's transient/permanent failures
+    into the profiling/probe runs (successful readings are untouched — a
+    retried run replays identical values, which is what lets the golden
+    harness pin disturbed fleets bit-identical to undisturbed ones), and
+    the plan's per-trial straggler schedule is surfaced by the fleet layer
+    as reported latency, never fed back into the cost surface.
+    """
 
     job: JobSpec
     space: SearchSpace
     costs: np.ndarray  # (69,) USD
     normalized: np.ndarray  # costs / min(costs) — the paper's metric
+    faults: Optional[FaultPlan] = None
 
     @classmethod
-    def for_job(cls, key: str) -> "ClusterSimulator":
-        job = JOBS[key]
+    def for_job(
+        cls, key: str, faults: Optional[FaultPlan] = None
+    ) -> "ClusterSimulator":
+        # Table I catalog first; the adversarial/drift scenario specs
+        # (`workloads.failure_scenario_jobs`) share the same key space.
+        job = JOBS.get(key) or failure_scenario_jobs()[key]
         space = make_cluster_search_space()
         costs = job_cost_table(job)
         return cls(
-            job=job, space=space, costs=costs, normalized=costs / costs.min()
+            job=job, space=space, costs=costs,
+            normalized=costs / costs.min(), faults=faults,
         )
 
     def cost_fn(self) -> Callable[[int], float]:
@@ -175,6 +191,8 @@ class ClusterSimulator:
             rt, peak_gb = base(sample_bytes / 1024.0**3)
             return rt, peak_gb * 1024.0**3  # bytes, like a real reading
 
+        if self.faults is not None:
+            return self.faults.wrap_run(run, self.job.key)
         return run
 
     def optimal_cost(self) -> float:

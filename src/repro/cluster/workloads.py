@@ -18,7 +18,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Tuple
 
-__all__ = ["JobSpec", "JOBS"]
+__all__ = ["JobSpec", "JOBS", "drift_spec", "failure_scenario_jobs"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,6 +95,72 @@ def _flat_job(name, framework, dataset, input_gb, profile_time_s, *,
         profile_noise=0.04,
         profile_time_s=profile_time_s,
     )
+
+
+def drift_spec(
+    job: JobSpec,
+    *,
+    scale: float = 2.0,
+    overhead_growth_gb: float = 0.0,
+    slope_decay: float = 0.15,
+    tag: str = "drift",
+) -> JobSpec:
+    """A recurring job whose memory behaviour has DRIFTED with its dataset.
+
+    The streaming-system memory model (SNIPPETS.md snippet 1) is
+
+        Memory = Overhead + Rows × Memory_Per_Row
+
+    with the per-row slope *decreasing* as the dataset scales (dictionary
+    encodings, shared buffers, and column compression amortize), while the
+    fixed overhead creeps up with accumulated framework state.  This
+    generator applies exactly that shift to a Table I spec: the input grows
+    by ``scale``, the per-row slope decays as ``scale**-slope_decay``, and
+    ``overhead_growth_gb`` is added to the resident floor.  The result is
+    the drift-detection scenario's ground truth — a job whose fresh probe
+    no longer matches the memory-signature class its old profile was filed
+    under, so a Flora-style cache must re-profile instead of warm-seeding
+    from the stale class.
+    """
+    if scale <= 0.0:
+        raise ValueError(f"scale={scale}: want > 0")
+    input_gb = job.input_gb * scale
+    base_mem_gb = job.base_mem_gb + overhead_growth_gb
+    if job.category == "flat":
+        # Flat jobs have no per-row slope; drift is pure overhead creep.
+        mem_requirement_gb = job.mem_requirement_gb + overhead_growth_gb
+    else:
+        slope = job.mem_slope * scale ** (-slope_decay)
+        mem_requirement_gb = slope * input_gb + overhead_growth_gb
+    return dataclasses.replace(
+        job,
+        name=f"{job.name}-{tag}",
+        input_gb=input_gb,
+        base_mem_gb=base_mem_gb,
+        mem_requirement_gb=mem_requirement_gb,
+    )
+
+
+def failure_scenario_jobs() -> Dict[str, JobSpec]:
+    """Named adversarial-scenario specs derived from the Table I catalog.
+
+    These are the workloads the chaos lane (`pytest -m chaos`) and the
+    adversarial fleet bench disturb: renamed clones whose profiling runs
+    get a `repro.cluster.faults.FaultPlan` attached (flaky / broken), plus
+    drifted recurrences of a linear and a flat job (see `drift_spec`).
+    The specs themselves are ordinary `JobSpec`s — the faults live in the
+    plan, not the workload, so the same spec serves both the disturbed and
+    the undisturbed (reference) run.
+    """
+    kmeans = JOBS["kmeans/spark/bigdata"]
+    terasort = JOBS["terasort/hadoop/bigdata"]
+    out = {
+        "flaky-kmeans": dataclasses.replace(kmeans, name="flaky-kmeans"),
+        "broken-kmeans": dataclasses.replace(kmeans, name="broken-kmeans"),
+        "drifted-kmeans": drift_spec(kmeans),
+        "drifted-terasort": drift_spec(terasort, overhead_growth_gb=2.0),
+    }
+    return {spec.key: spec for spec in out.values()}
 
 
 # Table I ground truth.  bigdata ≈ 2× huge for the same job.

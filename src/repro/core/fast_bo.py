@@ -33,6 +33,13 @@ Session-era paths ride the same step with zero new device code (PR 4):
                      collectives) — only the O(S·r·(n·d + B·d + n))
                      placement at admission and the O(S·r·B) register
                      gather at retirement, once per chunk lifetime
+    mid-flight       a cancelled/failed/preempted row is retired by
+    retirement       latching its `done` flag (PR 7): every write in the
+                     step is already gated on `live = ~done ∧ budget`, so
+                     the row freezes in place as a dummy-pad — zero new
+                     device code, and its vmap-independent chunk-mates'
+                     traces are untouched by construction (pinned
+                     bit-identical by the golden disturbed-fleet scenario)
 
 The d²-gather layout paid a one-off O(n²·d) `precompute_d2` per search and
 held the (n,n) tensor for its whole lifetime — an O(n²) memory wall that

@@ -24,9 +24,37 @@ from typing import Callable, List, Sequence, Tuple
 
 from repro.core.memory_model import MemoryModel, fit_memory_model
 
-__all__ = ["ProfileResult", "profile_job", "schedule_sample_sizes"]
+__all__ = [
+    "PermanentRunError",
+    "ProfileResult",
+    "ProfilingRunError",
+    "TransientRunError",
+    "profile_job",
+    "schedule_sample_sizes",
+]
 
 RunFn = Callable[[float], Tuple[float, float]]
+
+
+class ProfilingRunError(RuntimeError):
+    """A profiling/probe run failed instead of returning a reading.
+
+    This is the taxonomy the retry layer (`repro.fleet.retry`) classifies
+    by: raise `TransientRunError` for failures worth retrying (preempted
+    sample machine, OOM-killed sampler, lost connection) and
+    `PermanentRunError` for failures no retry can fix (the job binary is
+    broken, the dataset is gone).  Anything else that escapes a run
+    callable is treated as permanent — an unknown failure must not be
+    silently retried into a profiling budget.
+    """
+
+
+class TransientRunError(ProfilingRunError):
+    """A profiling/probe run failed in a way a retry may fix."""
+
+
+class PermanentRunError(ProfilingRunError):
+    """A profiling/probe run failed in a way no retry can fix."""
 
 
 @dataclasses.dataclass(frozen=True)

@@ -24,13 +24,19 @@ negligible per-job overhead.  This package provides:
     bundled S at a time and advanced by one `shard_map` dispatch
     (`TuningSession(shard=...)` / `batched_search(shard=...)`), pinned
     bit-identical to the single-device reference by `tests/golden/`.
+  * `retry.RetryPolicy` — deterministic exponential backoff with seeded
+    jitter for transient profiling-run failures; permanent failures
+    fast-fail into first-class "failed" outcomes (`FleetFailedError` only
+    when a drain is waiting on nothing else).
 """
 
 from repro.fleet.batched_engine import BatchedTrace, batched_search
 from repro.fleet.driver import FleetJob, cluster_fleet, replay_seeds, tune_fleet
 from repro.fleet.profile_cache import MemorySignature, ProfileCache
+from repro.fleet.retry import RetryPolicy, RetryStats, call_with_retry
 from repro.fleet.sharding import resolve_shard_devices
 from repro.fleet.session import (
+    FleetFailedError,
     JobHandle,
     SearchOutcome,
     TrialRecord,
@@ -40,6 +46,7 @@ from repro.fleet.session import (
 __all__ = [
     "BatchedTrace",
     "batched_search",
+    "FleetFailedError",
     "FleetJob",
     "cluster_fleet",
     "replay_seeds",
@@ -47,6 +54,9 @@ __all__ = [
     "JobHandle",
     "MemorySignature",
     "ProfileCache",
+    "RetryPolicy",
+    "RetryStats",
+    "call_with_retry",
     "resolve_shard_devices",
     "SearchOutcome",
     "TrialRecord",

@@ -23,9 +23,14 @@ precompute serves the whole replica fleet).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Sequence, Tuple, Union
+from typing import (
+    Callable, Dict, List, Optional, Sequence, Tuple, TYPE_CHECKING, Union,
+)
 
 import numpy as np
+
+if TYPE_CHECKING:  # cluster is an optional peer package of fleet
+    from repro.cluster.faults import FaultPlan
 
 from repro.core.bayesopt import BOSettings, SearchTrace, ruya_search
 from repro.core.profiler import ProfileResult, profile_job
@@ -45,6 +50,12 @@ class FleetJob:
     The cost table is the full per-configuration cost vector — fleet mode
     replays recorded/emulated workloads, so observations are table lookups
     and the whole search can stay on device.
+
+    ``faults`` optionally attaches the job's `FaultPlan`: the session uses
+    it to surface per-trial straggler latency (reported as
+    `TrialRecord.attempts`, never fed into the cost surface).  The plan's
+    run failures are already baked into ``profile_run`` by whoever wrapped
+    it (`FaultPlan.wrap_run` / `ClusterSimulator(faults=...)`).
     """
 
     name: str
@@ -56,23 +67,36 @@ class FleetJob:
     per_node_overhead: float = 0.0
     leeway: float = 0.10
     flat_fraction: float = 1.0 / 7.0
+    faults: Optional["FaultPlan"] = None
 
 
 def cluster_fleet(
-    keys: Sequence[str], *, per_node_overhead_gb: float = 0.5, sims=None
+    keys: Sequence[str],
+    *,
+    per_node_overhead_gb: float = 0.5,
+    sims=None,
+    faults: Optional[Dict[str, "FaultPlan"]] = None,
 ) -> List[FleetJob]:
     """Build fleet jobs from the paper's emulated Spark/Hadoop workloads.
 
     ``sims`` optionally supplies pre-built `ClusterSimulator`s by key
     (callers with their own memo — e.g. `benchmarks.common` — avoid
-    re-instantiating the workload emulation).
+    re-instantiating the workload emulation).  ``faults`` optionally maps
+    job keys to `FaultPlan`s: a planned job's profiling runs raise per the
+    plan (memoized ``sims`` are bypassed for it — the fault wrapper is
+    stateful and must be fresh per fleet) and the plan rides on
+    `FleetJob.faults` for trial-level straggler reporting.
     """
     from repro.cluster.simulator import ClusterSimulator
 
     GiB = 1024.0**3
     jobs = []
     for key in keys:
-        sim = (sims or {}).get(key) or ClusterSimulator.for_job(key)
+        plan = (faults or {}).get(key)
+        if plan is not None:
+            sim = ClusterSimulator.for_job(key, faults=plan)
+        else:
+            sim = (sims or {}).get(key) or ClusterSimulator.for_job(key)
         jobs.append(
             FleetJob(
                 name=key,
@@ -81,6 +105,7 @@ def cluster_fleet(
                 full_input_size=sim.job.input_gb * GiB,
                 profile_run=sim.profile_run_fn(),
                 per_node_overhead=per_node_overhead_gb * GiB,
+                faults=plan,
             )
         )
     return jobs

@@ -87,7 +87,20 @@ def probe_memory_model(
 
 
 class ProfileCache:
-    """Shared `ProfileResult` store keyed by `MemorySignature`."""
+    """Shared `ProfileResult` store keyed by `MemorySignature`.
+
+    Drift detection (opt-in via ``drift_tolerance``): recurring jobs DRIFT
+    — datasets grow, per-row slopes amortize, overheads creep (see
+    `repro.cluster.workloads.drift_spec`) — and Flora-style class reuse is
+    only safe while the cached profile still describes the job.  When a
+    fresh probe lands in a cached class bucket but its coarse fit has
+    moved beyond the tolerance from the cached profile's model, the hit is
+    REFUSED: the job is flagged (``last_drift``), re-profiled in full, and
+    re-classed — the fresh profile replaces the stale entry under the
+    probe bucket and files under its own full-fit signature.  Callers
+    (the `TuningSession`) additionally skip warm-seeding a flagged job
+    from the stale class's trial history.
+    """
 
     def __init__(
         self,
@@ -100,6 +113,8 @@ class ProfileCache:
         self._intercept_quantum = intercept_quantum
         self.hits = 0
         self.misses = 0
+        self.drift_reprofiles = 0
+        self.last_drift = False  # did the latest get_or_profile flag drift?
         self.probe_time_s = 0.0
 
     def __len__(self) -> int:
@@ -118,21 +133,65 @@ class ProfileCache:
     def put(self, sig: MemorySignature, profile: ProfileResult) -> None:
         self._store[sig] = profile
 
+    def model_drifted(
+        self, probe: MemoryModel, cached: MemoryModel, tolerance: float
+    ) -> bool:
+        """Has the job's coarse probe fit moved beyond ``tolerance`` from
+        the cached class profile's model?  Category changes always drift;
+        linear jobs compare relative slope deviation; every category
+        compares the intercept against a ``tolerance`` fraction of the
+        class quantum (signature buckets are coarse by design, so a probe
+        can land in the bucket while the underlying fit has moved)."""
+        if probe.category is not cached.category:
+            return True
+        if probe.category is MemoryCategory.LINEAR:
+            ref = max(abs(cached.slope), 1e-12)
+            if abs(probe.slope - cached.slope) / ref > tolerance:
+                return True
+        icp = probe.intercept if math.isfinite(probe.intercept) else 0.0
+        icc = cached.intercept if math.isfinite(cached.intercept) else 0.0
+        return abs(icp - icc) > tolerance * self._intercept_quantum
+
     def get_or_profile(
-        self, run: RunFn, full_input_size: float, **profile_kwargs
+        self,
+        run: RunFn,
+        full_input_size: float,
+        *,
+        drift_tolerance: Optional[float] = None,
+        **profile_kwargs,
     ) -> ProfileResult:
-        """Probe-classify the job; reuse a cached profile or run a full one."""
+        """Probe-classify the job; reuse a cached profile or run a full one.
+
+        With ``drift_tolerance`` set, a cached hit whose coarse probe fit
+        has drifted beyond the tolerance is refused and the job is
+        re-profiled and re-classed (see the class docstring);
+        ``last_drift`` reports the decision for the latest call.
+        """
         coarse, probe_s = probe_memory_model(run, full_input_size)
         self.probe_time_s += probe_s
         sig = self.signature(coarse)
+        self.last_drift = False
         cached = self._store.get(sig)
         if cached is not None:
-            self.hits += 1
-            return cached
-        self.misses += 1
+            if drift_tolerance is None or not self.model_drifted(
+                coarse, cached.model, drift_tolerance
+            ):
+                self.hits += 1
+                return cached
+            self.last_drift = True
+            self.drift_reprofiles += 1
+        else:
+            self.misses += 1
         profile = profile_job(run, full_input_size, **profile_kwargs)
-        # Store under the probe signature (the lookup key future jobs will
-        # compute) and the full-fit signature, which can differ on noisy jobs.
-        self._store.setdefault(sig, profile)
-        self._store.setdefault(self.signature(profile.model), profile)
+        if self.last_drift:
+            # Re-class: the fresh profile REPLACES the stale class entry
+            # under the probe bucket and files under its own full fit.
+            self._store[sig] = profile
+            self._store[self.signature(profile.model)] = profile
+        else:
+            # Store under the probe signature (the lookup key future jobs
+            # will compute) and the full-fit signature, which can differ
+            # on noisy jobs.
+            self._store.setdefault(sig, profile)
+            self._store.setdefault(self.signature(profile.model), profile)
         return profile

@@ -62,6 +62,7 @@ thin deprecation shims over this engine.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import weakref
 from typing import (
     Dict, List, Optional, Sequence, Set, Tuple, TYPE_CHECKING, Union,
@@ -79,7 +80,11 @@ from repro.core.fast_bo import (
     encode_features,
     precompute_d2,
 )
-from repro.core.profiler import ProfileResult, profile_job
+from repro.core.profiler import (
+    ProfileResult,
+    ProfilingRunError,
+    profile_job,
+)
 from repro.core.search_space import split_masks_device
 from repro.core.tuner import RuyaReport
 # The jitted lockstep update and the chunking constants are shared verbatim
@@ -89,14 +94,43 @@ from repro.core.tuner import RuyaReport
 # compile to different float32 numerics).
 from repro.fleet.batched_engine import _CHUNK, _POLL_PERIOD, _fleet_update
 from repro.fleet.profile_cache import MemorySignature, ProfileCache
-from repro.fleet.sharding import resolve_shard_devices, sharded_update
+from repro.fleet.retry import RetryPolicy, RetryStats, call_with_retry
+from repro.fleet.sharding import (
+    collapse_rows,
+    resolve_shard_devices,
+    sharded_update,
+)
 
 if TYPE_CHECKING:  # import cycle: driver imports session for tune_fleet
     from repro.fleet.driver import FleetJob
 
-__all__ = ["JobHandle", "SearchOutcome", "TrialRecord", "TuningSession"]
+__all__ = [
+    "FleetFailedError",
+    "JobHandle",
+    "SearchOutcome",
+    "TrialRecord",
+    "TuningSession",
+]
 
 _TRIAL_SOURCES = ("init", "search", "warm")
+
+# Terminal status of a search.  "converged" is the normal retirement (EI
+# threshold fired or trial budget exhausted); the other three are
+# first-class partial results: "cancelled" (caller revoked the job),
+# "failed" (profiling failed permanently / retry budget exhausted, or an
+# external executor died mid-flight), "preempted" (evicted for a
+# higher-priority job — resubmit to continue from the class history).
+_STATUSES = ("converged", "cancelled", "failed", "preempted")
+
+
+class FleetFailedError(RuntimeError):
+    """`drain()` was waiting exclusively on jobs that permanently failed.
+
+    Partial fleets keep going — one broken job must not sink its
+    chunk-mates — so failures surface as first-class "failed" outcomes.
+    But when EVERY job live at the drain call ends "failed", returning
+    normally would read as success; the session raises this instead (the
+    outcomes stay available via `results()`)."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -107,12 +141,16 @@ class TrialRecord:
     observation was made, warm seeds included).  ``source`` is "init"
     (scripted random initialization), "search" (BO pick), or "warm" (seeded
     from the signature class's history — the cost is the donor's).
+    ``attempts`` is the number of cluster runs the trial took (> 1 when a
+    straggler run was re-dispatched — reported latency only, the observed
+    cost is always the deterministic table value).
     """
 
     index: int
     cost: float
     slot: int
     source: str = "search"
+    attempts: int = 1
 
     def as_dict(self) -> dict:
         return {
@@ -120,6 +158,7 @@ class TrialRecord:
             "cost": float(self.cost),
             "slot": int(self.slot),
             "source": str(self.source),
+            "attempts": int(self.attempts),
         }
 
     @classmethod
@@ -130,6 +169,7 @@ class TrialRecord:
         return cls(
             index=int(d["index"]), cost=float(d["cost"]),
             slot=int(d["slot"]), source=src,
+            attempts=int(d.get("attempts", 1)),
         )
 
 
@@ -144,6 +184,13 @@ class SearchOutcome:
     ``stop_iteration`` / ``phase_boundary`` are the engine's registers and
     count packed slots — i.e. seeds included; `trace()` re-bases them onto
     the executed trials so cold searches round-trip exactly.
+
+    ``status`` (see `_STATUSES`) makes partial results first-class: a
+    cancelled/failed/preempted search still carries every trial it
+    completed.  ``profile_attempts`` / ``retry_backoff_s`` surface what
+    the profiling phase cost under faults (1 / 0.0 = clean first try; the
+    backoff is charged, not slept — see `repro.fleet.retry`), and
+    ``failure`` carries the terminal error text for "failed" outcomes.
     """
 
     name: str
@@ -155,6 +202,10 @@ class SearchOutcome:
     remaining: Tuple[int, ...]
     profile: Optional[ProfileResult] = None
     signature: Optional[MemorySignature] = None
+    status: str = "converged"
+    profile_attempts: int = 1
+    retry_backoff_s: float = 0.0
+    failure: Optional[str] = None
 
     @property
     def memory_model(self):
@@ -165,15 +216,25 @@ class SearchOutcome:
         """Seeds + executed trials, in packed-slot order."""
         return list(self.seeded) + list(self.records)
 
+    def _require_observations(self) -> List[TrialRecord]:
+        obs = self.observations
+        if not obs:
+            raise RuntimeError(
+                f"job {self.name!r} has no observations (status "
+                f"{self.status!r}) — a search that failed or was revoked "
+                "before its first trial has no best configuration"
+            )
+        return obs
+
     @property
     def best_cost(self) -> float:
         """Lowest recorded cost over seeds + executed trials (seeds carry
         donor costs — for recurring same-class jobs these are the point)."""
-        return min(r.cost for r in self.observations)
+        return min(r.cost for r in self._require_observations())
 
     @property
     def best_index(self) -> int:
-        return min(self.observations, key=lambda r: r.cost).index
+        return min(self._require_observations(), key=lambda r: r.cost).index
 
     def iterations_until(self, threshold_cost: float) -> Optional[int]:
         """1-based EXECUTED trial at which cost ≤ threshold was first seen
@@ -215,12 +276,20 @@ class SearchOutcome:
             "phase_boundary": self.phase_boundary,
             "priority": [int(i) for i in self.priority],
             "remaining": [int(i) for i in self.remaining],
+            "status": str(self.status),
+            "profile_attempts": int(self.profile_attempts),
+            "retry_backoff_s": float(self.retry_backoff_s),
+            "failure": self.failure,
         }
 
     @classmethod
     def from_dict(cls, d: dict) -> "SearchOutcome":
         stop = d["stop_iteration"]
         pb = d["phase_boundary"]
+        status = str(d.get("status", "converged"))
+        if status not in _STATUSES:
+            raise ValueError(f"unknown outcome status {status!r}")
+        failure = d.get("failure")
         return cls(
             name=str(d["name"]),
             records=[TrialRecord.from_dict(r) for r in d["records"]],
@@ -229,6 +298,10 @@ class SearchOutcome:
             phase_boundary=None if pb is None else int(pb),
             priority=tuple(int(i) for i in d["priority"]),
             remaining=tuple(int(i) for i in d["remaining"]),
+            status=status,
+            profile_attempts=int(d.get("profile_attempts", 1)),
+            retry_backoff_s=float(d.get("retry_backoff_s", 0.0)),
+            failure=None if failure is None else str(failure),
         )
 
 
@@ -256,13 +329,23 @@ class JobHandle:
     @property
     def status(self) -> str:
         if self.done:
-            return "done"
+            st = self._outcome.status
+            return "done" if st == "converged" else st
         session = self._session()
         if session is None:
             return "detached"  # session dropped before the job finished
         if any(r.handle.uid == self.uid for r in session._pending):
             return "pending"
         return "running"
+
+    def cancel(self) -> bool:
+        """Cancel this job — pending or mid-flight (see
+        `TuningSession.cancel`).  Returns False when the job already
+        finished or the session is gone; cancelling twice is a no-op."""
+        session = self._session()
+        if session is None:
+            return False
+        return session.cancel(self)
 
     def outcome(self) -> SearchOutcome:
         if self._outcome is None:
@@ -291,6 +374,10 @@ class _JobRec:
     class_key: Optional[Tuple[MemorySignature, int, int]]
     prio_idx: np.ndarray  # (p,) int64, pool order
     rem_idx: np.ndarray  # (r,) int64, pool order
+    profile_attempts: int = 1  # profiling attempts incl. retries
+    retry_backoff_s: float = 0.0  # charged profiling backoff
+    status: str = "converged"  # terminal status, set before publication
+    job_priority: int = 0  # preemption rank (see preempt_below)
 
 
 class _LiveChunk:
@@ -304,13 +391,19 @@ class _LiveChunk:
     (-1, ...)): shards slice the member list contiguously and dummy pads
     only trail the last rows of a shard — so retirement is layout-agnostic
     with no explicit row map.
+
+    A member slot holds None after a mid-flight cancel/fail/preempt: the
+    outcome was already published, the row's `done` flag is latched on
+    device (the update leaves done rows untouched), and retirement skips
+    the tombstone.  ``n_shards`` records the leading shard axis extent
+    (1 = plain single-device chunk) for host-side row collapsing.
     """
 
     __slots__ = ("state", "args", "members", "capacity", "update",
-                 "steps_done", "steps_needed")
+                 "steps_done", "steps_needed", "n_shards")
 
     def __init__(self, state, args, members, capacity, update,
-                 steps_needed):
+                 steps_needed, n_shards=1):
         self.state = state
         self.args = args
         self.members = members
@@ -318,6 +411,7 @@ class _LiveChunk:
         self.update = update
         self.steps_done = 0
         self.steps_needed = steps_needed
+        self.n_shards = n_shards
 
 
 class _SpaceEntry:
@@ -369,6 +463,25 @@ class TuningSession:
     counts; drain boundaries make warm seeding shard-count-independent
     (see `repro.fleet.sharding`).
 
+    Failure semantics (the elastic/adversarial layer).  ``retry`` governs
+    profiling-run faults: `TransientRunError`s are retried with the
+    deterministic seeded backoff of `repro.fleet.retry` (per-job retry
+    seed derived from ``seed`` — no live RNG, the BO draws stay aligned),
+    `PermanentRunError`s fast-fail, and a job whose profiling cannot
+    complete becomes a first-class "failed" outcome at submit instead of
+    poisoning the fleet.  `cancel`/`fail`/`preempt`/`preempt_below` retire
+    a live search mid-flight — its completed trials publish immediately
+    and its chunk row is frozen via the engine's `done` flag, so
+    chunk-mates' traces are bit-identical to an undisturbed run (vmap rows
+    are independent; pinned by the golden disturbed-fleet scenario).
+    `reshard` re-bundles every live search onto a new device set (device
+    churn, both directions) with per-row state resumed verbatim.
+    ``drift_tolerance`` (needs a ``cache``) turns on drift detection: a
+    recurring job whose fresh probe no longer matches its cached class
+    model is re-profiled and re-classed (`ProfileCache.model_drifted`),
+    and the session refuses to warm-seed it from the stale class's trial
+    history (``drift_events`` logs the job names).
+
     Finished jobs release their per-job state: cost tables, masks, cached
     encodings and geometry (refcounted per space — a gather layout's (n,n)
     tensor is evicted with its last job) are dropped at retirement, so a
@@ -388,6 +501,9 @@ class TuningSession:
         layout: str = "feature",
         shard: Union[None, int, str] = None,
         devices: Optional[Sequence] = None,
+        seed: int = 0,
+        retry: RetryPolicy = RetryPolicy(),
+        drift_tolerance: Optional[float] = None,
     ) -> None:
         if mode not in ("ruya", "cherrypick"):
             raise ValueError(f"unknown mode {mode!r}")
@@ -406,9 +522,19 @@ class TuningSession:
         )
         self.to_exhaustion = bool(to_exhaustion)
         self.layout = layout
+        self.seed = int(seed)
+        self.retry = retry
+        self.drift_tolerance = (
+            None if drift_tolerance is None else float(drift_tolerance)
+        )
 
         self.warm_hits = 0  # jobs that were seeded
         self.warm_trials = 0  # total seeded observations
+        self.drift_events: List[str] = []  # job names flagged as drifted
+        # uids that turned "failed" since the last drain — the drain guard
+        # (FleetFailedError) considers these alongside live jobs, so a
+        # fleet that failed entirely BEFORE the drain call still raises.
+        self._failed_since_drain: List[int] = []
 
         self._pending: List[_JobRec] = []
         self._chunks: List[_LiveChunk] = []
@@ -416,7 +542,8 @@ class TuningSession:
         self._outcomes: Dict[int, SearchOutcome] = {}
         # id(space) → refcounted encoding/geometry (strong space ref inside)
         self._spaces: Dict[int, _SpaceEntry] = {}
-        # id(job) → [job, active submissions, profile]; evicted at zero
+        # id(job) → [job, active submissions, profile, profiling attempts,
+        # charged backoff seconds, drift flag]; evicted at zero refcount
         self._jobs: Dict[int, list] = {}
         # (signature, n, d) → (ordered [(index, cost)], seen index set)
         self._history: Dict[tuple, Tuple[List[Tuple[int, float]], Set[int]]] = {}
@@ -433,6 +560,7 @@ class TuningSession:
         priority: Optional[Sequence[int]] = None,
         remaining: Optional[Sequence[int]] = None,
         warm_start: Optional[bool] = None,
+        job_priority: int = 0,
     ) -> JobHandle:
         """Register one job; it joins a lockstep chunk at the next `step()`.
 
@@ -445,6 +573,13 @@ class TuningSession:
         while "cherrypick" searches the whole space.  ``warm_start``
         overrides the session default for this job; seeding only happens for
         profiled jobs (the signature is the class key) and consumes no RNG.
+
+        Profiling faults: transient run failures are retried per the
+        session `RetryPolicy`; a permanent failure (or retry exhaustion)
+        returns a handle whose outcome is already published with status
+        "failed" — no exception, the rest of the fleet is unaffected.
+        ``job_priority`` ranks the job for `preempt_below` (higher keeps
+        running; it does not affect scheduling otherwise).
         """
         if (rng is None) == (seed is None):
             raise ValueError("provide exactly one of rng / seed")
@@ -488,7 +623,20 @@ class TuningSession:
             prio_mask = np.ones(n, bool)
             rem_mask = np.zeros(n, bool)
         else:
-            profile = self._resolve_profile(job)
+            try:
+                profile = self._resolve_profile(job)
+            except ProfilingRunError as e:
+                # Permanent failure / retry budget exhausted: a first-class
+                # "failed" outcome, published immediately — partial fleets
+                # keep going (see FleetFailedError for the all-failed case).
+                return self._register_failed(job, e)
+            je = self._jobs.get(id(job))
+            if je is not None and je[5]:
+                # The job's class drifted: its cached profile was refreshed
+                # and re-classed, and the OLD class's trial history predates
+                # the shift — warm-seeding from it would anchor the GP on
+                # the stale cost surface, so this job always starts cold.
+                warm = False
             signature = (
                 self.cache.signature(profile.model)
                 if self.cache is not None
@@ -543,6 +691,7 @@ class TuningSession:
             uid=len(self._order), name=job.name, _session=weakref.ref(self)
         )
         self._retain(job)
+        je = self._jobs[id(job)]
         rec = _JobRec(
             handle=handle,
             job=job,
@@ -558,6 +707,9 @@ class TuningSession:
             class_key=class_key,
             prio_idx=prio_idx,
             rem_idx=rem_idx,
+            profile_attempts=je[3],
+            retry_backoff_s=je[4],
+            job_priority=int(job_priority),
         )
         self._order.append(handle)
         self._pending.append(rec)
@@ -572,6 +724,10 @@ class TuningSession:
         self._admit()
         live: List[_LiveChunk] = []
         for ch in self._chunks:
+            if all(m is None for m in ch.members):
+                # Every member was retired mid-flight (cancel/fail/preempt)
+                # and published already — drop the chunk without stepping.
+                continue
             ch.state = ch.update(ch.state, ch.args)
             ch.steps_done += 1
             retire = ch.steps_done >= ch.steps_needed
@@ -586,13 +742,34 @@ class TuningSession:
             else:
                 live.append(ch)
         self._chunks = live
-        return sum(len(c.members) for c in self._chunks) + len(self._pending)
+        return sum(
+            sum(1 for m in c.members if m is not None) for c in self._chunks
+        ) + len(self._pending)
 
     def drain(self) -> List[SearchOutcome]:
         """Step until every submitted job has finished; returns all outcomes
-        (cumulative over the session's lifetime) in submission order."""
+        (cumulative over the session's lifetime) in submission order.
+
+        Raises `FleetFailedError` when every job this drain was waiting
+        on — jobs live at the call, plus jobs that turned "failed" since
+        the previous drain (profiling failures at submit, mid-flight
+        `fail`s) — ends with status "failed".  All outcomes stay available
+        via `results()`; a mixed fleet — some failed, some finished —
+        returns normally."""
+        waiting = {rec.handle.uid for rec in self._live_recs()}
+        waiting.update(self._failed_since_drain)
+        self._failed_since_drain = []
         while self._pending or self._chunks:
             self.step()
+        if waiting:
+            outs = [self._outcomes.get(uid) for uid in sorted(waiting)]
+            if all(o is not None and o.status == "failed" for o in outs):
+                names = [o.name for o in outs]
+                raise FleetFailedError(
+                    f"all {len(names)} job(s) this drain was waiting on "
+                    f"permanently failed: {names} — outcomes remain "
+                    "available via results()"
+                )
         return self.results()
 
     def results(self) -> List[SearchOutcome]:
@@ -608,7 +785,163 @@ class TuningSession:
     def __len__(self) -> int:
         return len(self._order)
 
+    # ---------------------------------------------------------- lifecycle
+
+    def cancel(self, handle: JobHandle) -> bool:
+        """Cancel a pending or mid-flight job.  Its completed trials
+        publish immediately as a partial outcome (status "cancelled") and
+        its chunk row is frozen via the engine's `done` flag — chunk-mates
+        advance exactly as if nothing happened (vmap rows are independent;
+        pinned bit-identical by the golden disturbed-fleet scenario).
+        Returns False when the job already finished."""
+        return self._terminate(handle, "cancelled")
+
+    def fail(self, handle: JobHandle, reason: Optional[str] = None) -> bool:
+        """Mark a live job failed (e.g. its external executor died): the
+        same mid-flight retirement as `cancel`, status "failed"."""
+        return self._terminate(handle, "failed", reason)
+
+    def preempt(self, handle: JobHandle) -> bool:
+        """Preempt a live job (status "preempted"): partial results are
+        kept, the lockstep slot frees up, and — because completed trials of
+        CONVERGED jobs are what feeds the class history — a later resubmit
+        starts from the class's knowledge, not the victim's stale row."""
+        return self._terminate(handle, "preempted")
+
+    def preempt_below(self, min_priority: int) -> List[JobHandle]:
+        """Preempt every live job whose submit-time ``job_priority`` is
+        below ``min_priority`` (default priority is 0, so any positive
+        floor evicts unranked work).  Returns the preempted handles."""
+        victims = [
+            rec.handle for rec in self._live_recs()
+            if rec.job_priority < min_priority
+        ]
+        for handle in victims:
+            self._terminate(handle, "preempted")
+        return victims
+
+    def _live_recs(self) -> List[_JobRec]:
+        """Every unfinished submission: pending plus live chunk members."""
+        recs = list(self._pending)
+        for ch in self._chunks:
+            recs.extend(m for m in ch.members if m is not None)
+        return recs
+
+    def _terminate(
+        self, handle: JobHandle, status: str, reason: Optional[str] = None
+    ) -> bool:
+        if handle._outcome is not None:
+            return False  # already finished (or already terminated)
+        for j, rec in enumerate(self._pending):
+            if rec.handle.uid == handle.uid:
+                del self._pending[j]
+                rec.status = status
+                # Never admitted: no engine row to read — the outcome is
+                # just the warm seeds (if any) and zero executed trials.
+                self._publish(
+                    rec, k=len(rec.seed_trials), tried_row=None,
+                    stop=-1, pb=-1, failure=reason,
+                )
+                return True
+        for ch in self._chunks:
+            for i, rec in enumerate(ch.members):
+                if rec is not None and rec.handle.uid == handle.uid:
+                    rec.status = status
+                    self._kill(ch, i, rec, reason)
+                    return True
+        return False  # not this session's handle
+
+    def _kill(
+        self, ch: _LiveChunk, i: int, rec: _JobRec,
+        reason: Optional[str] = None,
+    ) -> None:
+        """Retire member ``i`` of a live chunk mid-flight: publish its
+        partial outcome from a host snapshot of its row, tombstone the
+        member slot, and freeze the row by latching the engine's `done`
+        flag (`fast_bo.fleet_step` gates every write on
+        ``live = ~done & budget_left``, so a done row is inert — its
+        chunk-mates' traces are untouched)."""
+        rows = collapse_rows(ch.state, ch.n_shards)
+        self._publish(
+            rec,
+            k=int(rows.t[i]),
+            tried_row=rows.tried[i],
+            stop=int(rows.stop[i]),
+            pb=int(rows.pb[i]),
+            failure=reason,
+        )
+        ch.members[i] = None
+        done = np.array(ch.state.done)  # writable host copy
+        done.reshape(-1)[i] = True
+        # Re-place with the row's original sharding (single-device chunks
+        # carry a SingleDeviceSharding — the same call covers both).
+        ch.state = ch.state._replace(
+            done=jax.device_put(done, ch.state.done.sharding)
+        )
+
+    def reshard(
+        self,
+        shard: Union[None, int, str] = None,
+        devices: Optional[Sequence] = None,
+    ) -> int:
+        """Live device churn: re-bundle every mid-flight search onto a new
+        device set (devices leaving and joining are the same operation).
+        Each live row's engine state is snapshotted on host
+        (`repro.fleet.sharding.collapse_rows`), survivors are regrouped by
+        the admission rule, and chunks are rebuilt at the new shard width
+        with the rows resumed VERBATIM (dummy pads re-derived).
+
+        Survivors' traces stay bit-identical to an undisturbed run: the
+        resumed per-row state is exactly what the update would have kept
+        on device, chunk membership never affects traces (vmap rows are
+        independent), and the rebuilt row extent stays inside the
+        batch-extent-invariant [2, 8] window — pinned by the golden
+        disturbed-fleet scenario.  Pending jobs are untouched (they admit
+        at the next `step()` under the new layout).  Returns the number of
+        live searches re-bundled."""
+        self.shard_devices = resolve_shard_devices(shard, devices)
+        survivors: List[Tuple[_JobRec, FleetState]] = []
+        for ch in self._chunks:
+            rows = collapse_rows(ch.state, ch.n_shards)
+            for i, rec in enumerate(ch.members):
+                if rec is None:
+                    continue
+                row = jax.tree_util.tree_map(lambda x, _i=i: x[_i], rows)
+                survivors.append((rec, row))
+        self._chunks = []
+        groups: Dict[tuple, List[Tuple[_JobRec, FleetState]]] = {}
+        for rec, row in survivors:
+            groups.setdefault((rec.enc.shape, rec.budget), []).append(
+                (rec, row)
+            )
+        for (shape, cap), pairs in groups.items():
+            members = [p[0] for p in pairs]
+            resume = [p[1] for p in pairs]
+            n_init_slots = max(1, max(len(r.init_list) for r in members))
+            if self.shard_devices is not None:
+                self._chunks.extend(
+                    self._build_sharded(
+                        members, shape, cap, n_init_slots, resume=resume
+                    )
+                )
+                continue
+            for lo in range(0, len(members), _CHUNK):
+                self._chunks.append(
+                    self._build_chunk(
+                        members[lo : lo + _CHUNK], shape, cap, n_init_slots,
+                        resume=resume[lo : lo + _CHUNK],
+                    )
+                )
+        return len(survivors)
+
     # ---------------------------------------------------------- internals
+
+    def _retry_seed(self, job: "FleetJob") -> int:
+        """Per-job retry-jitter seed: a hash of (session seed, job name) —
+        deterministic, and independent across the fleet so synchronized
+        backoff waves cannot form."""
+        h = hashlib.sha256(f"{self.seed}/{job.name}".encode()).digest()
+        return int.from_bytes(h[:8], "big")
 
     def _resolve_profile(self, job: "FleetJob") -> ProfileResult:
         if job.profile_result is not None:
@@ -620,15 +953,69 @@ class TuningSession:
         # Memoized per job OBJECT (seed-replica fleets alias one FleetJob):
         # each distinct job profiles once.  An explicit session cache adds
         # Flora-style probe-classified sharing ACROSS jobs; without one the
-        # semantics match the one-shot drivers exactly.
-        entry = self._jobs.setdefault(id(job), [job, 0, None])
+        # semantics match the one-shot drivers exactly.  The whole
+        # resolution (probe + full profile) is one retry unit: a transient
+        # failure re-runs it from the top — emulated run fns are
+        # deterministic in the sample size, so a retried resolution returns
+        # an identical ProfileResult and the search trace is unchanged.
+        entry = self._jobs.setdefault(
+            id(job), [job, 0, None, 1, 0.0, False]
+        )
         if entry[2] is None:
-            entry[2] = (
-                self.cache.get_or_profile(job.profile_run, job.full_input_size)
-                if self.cache is not None
-                else profile_job(job.profile_run, job.full_input_size)
-            )
+            stats = RetryStats(attempts=0)
+
+            def resolve() -> ProfileResult:
+                if self.cache is not None:
+                    return self.cache.get_or_profile(
+                        job.profile_run, job.full_input_size,
+                        drift_tolerance=self.drift_tolerance,
+                    )
+                return profile_job(job.profile_run, job.full_input_size)
+
+            try:
+                profile, stats = call_with_retry(
+                    resolve, policy=self.retry,
+                    seed=self._retry_seed(job), stats=stats,
+                )
+            finally:
+                # Record the cost even when resolution ultimately failed —
+                # the failed outcome reports what the attempts burned.
+                entry[3], entry[4] = stats.attempts, stats.backoff_s
+            entry[2] = profile
+            if self.cache is not None and self.cache.last_drift:
+                entry[5] = True
+                self.drift_events.append(job.name)
         return entry[2]
+
+    def _register_failed(
+        self, job: "FleetJob", error: BaseException
+    ) -> JobHandle:
+        """Profiling failed permanently (or exhausted its retry budget):
+        publish a first-class "failed" outcome at submit time.  The job
+        never enters the pending queue, so it cannot poison a chunk; the
+        handle behaves like any finished job's."""
+        je = self._jobs.get(id(job))
+        handle = JobHandle(
+            uid=len(self._order), name=job.name, _session=weakref.ref(self)
+        )
+        outcome = SearchOutcome(
+            name=job.name,
+            records=[],
+            seeded=[],
+            stop_iteration=None,
+            phase_boundary=None,
+            priority=(),
+            remaining=(),
+            status="failed",
+            failure=f"{type(error).__name__}: {error}",
+            profile_attempts=je[3] if je is not None else 1,
+            retry_backoff_s=je[4] if je is not None else 0.0,
+        )
+        self._order.append(handle)
+        self._outcomes[handle.uid] = outcome
+        handle._outcome = outcome
+        self._failed_since_drain.append(handle.uid)
+        return handle
 
     def _retain(self, job: "FleetJob") -> None:
         """Bump the refcounted per-space and per-job cache entries."""
@@ -637,7 +1024,7 @@ class TuningSession:
         if se is None:
             se = self._spaces[id(space)] = _SpaceEntry(space)
         se.count += 1
-        je = self._jobs.setdefault(id(job), [job, 0, None])
+        je = self._jobs.setdefault(id(job), [job, 0, None, 1, 0.0, False])
         je[1] += 1
 
     def _release(self, rec: _JobRec) -> None:
@@ -702,7 +1089,8 @@ class TuningSession:
                 )
 
     def _build_sharded(
-        self, members: List[_JobRec], shape, cap: int, n_init_slots: int
+        self, members: List[_JobRec], shape, cap: int, n_init_slots: int,
+        resume: Optional[List[FleetState]] = None,
     ) -> List[_LiveChunk]:
         """Bundle one (shape, capacity) group's jobs across the shard
         devices: chunks of ``rows`` jobs, up to S of them per bundle, one
@@ -721,14 +1109,21 @@ class TuningSession:
         out: List[_LiveChunk] = []
         for lo in range(0, m, S * rows):
             sl = members[lo : lo + S * rows]
+            rs = None if resume is None else resume[lo : lo + S * rows]
             n_shards = -(-len(sl) // rows)
             if n_shards == 1:
-                out.append(self._build_chunk(sl, shape, cap, n_init_slots))
+                out.append(
+                    self._build_chunk(sl, shape, cap, n_init_slots, resume=rs)
+                )
                 continue
             parts = [
                 self._chunk_arrays(
                     sl[k * rows : (k + 1) * rows], shape, cap, n_init_slots,
                     rows,
+                    resume=(
+                        None if rs is None
+                        else rs[k * rows : (k + 1) * rows]
+                    ),
                 )
                 for k in range(n_shards)
             ]
@@ -758,15 +1153,18 @@ class TuningSession:
                     capacity=max(cap, 1),
                     update=lambda st, a, _u=update: _u(st, *a),
                     steps_needed=max(p[2] for p in parts),
+                    n_shards=n_shards,
                 )
             )
         return out
 
     def _build_chunk(
-        self, members: List[_JobRec], shape, cap: int, n_init_slots: int
+        self, members: List[_JobRec], shape, cap: int, n_init_slots: int,
+        resume: Optional[List[FleetState]] = None,
     ) -> _LiveChunk:
         state_np, args_np, steps_needed = self._chunk_arrays(
-            members, shape, cap, n_init_slots, max(len(members), 2)
+            members, shape, cap, n_init_slots, max(len(members), 2),
+            resume=resume,
         )
         state = jax.tree_util.tree_map(jnp.asarray, state_np)
         args = tuple(jnp.asarray(a) for a in args_np) + (
@@ -786,12 +1184,20 @@ class TuningSession:
 
     def _chunk_arrays(
         self, members: List[_JobRec], shape, cap: int, n_init_slots: int,
-        rows: int,
+        rows: int, resume: Optional[List[FleetState]] = None,
     ) -> Tuple[FleetState, tuple, int]:
         """Host-side state/args for one lockstep chunk of ``rows`` rows
         (members first, then inert dummy rows — zero trial budget, cold
         defaults; rows ≥ 2 because XLA:CPU collapses singleton batch dims
-        into unbatched programs with different float32 numerics)."""
+        into unbatched programs with different float32 numerics).
+
+        ``resume`` (the `reshard` path) supplies one host-side per-row
+        `FleetState` per member: the row is restored VERBATIM instead of
+        cold/warm-initialized, so a re-bundled search continues exactly
+        where its old chunk left off.  Static args are rebuilt from the
+        recs either way — they are a pure function of the submission, and
+        a changed ``n_init_slots`` width is numerics-neutral (the scripted
+        pick indexes it through a clip and is gated by ``init_count``)."""
         n, d = shape
         capacity = max(cap, 1)
 
@@ -808,6 +1214,11 @@ class TuningSession:
         py0 = np.zeros((rows, capacity), np.float32)
         feats0 = np.zeros((rows, capacity, d), np.float32)
         t0 = np.zeros(rows, np.int32)
+        stop0 = np.full(rows, -1, np.int32)
+        pb0 = np.full(rows, -1, np.int32)
+        done0 = np.zeros(rows, bool)
+        last_ei0 = np.zeros(rows, np.float32)
+        last_best0 = np.full(rows, np.inf, np.float32)
 
         for i, rec in enumerate(members):
             geom[i] = self._geom(rec.job.space)
@@ -817,6 +1228,19 @@ class TuningSession:
             init_picks[i, : len(rec.init_list)] = rec.init_list
             init_count[i] = len(rec.init_list)
             max_trials[i] = rec.budget
+            if resume is not None:
+                row = resume[i]
+                obs0[i] = row.obs
+                tried0[i] = row.tried
+                py0[i] = row.py
+                feats0[i] = row.feats
+                t0[i] = row.t
+                stop0[i] = row.stop
+                pb0[i] = row.pb
+                done0[i] = row.done
+                last_ei0[i] = row.last_ei
+                last_best0[i] = row.last_best
+                continue
             w = len(rec.seed_trials)
             if w:
                 idx = np.asarray([s.index for s in rec.seed_trials], np.int64)
@@ -836,11 +1260,11 @@ class TuningSession:
             py=py0,
             feats=feats0,
             t=t0,
-            stop=np.full(rows, -1, np.int32),
-            pb=np.full(rows, -1, np.int32),
-            done=np.zeros(rows, bool),
-            last_ei=np.zeros(rows, np.float32),
-            last_best=np.full(rows, np.inf, np.float32),
+            stop=stop0,
+            pb=pb0,
+            done=done0,
+            last_ei=last_ei0,
+            last_best=last_best0,
         )
         args = (
             geom, costs, prio_mask, rem_mask, init_picks, init_count,
@@ -862,45 +1286,76 @@ class TuningSession:
         s_stop = np.asarray(ch.state.stop).reshape(-1)
         s_pb = np.asarray(ch.state.pb).reshape(-1)
         for i, rec in enumerate(ch.members):
-            k = int(s_t[i])
-            w = len(rec.seed_trials)
-            n_init = len(rec.init_list)
-            records = []
-            for slot in range(w, k):
-                idx = int(s_tried[i, slot])
-                records.append(
-                    TrialRecord(
-                        index=idx,
-                        cost=float(rec.table64[idx]),
-                        slot=slot,
-                        source="init" if slot < n_init else "search",
-                    )
-                )
-            stop = int(s_stop[i])
-            pb = int(s_pb[i])
-            outcome = SearchOutcome(
-                name=rec.job.name,
-                records=records,
-                seeded=list(rec.seed_trials),
-                stop_iteration=stop if stop >= 0 else None,
-                phase_boundary=pb if pb >= 0 else None,
-                # tolist() boxes at C speed; built once, at retirement.
-                priority=tuple(rec.prio_idx.tolist()),
-                remaining=tuple(rec.rem_idx.tolist()),
-                profile=rec.profile,
-                signature=rec.signature,
+            if rec is None:
+                continue  # retired mid-flight; outcome already published
+            self._publish(
+                rec, k=int(s_t[i]), tried_row=s_tried[i],
+                stop=int(s_stop[i]), pb=int(s_pb[i]),
             )
-            self._outcomes[rec.handle.uid] = outcome
-            rec.handle._outcome = outcome
-            if rec.class_key is not None:
-                hist, seen = self._history.setdefault(
-                    rec.class_key, ([], set())
+
+    def _publish(
+        self, rec: _JobRec, k: int, tried_row, stop: int, pb: int,
+        failure: Optional[str] = None,
+    ) -> None:
+        """Build and register ``rec``'s `SearchOutcome` from its engine row
+        (slots [w, k) are the executed trials) and release its caches.
+        Shared by normal retirement, mid-flight kills (partial rows), and
+        pending-queue terminations (k == w, no row)."""
+        w = len(rec.seed_trials)
+        n_init = len(rec.init_list)
+        # Straggler latency is REPORTED (attempts = 2 for the re-dispatched
+        # trial), never fed back: the observed cost is the deterministic
+        # table value either way, so the trace is unchanged.
+        plan = getattr(rec.job, "faults", None)
+        records = []
+        for slot in range(w, k):
+            idx = int(tried_row[slot])
+            records.append(
+                TrialRecord(
+                    index=idx,
+                    cost=float(rec.table64[idx]),
+                    slot=slot,
+                    source="init" if slot < n_init else "search",
+                    attempts=(
+                        2 if plan is not None
+                        and plan.is_straggler(rec.job.name, slot) else 1
+                    ),
                 )
-                for r in records:
-                    if r.index not in seen:
-                        seen.add(r.index)
-                        hist.append((r.index, r.cost))
-            # The rec (cost table, masks, encoding share) dies with the
-            # chunk; evict its cache shares so a long-lived session holds
-            # only outcomes and class history.
-            self._release(rec)
+            )
+        outcome = SearchOutcome(
+            name=rec.job.name,
+            records=records,
+            seeded=list(rec.seed_trials),
+            stop_iteration=stop if stop >= 0 else None,
+            phase_boundary=pb if pb >= 0 else None,
+            # tolist() boxes at C speed; built once, at retirement.
+            priority=tuple(rec.prio_idx.tolist()),
+            remaining=tuple(rec.rem_idx.tolist()),
+            profile=rec.profile,
+            signature=rec.signature,
+            status=rec.status,
+            profile_attempts=rec.profile_attempts,
+            retry_backoff_s=rec.retry_backoff_s,
+            failure=failure,
+        )
+        self._outcomes[rec.handle.uid] = outcome
+        rec.handle._outcome = outcome
+        if rec.status == "failed":
+            self._failed_since_drain.append(rec.handle.uid)
+        # Only CONVERGED searches feed the warm-start class history: a
+        # revoked job's partial trials would make later warm seeds depend
+        # on cancellation timing — the bit-identity invariant (survivors
+        # match an undisturbed run) requires history from completed
+        # searches only.
+        if rec.status == "converged" and rec.class_key is not None:
+            hist, seen = self._history.setdefault(
+                rec.class_key, ([], set())
+            )
+            for r in records:
+                if r.index not in seen:
+                    seen.add(r.index)
+                    hist.append((r.index, r.cost))
+        # The rec (cost table, masks, encoding share) dies with the
+        # chunk; evict its cache shares so a long-lived session holds
+        # only outcomes and class history.
+        self._release(rec)

@@ -70,7 +70,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.core.fast_bo import fleet_step
 
-__all__ = ["resolve_shard_devices", "sharded_update"]
+__all__ = ["collapse_rows", "resolve_shard_devices", "sharded_update"]
 
 # Name of the 1-D mesh axis the job/chunk axis is sharded over.
 _AXIS = "jobs"
@@ -113,6 +113,25 @@ def resolve_shard_devices(
             f"{s} (or more) before the JAX backend initializes"
         )
     return avail[:s] if s > 1 else None
+
+
+def collapse_rows(state, n_shards: int):
+    """Host snapshot of a chunk's `FleetState` with any leading shard axis
+    collapsed: member i lives at flat row i whether the chunk ran on one
+    device or a mesh (shards slice the member list contiguously — see
+    `repro.fleet.session._LiveChunk`).  This is the elastic re-bundle
+    primitive: `TuningSession.reshard` snapshots every live row through it
+    before regrouping survivors onto a new device set, and mid-flight
+    cancellation reads the victim's partial trials from it before freezing
+    the victim's row on device."""
+
+    def flat(x):
+        a = np.asarray(x)
+        if n_shards > 1:
+            return a.reshape((a.shape[0] * a.shape[1],) + a.shape[2:])
+        return a
+
+    return jax.tree_util.tree_map(flat, state)
 
 
 @lru_cache(maxsize=None)

@@ -61,6 +61,23 @@ def _sequential_crosscheck(name, outcomes):
             )
             for s in range(len(outcomes))
         ]
+    elif name == "elastic-fleet":
+        # No sequential analogue either — instead, cross-check the fixture
+        # against the DISTURBED replay (transient profiling faults, a
+        # cancelled victim, a live shard-loss reshard): the survivors must
+        # reproduce the undisturbed outcomes bit-for-bit, modulo the
+        # fault-reporting fields.
+        survivors, victim = sc.run_elastic_fleet_disturbed()
+        assert victim.status == "cancelled", victim.status
+        assert len(survivors) == len(outcomes)
+        drop = ("profile_attempts", "retry_backoff_s")
+        for j, (got, ref) in enumerate(zip(survivors, outcomes)):
+            g, r = got.as_dict(), ref.as_dict()
+            for key in drop:
+                g.pop(key), r.pop(key)
+            assert g == r, f"{name} job {j}: disturbed survivors diverged"
+        assert survivors[0].profile_attempts == 3, "faults were not injected"
+        return len(survivors)
     else:  # warm-session: no sequential analogue (seeding is session-only)
         return 0
     for j, (out, ref) in enumerate(zip(outcomes, refs)):

@@ -19,6 +19,14 @@ Scenario catalog (ISSUE 5's pinned set):
     drained, then a second wave mixes warm-started same-class jobs with
     cold CherryPick jobs in the same lockstep chunks (seeding, padding
     inertness, and class-history determinism in one trace).
+  * ``elastic-fleet``  — 8 two-class Ruya jobs whose profiles come from
+    DETERMINISTIC linear run fns (exact fits, so retried profiling runs
+    return identical models).  The fixture is the undisturbed run;
+    `run_elastic_fleet_disturbed` replays it under adversity — transient
+    profiling faults on two jobs, a ninth "victim" job cancelled
+    mid-flight, and a live shard-loss `reshard` — and the survivors must
+    be bit-identical to the fixture (modulo the fault-reporting fields;
+    see `assert_outcomes_match(ignore=...)`).
 
 Job counts are chosen so the sharded lanes really shard: at S = 2 every
 scenario splits into ≥ 2 row-2/3 chunks, and n512 at S = 4 runs a 3-shard
@@ -136,8 +144,73 @@ def run_warm_session(layout="feature", shard=None):
     return session.results()
 
 
+def _linear_run(slope, runtime_per_byte=5e-7):
+    """Deterministic single-machine profiling emulator: runtime linear in
+    the sample (calibration run lands in the profiler's [30 s, 300 s]
+    corridor at 1% of a 10 GB input), peak memory EXACTLY linear — the
+    fit is noise-free, so a retried run returns the identical model."""
+
+    def run(sample_bytes):
+        return sample_bytes * runtime_per_byte, slope * sample_bytes + 1e9
+
+    return run
+
+
+def _elastic_job(name, idx):
+    # Two memory classes (alternating): slope 0.8 → ~8.4 GiB requirement,
+    # slope 1.2 → ~12.6 GiB — both split the 0..19 GiB catalog nontrivially.
+    return FleetJob(
+        name=name, space=quad_space(), cost_table=quad_table(),
+        full_input_size=10e9, profile_run=_linear_run(0.8 if idx % 2 == 0 else 1.2),
+    )
+
+
+def run_elastic_fleet(layout="feature", shard=None):
+    """The undisturbed reference: 8 two-class Ruya jobs, profiled through
+    the deterministic linear run fns, drained to completion."""
+    session = _session(
+        layout, shard, settings=BOSettings(max_iters=12), warm_start=False,
+    )
+    for s in range(8):
+        session.submit(_elastic_job(f"e{s}", s), seed=s)
+    return session.drain()
+
+
+def run_elastic_fleet_disturbed(
+    layout="feature", shard=2, reshard_to=None, steps_before=3,
+):
+    """The adversarial replay of ``elastic-fleet``: transient profiling
+    faults on jobs e0/e3 (retried — identical profiles, attempt counts
+    surface in the outcome), a ninth victim job sharing the fleet, a
+    mid-flight cancellation, and a live `reshard` from ``shard`` devices
+    to ``reshard_to`` (shard loss by default; pass ``shard=None,
+    reshard_to=2`` for a device JOIN).  Returns (survivor outcomes in
+    submission order, victim outcome) — survivors must be bit-identical
+    to the committed fixture modulo the fault-reporting fields."""
+    from repro.cluster.faults import FaultPlan
+
+    session = _session(
+        layout, shard, settings=BOSettings(max_iters=12), warm_start=False,
+    )
+    handles = []
+    for s in range(8):
+        job = _elastic_job(f"e{s}", s)
+        if s in (0, 3):
+            plan = FaultPlan(seed=s, transient_run_failures=2)
+            job.profile_run = plan.wrap_run(job.profile_run, job.name)
+        handles.append(session.submit(job, seed=s))
+    victim = session.submit(_elastic_job("victim", 0), seed=99)
+    for _ in range(steps_before):
+        session.step()
+    assert victim.cancel()
+    session.reshard(shard=reshard_to)
+    session.drain()
+    return [h.outcome() for h in handles], victim.outcome()
+
+
 SCENARIOS = {
     "n69-exhaustion": run_n69_exhaustion,
     "n512-budgeted": run_n512_budgeted,
     "warm-session": run_warm_session,
+    "elastic-fleet": run_elastic_fleet,
 }

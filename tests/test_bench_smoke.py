@@ -97,7 +97,21 @@ def test_fleet_bench_smoke(tmp_path):
     assert d["profile_cache_hits"] > 0
     assert d["warm_mean_fresh_trials"] < d["cold_mean_fresh_trials"]
 
+    # Adversarial-fleet scenario: disturbed profiling (retried transients),
+    # 10% cancellations, straggler reporting, and a shard-loss reshard —
+    # completion must stay ≥ 95% and the retry/waste overheads must be
+    # reported (the bench asserts the same bounds internally when check).
+    adv = out["adversarial"]
+    assert adv["completion_rate"] >= 0.95
+    assert adv["converged"] + adv["failed"] + adv["cancelled"] == adv["n_jobs"]
+    assert adv["cancelled"] >= 1 and adv["wasted_trials"] > 0
+    assert adv["retry_attempts"] > 0 and adv["retry_backoff_s"] > 0.0
+    assert adv["straggler_trials"] > 0
+    if jax.device_count() >= 2:
+        assert adv["shard"] == 2 and adv["reshard_survivors"] > 0
+
     data = json.loads(path.read_text())
     assert data["scaling"]["sweep"][0]["n"] == rows[0]["n"]
     assert data["session_streaming"]["warm_jobs"] == d["warm_jobs"]
     assert data["sharding"]["shards"] == sh["shards"]
+    assert data["adversarial"]["completion_rate"] == adv["completion_rate"]

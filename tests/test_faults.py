@@ -1,0 +1,221 @@
+"""Fault injection (`repro.cluster.faults`) and its session integration:
+deterministic disturbance schedules, retried profiling that stays
+bit-identical, permanent failures as first-class outcomes, straggler
+reporting, and drift detection on the recurring-job scenarios.
+
+Part of the chaos lane (`pytest -m chaos`); runs in tier-1.
+"""
+
+import numpy as np
+import pytest
+
+from repro.cluster import FaultPlan
+from repro.cluster.workloads import JOBS, drift_spec, failure_scenario_jobs
+from repro.core.bayesopt import BOSettings
+from repro.core.profiler import PermanentRunError, TransientRunError
+from repro.fleet import ProfileCache, TuningSession, cluster_fleet
+
+pytestmark = pytest.mark.chaos
+
+KM = "kmeans/spark/bigdata"
+PR = "pagerank/spark/bigdata"
+
+
+def _echo_run(sample):
+    return sample * 1e-9, 2.0 * sample + 1e9
+
+
+class TestFaultPlan:
+    @pytest.mark.parametrize(
+        "kw",
+        [
+            {"transient_run_failures": -1},
+            {"max_injected": -1},
+            {"transient_rate": 1.5},
+            {"straggler_rate": -0.1},
+            {"straggler_factor": 0.5},
+        ],
+    )
+    def test_rejects_bad_parameters(self, kw):
+        with pytest.raises(ValueError):
+            FaultPlan(**kw)
+
+    def test_no_faults_is_identity(self):
+        wrapped = FaultPlan().wrap_run(_echo_run, "j")
+        for s in (1e6, 5e8, 1e9):
+            assert wrapped(s) == _echo_run(s)
+
+    def test_scripted_transients_then_passthrough(self):
+        wrapped = FaultPlan(transient_run_failures=2).wrap_run(_echo_run, "j")
+        for _ in range(2):
+            with pytest.raises(TransientRunError):
+                wrapped(1e6)
+        # Successful calls return the run fn's values untouched.
+        assert wrapped(1e6) == _echo_run(1e6)
+        assert wrapped(2e6) == _echo_run(2e6)
+
+    def test_stochastic_injection_capped(self):
+        # rate=1.0 would fail every call; max_injected bounds the damage so
+        # a retrying caller is GUARANTEED to get through.
+        plan = FaultPlan(seed=3, transient_rate=1.0, max_injected=2)
+        wrapped = plan.wrap_run(_echo_run, "j")
+        failures = 0
+        for _ in range(2):
+            with pytest.raises(TransientRunError):
+                wrapped(1e6)
+            failures += 1
+        assert failures == 2
+        for _ in range(10):  # budget spent: everything passes through now
+            assert wrapped(1e6) == _echo_run(1e6)
+
+    def test_injection_pattern_deterministic(self):
+        plan = FaultPlan(seed=11, transient_rate=0.5, max_injected=3)
+
+        def pattern():
+            wrapped = plan.wrap_run(_echo_run, "j")
+            out = []
+            for _ in range(12):
+                try:
+                    wrapped(1e6)
+                    out.append("ok")
+                except TransientRunError:
+                    out.append("fail")
+            return out
+
+        assert pattern() == pattern()
+
+    def test_permanent_always_raises(self):
+        wrapped = FaultPlan(permanent=True).wrap_run(_echo_run, "j")
+        for _ in range(3):
+            with pytest.raises(PermanentRunError):
+                wrapped(1e6)
+
+    def test_straggler_flags_deterministic_and_rate_bounded(self):
+        plan = FaultPlan(seed=5, straggler_rate=0.25, straggler_factor=3.0)
+        flags = [plan.is_straggler("j", t) for t in range(400)]
+        assert flags == [plan.is_straggler("j", t) for t in range(400)]
+        frac = sum(flags) / len(flags)
+        assert 0.1 < frac < 0.4  # hash-uniform draw at rate 0.25
+        t_on = flags.index(True)
+        t_off = flags.index(False)
+        assert plan.straggler_multiplier("j", t_on) == 3.0
+        assert plan.straggler_multiplier("j", t_off) == 1.0
+        assert not FaultPlan().is_straggler("j", 0)
+
+
+class TestSessionUnderFaults:
+    def test_retried_profiling_is_bit_identical(self):
+        """Transient profiling faults are retried; the fleet's traces are
+        bit-identical to a clean run — only the fault-reporting fields
+        (attempts, charged backoff) differ."""
+        plans = {KM: FaultPlan(seed=1, transient_run_failures=2)}
+        faulted = cluster_fleet([KM, PR], faults=plans)
+        clean = cluster_fleet([KM, PR])
+        st = BOSettings(max_iters=6)
+        s1 = TuningSession(settings=st, warm_start=False)
+        s2 = TuningSession(settings=st, warm_start=False)
+        for i, j in enumerate(faulted):
+            s1.submit(j, seed=i)
+        for i, j in enumerate(clean):
+            s2.submit(j, seed=i)
+        o1, o2 = s1.drain(), s2.drain()
+
+        assert o1[0].profile_attempts == 3  # 2 scripted failures + success
+        assert o1[0].retry_backoff_s > 0.0
+        assert o2[0].profile_attempts == 1
+        assert o1[1].profile_attempts == 1  # unfaulted fleet-mate untouched
+        d1 = [o.as_dict() for o in o1]
+        d2 = [o.as_dict() for o in o2]
+        for d in d1 + d2:
+            d.pop("profile_attempts"), d.pop("retry_backoff_s")
+        assert d1 == d2
+
+    def test_permanent_failure_is_first_class_outcome(self):
+        jobs = cluster_fleet(
+            [KM, PR], faults={KM: FaultPlan(permanent=True)},
+        )
+        s = TuningSession(settings=BOSettings(max_iters=6), warm_start=False)
+        handles = [s.submit(j, seed=i) for i, j in enumerate(jobs)]
+        outs = s.drain()  # mixed fleet: returns normally
+        assert [o.status for o in outs] == ["failed", "converged"]
+        assert "PermanentRunError" in outs[0].failure
+        assert handles[0].status == "failed"
+        assert outs[0].records == []
+        with pytest.raises(RuntimeError, match="failed"):
+            outs[0].best_cost  # no observations to rank
+
+    def test_straggler_latency_reported_not_fed_back(self):
+        plan = FaultPlan(seed=2, straggler_rate=0.3, straggler_factor=4.0)
+        jobs = cluster_fleet([KM], faults={KM: plan})
+        clean = cluster_fleet([KM])
+        st = BOSettings(max_iters=8)
+        s1 = TuningSession(settings=st, warm_start=False)
+        s2 = TuningSession(settings=st, warm_start=False)
+        s1.submit(jobs[0], seed=0)
+        s2.submit(clean[0], seed=0)
+        out, ref = s1.drain()[0], s2.drain()[0]
+        atts = [r.attempts for r in out.records]
+        assert any(a > 1 for a in atts)  # stragglers surfaced...
+        assert all(r.attempts == 1 for r in ref.records)
+        # ...but the search itself is untouched: costs/indices identical.
+        assert [r.index for r in out.records] == [r.index for r in ref.records]
+        assert [r.cost for r in out.records] == [r.cost for r in ref.records]
+
+
+class TestDriftScenarios:
+    def test_drift_spec_shifts_the_memory_model(self):
+        base = JOBS[KM]
+        drifted = drift_spec(base)
+        assert drifted.input_gb == base.input_gb * 2.0
+        assert drifted.mem_slope < base.mem_slope  # amortization
+        flat = drift_spec(
+            JOBS["terasort/hadoop/bigdata"], overhead_growth_gb=2.0,
+        )
+        assert flat.base_mem_gb > JOBS["terasort/hadoop/bigdata"].base_mem_gb
+        with pytest.raises(ValueError):
+            drift_spec(base, scale=0.0)
+
+    def test_failure_scenario_catalog(self):
+        cat = failure_scenario_jobs()
+        assert {k.split("/")[0] for k in cat} == {
+            "flaky-kmeans", "broken-kmeans", "kmeans-drift", "terasort-drift",
+        }
+        # cluster_fleet resolves these keys like any Table I job.
+        jobs = cluster_fleet(["kmeans-drift/spark/bigdata"])
+        assert jobs[0].profile_run is not None
+
+    def test_drifted_recurrence_is_reprofiled_not_warm_seeded(self):
+        """A recurring job whose probe stops matching its class signature
+        is flagged, re-profiled, and NOT seeded from the stale class."""
+        cache = ProfileCache()
+        base = cluster_fleet([KM])[0]
+        drift = cluster_fleet(["kmeans-drift/spark/bigdata"])[0]
+        s = TuningSession(
+            settings=BOSettings(max_iters=6), cache=cache,
+            warm_start=True, drift_tolerance=0.05,
+        )
+        s.submit(base, seed=0)
+        s.drain()
+        h = s.submit(drift, seed=1)
+        outs = s.drain()
+        assert s.drift_events == ["kmeans-drift/spark/bigdata"]
+        assert cache.drift_reprofiles == 1
+        assert s.warm_trials == 0  # stale class history NOT injected
+        assert len(h.outcome().seeded) == 0
+        assert len(outs) == 2 and all(o.status == "converged" for o in outs)
+
+    def test_undrifted_recurrence_still_warm_starts(self):
+        """Control for the drift lane: the same job resubmitted with the
+        same memory behaviour DOES warm-start from its class."""
+        cache = ProfileCache()
+        s = TuningSession(
+            settings=BOSettings(max_iters=6), cache=cache,
+            warm_start=True, drift_tolerance=0.05,
+        )
+        s.submit(cluster_fleet([KM])[0], seed=0)
+        s.drain()
+        h = s.submit(cluster_fleet([KM])[0], seed=1)
+        s.drain()
+        assert s.drift_events == []
+        assert len(h.outcome().seeded) > 0
+        assert s.warm_hits == 1

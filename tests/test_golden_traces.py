@@ -27,10 +27,17 @@ import pytest
 import jax
 
 from golden import assert_outcomes_match, assert_traces_match, load
-from golden.scenarios import SCENARIOS, synth_space_table
+from golden.scenarios import (
+    SCENARIOS, run_elastic_fleet_disturbed, synth_space_table,
+)
 from repro.core.bayesopt import BOSettings, cherrypick_search, ruya_search
 
 pytestmark = pytest.mark.golden
+
+# The fault-reporting fields honestly differ under injected faults (a
+# retried profile returns identical results but more attempts); the
+# bit-identity claim is about the search trace.
+FAULT_FIELDS = ("profile_attempts", "retry_backoff_s")
 
 SHARD_COUNTS = (None, 2, 4)  # None = the single-device reference path
 
@@ -88,6 +95,44 @@ class TestSequentialReference:
             for s in range(2)
         ]
         assert_traces_match("n512-budgeted", traces, jobs=[0, 1])
+
+
+@pytest.mark.chaos
+class TestDisturbedFleet:
+    """The adversarial replay of ``elastic-fleet``: survivors of a fleet
+    hit by transient profiling faults, a mid-flight cancellation, and live
+    device churn must reproduce the undisturbed fixture bit-for-bit."""
+
+    def test_shard_loss_survivors_bit_identical(self):
+        _need_devices(2)
+        survivors, victim = run_elastic_fleet_disturbed(
+            shard=2, reshard_to=None,
+        )
+        assert_outcomes_match("elastic-fleet", survivors, ignore=FAULT_FIELDS)
+        assert victim.status == "cancelled"
+        assert victim.records, "victim should have partial trials"
+
+    def test_device_join_survivors_bit_identical(self):
+        _need_devices(2)
+        survivors, victim = run_elastic_fleet_disturbed(
+            shard=None, reshard_to=2,
+        )
+        assert_outcomes_match("elastic-fleet", survivors, ignore=FAULT_FIELDS)
+        assert victim.status == "cancelled"
+
+    def test_fault_reporting_surfaces(self):
+        _need_devices(2)
+        survivors, _ = run_elastic_fleet_disturbed()
+        # e0 and e3 were wrapped with 2 scripted transient failures each:
+        # 3 attempts, positive charged backoff, identical profile (the
+        # trace identity above is the proof), clean jobs untouched.
+        for j in (0, 3):
+            assert survivors[j].profile_attempts == 3
+            assert survivors[j].retry_backoff_s > 0.0
+        for j in (1, 2, 4, 5, 6, 7):
+            assert survivors[j].profile_attempts == 1
+            assert survivors[j].retry_backoff_s == 0.0
+        assert all(s.status == "converged" for s in survivors)
 
 
 class TestFixtureIntegrity:

@@ -66,12 +66,15 @@ class TestCollectives:
             """
             import jax, jax.numpy as jnp
             from functools import partial
+            # jax.shard_map only exists from jax 0.6; on the pinned 0.4.37
+            # the stable spelling is jax.experimental.shard_map.shard_map.
+            from jax.experimental.shard_map import shard_map
             from jax.sharding import PartitionSpec as P
             from repro.launch.hlo_analysis import analyze_hlo
 
             mesh = jax.make_mesh((8,), ("x",))
 
-            @partial(jax.shard_map, mesh=mesh, in_specs=P("x"), out_specs=P())
+            @partial(shard_map, mesh=mesh, in_specs=P("x"), out_specs=P())
             def f(v):
                 return jax.lax.psum(v, "x")
 
@@ -90,16 +93,24 @@ class TestCollectives:
             """
             import jax, jax.numpy as jnp
             from functools import partial
+            # jax.shard_map and jax.lax.pvary only exist from jax 0.6; on
+            # the pinned 0.4.37 use jax.experimental.shard_map.shard_map,
+            # and carry the psum result directly — without pvary to devary
+            # the replicated carry, the replication checker would reject
+            # the scan body, so it is disabled (check_rep=False; the HLO
+            # under test is identical).
+            from jax.experimental.shard_map import shard_map
             from jax.sharding import PartitionSpec as P
             from repro.launch.hlo_analysis import analyze_hlo
 
             mesh = jax.make_mesh((8,), ("x",))
 
-            @partial(jax.shard_map, mesh=mesh, in_specs=P("x"), out_specs=P())
+            @partial(shard_map, mesh=mesh, in_specs=P("x"), out_specs=P(),
+                     check_rep=False)
             def step(v):
                 def body(c, _):
                     y = jax.lax.psum(c, "x") * (1.0 / 8.0)
-                    return jax.lax.pvary(y, "x"), None
+                    return y, None
                 y, _ = jax.lax.scan(body, v.sum(0), None, length=10)
                 return jax.lax.psum(y, "x") * (1.0 / 8.0)
 

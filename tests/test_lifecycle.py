@@ -1,0 +1,198 @@
+"""Job lifecycle under adversity: cancellation, preemption, mid-flight
+failure, drain semantics (`FleetFailedError`), exactly-once results, and
+live elastic re-sharding.
+
+The load-bearing claim is the one the golden disturbed-fleet scenario
+pins at full scale: retiring one row mid-flight (cancel / fail / preempt)
+must not perturb its lockstep chunk-mates by a single bit, because the
+engine's rows are vmap-independent and retirement is just the `done` flag.
+These tests re-prove it on a small fleet and exercise every status path.
+
+Part of the chaos lane (`pytest -m chaos`); runs in tier-1.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from golden.scenarios import synth_space_table
+from repro.core.bayesopt import BOSettings
+from repro.fleet import FleetFailedError, FleetJob, TuningSession
+
+pytestmark = pytest.mark.chaos
+
+ST = BOSettings(max_iters=8)
+
+
+def _job(name, n=30):
+    space, table = synth_space_table(n)
+    return FleetJob(name=name, space=space, cost_table=table)
+
+
+def _session(**kw):
+    kw.setdefault("settings", ST)
+    kw.setdefault("mode", "cherrypick")
+    kw.setdefault("warm_start", False)
+    return TuningSession(**kw)
+
+
+def _clean_outcomes(k=2):
+    s = _session()
+    for i in range(k):
+        s.submit(_job(f"j{i}"), seed=i)
+    return s.drain()
+
+
+class TestCancel:
+    def test_cancel_pending_publishes_empty_partial(self):
+        s = _session()
+        h = s.submit(_job("j0"), seed=0)
+        assert h.status == "pending"
+        assert h.cancel()
+        assert h.status == "cancelled"
+        out = h.outcome()
+        assert out.status == "cancelled"
+        assert out.records == []
+        with pytest.raises(RuntimeError, match="cancelled"):
+            out.best_cost
+        assert not h.cancel()  # idempotent: already finished
+
+    def test_cancel_midflight_keeps_partial_trials(self):
+        s = _session()
+        h = s.submit(_job("j0"), seed=0)
+        for _ in range(3):
+            s.step()
+        assert h.status == "running"
+        assert h.cancel()
+        out = h.outcome()
+        assert out.status == "cancelled"
+        full = _clean_outcomes(1)[0]
+        assert 0 < len(out.records) < len(full.records)
+        # The partial trials are a prefix of the undisturbed trace.
+        k = len(out.records)
+        assert [r.as_dict() for r in out.records] == [
+            r.as_dict() for r in full.records[:k]
+        ]
+
+    def test_cancel_does_not_perturb_chunk_mates(self):
+        """Retire one row of a live chunk; its chunk-mate's final trace is
+        bit-identical to an undisturbed fleet's."""
+        clean = _clean_outcomes(2)
+        s = _session()
+        h0 = s.submit(_job("j0"), seed=0)
+        h1 = s.submit(_job("j1"), seed=1)
+        for _ in range(3):
+            s.step()
+        assert h0.cancel()
+        s.drain()
+        assert h1.outcome().as_dict() == clean[1].as_dict()
+
+    def test_cancel_after_done_returns_false(self):
+        s = _session()
+        h = s.submit(_job("j0"), seed=0)
+        s.drain()
+        assert h.status == "done"
+        assert not h.cancel()
+        assert h.outcome().status == "converged"
+
+
+class TestPreempt:
+    def test_preempt_midflight(self):
+        s = _session()
+        h = s.submit(_job("j0"), seed=0)
+        s.step()
+        assert s.preempt(h)
+        assert h.status == "preempted"
+        assert h.outcome().status == "preempted"
+
+    def test_preempt_below_evicts_by_job_priority(self):
+        s = _session()
+        low = [s.submit(_job(f"lo{i}"), seed=i) for i in range(2)]
+        hi = s.submit(_job("hi"), seed=9, job_priority=5)
+        s.step()
+        victims = s.preempt_below(1)
+        assert {v.uid for v in victims} == {h.uid for h in low}
+        assert all(h.status == "preempted" for h in low)
+        assert hi.status == "running"
+        s.drain()
+        assert hi.outcome().status == "converged"
+
+    def test_preempt_below_noop_when_all_ranked(self):
+        s = _session()
+        s.submit(_job("j0"), seed=0, job_priority=3)
+        s.step()
+        assert s.preempt_below(1) == []
+
+
+class TestFailAndDrainGuard:
+    def test_all_live_failed_drain_raises(self):
+        s = _session()
+        h = s.submit(_job("j0"), seed=0)
+        s.step()
+        assert s.fail(h, "executor died")
+        with pytest.raises(FleetFailedError, match="j0"):
+            s.drain()
+        # The outcome is still published and first-class.
+        assert s.results()[0].status == "failed"
+        assert "executor died" in s.results()[0].failure
+
+    def test_second_drain_does_not_reraise(self):
+        s = _session()
+        h = s.submit(_job("j0"), seed=0)
+        s.step()
+        s.fail(h)
+        with pytest.raises(FleetFailedError):
+            s.drain()
+        assert len(s.drain()) == 1  # failure already reported once
+
+    def test_mixed_fleet_drain_returns_normally(self):
+        s = _session()
+        h0 = s.submit(_job("j0"), seed=0)
+        s.submit(_job("j1"), seed=1)
+        s.step()
+        s.fail(h0)
+        outs = s.drain()
+        assert [o.status for o in outs] == ["failed", "converged"]
+
+
+class TestResultsExactlyOnce:
+    def test_every_terminal_status_appears_exactly_once(self):
+        s = _session()
+        h_ok = s.submit(_job("ok"), seed=0)
+        h_cancel = s.submit(_job("cxl"), seed=1)
+        h_fail = s.submit(_job("bad"), seed=2)
+        h_pre = s.submit(_job("pre"), seed=3)
+        s.step()
+        h_cancel.cancel()
+        s.fail(h_fail)
+        s.preempt(h_pre)
+        outs = s.drain()
+        assert len(outs) == 4 == len(s.results())
+        assert [o.status for o in outs] == [
+            "converged", "cancelled", "failed", "preempted",
+        ]
+        # Stable across repeated calls — nothing duplicated or dropped.
+        assert [o.name for o in s.results()] == ["ok", "cxl", "bad", "pre"]
+        assert s.results() == outs
+        assert h_ok.outcome() is outs[0]
+
+
+class TestReshard:
+    def test_live_device_join_is_bit_identical(self):
+        if jax.device_count() < 2:
+            pytest.skip("needs 2 devices; XLA_FLAGS force-count not in effect")
+        clean = _clean_outcomes(4)
+        s = _session()
+        handles = [s.submit(_job(f"j{i}"), seed=i) for i in range(4)]
+        for _ in range(3):
+            s.step()
+        assert s.reshard(shard=2) == 4  # all four rows survive the move
+        s.drain()
+        for h, ref in zip(handles, clean):
+            assert h.outcome().as_dict() == ref.as_dict()
+
+    def test_reshard_with_no_live_rows_is_noop(self):
+        s = _session()
+        s.submit(_job("j0"), seed=0)
+        s.drain()
+        assert s.reshard(shard=None) == 0

@@ -1,0 +1,212 @@
+"""`repro.fleet.retry` in isolation: deterministic capped-exponential
+backoff with seeded jitter, transient retries, permanent fast-fail.
+
+The whole module is pure functions of (policy, seed, attempt) — these
+tests pin exactly that: the same inputs always give the same backoff, the
+jitter stays inside its advertised band, `PermanentRunError` (and any
+unlisted exception) never burns backoff budget, and `call_with_retry`'s
+charged backoff equals the deterministic schedule prefix.  A hypothesis
+lane (skipped when hypothesis is absent — `tests/hypothesis_compat.py`)
+sweeps the bounds over random policies.
+"""
+
+import math
+
+import pytest
+
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from repro.core.profiler import PermanentRunError, TransientRunError
+from repro.fleet.retry import (
+    RetryPolicy, RetryStats, backoff_s, backoff_schedule, call_with_retry,
+)
+
+pytestmark = pytest.mark.chaos
+
+
+def _raw(policy, attempt):
+    return min(
+        policy.base_s * policy.multiplier ** (attempt - 1),
+        policy.max_backoff_s,
+    )
+
+
+class TestPolicy:
+    def test_defaults_valid(self):
+        p = RetryPolicy()
+        assert p.max_attempts == 4 and p.jitter < 1.0
+
+    @pytest.mark.parametrize(
+        "kw",
+        [
+            {"max_attempts": 0},
+            {"jitter": 1.0},
+            {"jitter": -0.1},
+            {"base_s": -1.0},
+            {"multiplier": 0.5},
+            {"max_backoff_s": -1.0},
+        ],
+    )
+    def test_rejects_bad_parameters(self, kw):
+        with pytest.raises(ValueError):
+            RetryPolicy(**kw)
+
+
+class TestBackoff:
+    def test_deterministic(self):
+        p = RetryPolicy()
+        for seed in (0, 1, 17):
+            for k in (1, 2, 3):
+                assert backoff_s(p, seed, k) == backoff_s(p, seed, k)
+
+    def test_seed_desynchronizes_clients(self):
+        p = RetryPolicy()
+        vals = {round(backoff_s(p, seed, 1), 12) for seed in range(16)}
+        assert len(vals) > 1  # different seeds, different jitter
+
+    def test_jitter_band(self):
+        p = RetryPolicy(jitter=0.25)
+        for seed in range(8):
+            for k in (1, 2, 3):
+                raw = _raw(p, k)
+                b = backoff_s(p, seed, k)
+                assert raw * (1 - p.jitter) <= b < raw * (1 + p.jitter)
+
+    def test_zero_jitter_is_exact_exponential(self):
+        p = RetryPolicy(jitter=0.0, base_s=1.5, multiplier=3.0)
+        for k in (1, 2, 3):
+            assert backoff_s(p, 0, k) == pytest.approx(_raw(p, k))
+
+    def test_cap_applies(self):
+        p = RetryPolicy(
+            max_attempts=10, base_s=1.0, multiplier=10.0,
+            max_backoff_s=5.0, jitter=0.0,
+        )
+        assert backoff_s(p, 0, 9) == 5.0
+
+    def test_attempts_are_one_based(self):
+        with pytest.raises(ValueError):
+            backoff_s(RetryPolicy(), 0, 0)
+
+    def test_schedule_matches_pointwise(self):
+        p = RetryPolicy(max_attempts=5)
+        sched = backoff_schedule(p, seed=3)
+        assert len(sched) == p.max_attempts - 1
+        assert sched == [backoff_s(p, 3, k) for k in range(1, 5)]
+
+
+class TestCallWithRetry:
+    def test_first_try_success(self):
+        value, st_ = call_with_retry(
+            lambda: 42, policy=RetryPolicy(), seed=0,
+        )
+        assert value == 42
+        assert st_.attempts == 1 and st_.backoff_s == 0.0
+
+    def test_transient_retried_with_charged_backoff(self):
+        p = RetryPolicy(max_attempts=4)
+        calls = [0]
+
+        def flaky():
+            calls[0] += 1
+            if calls[0] <= 2:
+                raise TransientRunError("preempted")
+            return "ok"
+
+        value, st_ = call_with_retry(flaky, policy=p, seed=7)
+        assert value == "ok"
+        assert st_.attempts == 3
+        # Charged backoff is exactly the deterministic schedule prefix.
+        assert st_.backoff_s == pytest.approx(sum(backoff_schedule(p, 7)[:2]))
+
+    def test_exhaustion_reraises_last_transient(self):
+        p = RetryPolicy(max_attempts=3)
+        stats = RetryStats(attempts=0)  # caller-owned: starts at zero
+
+        def always():
+            raise TransientRunError("still down")
+
+        with pytest.raises(TransientRunError):
+            call_with_retry(always, policy=p, seed=0, stats=stats)
+        assert stats.attempts == p.max_attempts
+        # The final attempt re-raises without charging another delay.
+        assert stats.backoff_s == pytest.approx(
+            sum(backoff_schedule(p, 0))
+        )
+
+    def test_permanent_fast_fails(self):
+        stats = RetryStats(attempts=0)
+
+        def broken():
+            raise PermanentRunError("bad binary")
+
+        with pytest.raises(PermanentRunError):
+            call_with_retry(
+                broken, policy=RetryPolicy(), seed=0, stats=stats,
+            )
+        assert stats.attempts == 1
+        assert stats.backoff_s == 0.0  # zero budget burned
+
+    def test_unlisted_exception_propagates_immediately(self):
+        def oops():
+            raise KeyError("not a run failure")
+
+        with pytest.raises(KeyError):
+            call_with_retry(oops, policy=RetryPolicy(), seed=0)
+
+    def test_sleep_injection_receives_charged_delays(self):
+        p = RetryPolicy(max_attempts=3)
+        slept = []
+        calls = [0]
+
+        def flaky():
+            calls[0] += 1
+            if calls[0] == 1:
+                raise TransientRunError("once")
+            return 1
+
+        _, st_ = call_with_retry(
+            flaky, policy=p, seed=5, sleep=slept.append,
+        )
+        assert slept == [backoff_s(p, 5, 1)]
+        assert st_.backoff_s == pytest.approx(sum(slept))
+
+    def test_stats_accumulate_across_calls(self):
+        stats = RetryStats(attempts=0)
+        p = RetryPolicy()
+        call_with_retry(lambda: 1, policy=p, seed=0, stats=stats)
+        call_with_retry(lambda: 2, policy=p, seed=0, stats=stats)
+        assert stats.attempts == 2  # probe + profile aggregate in one object
+
+    def test_never_retry_policy(self):
+        p = RetryPolicy(max_attempts=1)
+
+        def once():
+            raise TransientRunError("no budget")
+
+        with pytest.raises(TransientRunError):
+            call_with_retry(once, policy=p, seed=0)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+class TestBackoffProperties:
+    @settings(max_examples=200, deadline=None)
+    @given(
+        seed=st.integers(min_value=0, max_value=2**31),
+        attempt=st.integers(min_value=1, max_value=12),
+        base=st.floats(min_value=0.01, max_value=30.0),
+        mult=st.floats(min_value=1.0, max_value=8.0),
+        cap=st.floats(min_value=0.01, max_value=120.0),
+        jitter=st.floats(min_value=0.0, max_value=0.99),
+    )
+    def test_backoff_in_band_and_finite(
+        self, seed, attempt, base, mult, cap, jitter,
+    ):
+        p = RetryPolicy(
+            max_attempts=13, base_s=base, multiplier=mult,
+            max_backoff_s=cap, jitter=jitter,
+        )
+        raw = _raw(p, attempt)
+        b = backoff_s(p, seed, attempt)
+        assert math.isfinite(b) and b >= 0.0
+        assert raw * (1 - jitter) - 1e-12 <= b <= raw * (1 + jitter)
+        assert b == backoff_s(p, seed, attempt)  # pure function
