@@ -12,15 +12,22 @@ Four measurements; A–C are trace-checked against the sequential engine:
      every categorized job) run the way Blink-style systems run tuning:
      small spaces, cheap trials, as a routine re-tuning service.
   C. **Search-space scaling sweep** — synthetic spaces of n ∈ {69, 256,
-     512, 1024, 8192, 32768} configurations, a 64-job fleet with the
-     paper-regime trial budget (B = 24): per-BO-step time of the
-     feature-buffer engine vs the retained d²-gather step (n ≤ 8192 — its
-     (n,n) tensor is the memory wall this PR removes) vs the dense
-     full-extent step (n ≤ 1024, O(18n³)), plus end-to-end batched vs
-     sequential and per-point memory reporting (analytic geometry bytes,
-     largest live device buffer, peak RSS).  This is the feature-buffer
-     engine's target regime — B ≪ n, n up to 10⁴–10⁵ — where the gather
-     engine was memory-bound and the dense engine flops-bound.
+     512, 1024, 8192, 32768} configurations plus a step-only n = 131072
+     catalog-scale point, a 64-job fleet with the paper-regime trial
+     budget (B = 24): per-BO-step time of the feature-buffer engine vs
+     the fused streaming-kernel lane (``layout="fused"``,
+     `repro.kernels.ei_argmax` — its tiled (max EI, argmax) reduction
+     never materializes the (B,n) cross block, and XLA's compiled
+     transient footprint is reported for both layouts to show it) vs the
+     retained d²-gather step (n ≤ 8192 — its (n,n) tensor is the memory
+     wall the feature buffer removed) vs the dense full-extent step
+     (n ≤ 1024, O(18n³)), plus end-to-end batched vs sequential and
+     per-point memory reporting (analytic geometry bytes, largest live
+     device buffer, peak RSS).  The fused lane is trace-checked against
+     the feature lane at EVERY extent — it has no n ceiling, which is its
+     point.  This is the engine's target regime — B ≪ n, n up to
+     10⁴–10⁵ — where the gather engine was memory-bound and the dense
+     engine flops-bound.
   D. **Streaming session** (`--session` to run it alone) — 64 recurring
      paper jobs arriving in 8 waves against one `TuningSession` with
      warm-starting on: wave 0 is cold, later waves hit the probe cache and
@@ -244,17 +251,18 @@ def check_buffer_donation() -> dict:
     }
 
 
-def _time_packed_step(space, table, budget: int, reps: int,
-                      layout: str = "feature") -> Tuple[float, float, float]:
-    """(seconds/iter, live-device MB, largest-buffer MB) of the packed
-    lockstep update, one warm chunk, for either packed geometry layout
-    ("feature" or "gather").  Memory is sampled while the engine state and
-    geometry are resident — the steady-state on-device footprint."""
+def _packed_state_args(space, table, budget: int, layout: str):
+    """A warm lockstep (state, args) pair for `_fleet_update` — buffer
+    nearly full, budget live — shared by the step timer and the
+    compiled-transient-footprint probe so both measure the same program."""
     n = len(space)
     j = _CHUNK
     k = max(budget - 1, 1)  # warm state: buffer nearly full, budget live
     enc = encode_features(space.encoded())
-    geom_one = enc if layout == "feature" else np.asarray(precompute_d2(enc))
+    geom_one = (
+        enc if layout in ("feature", "fused")
+        else np.asarray(precompute_d2(enc))
+    )
     # broadcast_to is a host-side view — the chunk replication only
     # materializes once, on device (at n=8192 the gather layout's stacked
     # (8,n,n) geometry is ~2 GiB there; that resident tensor is exactly
@@ -287,6 +295,17 @@ def _time_packed_step(space, table, budget: int, reps: int,
         jnp.full(j, budget, jnp.int32), jnp.asarray(0, jnp.int32),
         jnp.asarray(0.0, jnp.float32), jnp.asarray(True),
     )
+    return state, args
+
+
+def _time_packed_step(space, table, budget: int, reps: int,
+                      layout: str = "feature") -> Tuple[float, float, float]:
+    """(seconds/iter, live-device MB, largest-buffer MB) of the packed
+    lockstep update, one warm chunk, for any packed geometry layout
+    ("feature", "gather", or the streaming-kernel "fused").  Memory is
+    sampled while the engine state and geometry are resident — the
+    steady-state on-device footprint."""
+    state, args = _packed_state_args(space, table, budget, layout)
     state = _fleet_update(state, *args, xi=0.0, layout=layout)  # warm the jit
     jax.block_until_ready(state.t)
     live_mb, largest_mb = _live_device_mb()
@@ -295,6 +314,22 @@ def _time_packed_step(space, table, budget: int, reps: int,
         state = _fleet_update(state, *args, xi=0.0, layout=layout)
     jax.block_until_ready(state.t)
     return (time.perf_counter() - t0) / reps, live_mb, largest_mb
+
+
+def _step_transient_mb(space, table, budget: int, layout: str) -> float:
+    """XLA's compiled transient footprint (temp buffers, MB) of one lockstep
+    update — the compiler's own accounting of scratch the step allocates
+    beyond its inputs/outputs.  This is where the fused layout's streaming
+    reduction shows up: the feature layout's transients hold the (B,n)
+    cross block (plus peers) per chunk row, the fused layout's only the
+    (B,tile) working set."""
+    state, args = _packed_state_args(space, table, budget, layout)
+    stats = (
+        _fleet_update.lower(state, *args, xi=0.0, layout=layout)
+        .compile()
+        .memory_analysis()
+    )
+    return float(stats.temp_size_in_bytes) / 1e6
 
 
 _dense_chunk_step = jax.jit(jax.vmap(bo_step_core_dense))
@@ -324,60 +359,93 @@ def _time_dense_step(space, table, budget: int, reps: int) -> float:
 
 def bench_scaling_point(
     n: int, n_jobs: int, budget: int, check: bool,
-    packed_reps: int = 20, dense_reps: int = 2,
+    packed_reps: int = 20, dense_reps: int = 2, step_only: bool = False,
 ) -> dict:
-    """One sweep point: budgeted CherryPick over an n-config synthetic space."""
+    """One sweep point: budgeted CherryPick over an n-config synthetic space.
+
+    ``step_only`` skips the end-to-end sequential/batched timing (the
+    catalog-scale extension points, n ≥ 10⁵, where a 64-job sequential
+    Python loop would dominate the whole bench) — per-step timing, the
+    transient-footprint probes, and the fused-vs-feature trace identity
+    check still run.
+    """
     space, table = synthetic_space(n)
     d = space.encoded().shape[1]
     settings = BOSettings(max_iters=budget)
-    rng_seq = _rngs(n_jobs)
-    rng_bat = _rngs(n_jobs)
     tables = [table] * n_jobs
     cost_fn = lambda i: float(table[i])
 
-    # Warm both engines' compiles outside the timed region (the batched
-    # warm-up must cover the full-extent chunk shape, not a prefix).
-    cherrypick_search(space, cost_fn, np.random.default_rng(0),
-                      settings=settings, to_exhaustion=True)
-    batched_search([space] * n_jobs, tables, _rngs(n_jobs),
-                   settings=settings, to_exhaustion=True)
+    t_seq = t_bat = None
+    trials = None
+    identical = None
+    if not step_only:
+        rng_seq = _rngs(n_jobs)
+        rng_bat = _rngs(n_jobs)
+        # Warm both engines' compiles outside the timed region (the batched
+        # warm-up must cover the full-extent chunk shape, not a prefix).
+        cherrypick_search(space, cost_fn, np.random.default_rng(0),
+                          settings=settings, to_exhaustion=True)
+        batched_search([space] * n_jobs, tables, _rngs(n_jobs),
+                       settings=settings, to_exhaustion=True)
 
-    t0 = time.perf_counter()
-    seq = [
-        cherrypick_search(space, cost_fn, r, settings=settings,
-                          to_exhaustion=True)
-        for r in rng_seq
-    ]
-    t_seq = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    bat = batched_search([space] * n_jobs, tables, rng_bat,
-                         settings=settings, to_exhaustion=True)
-    t_bat = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        seq = [
+            cherrypick_search(space, cost_fn, r, settings=settings,
+                              to_exhaustion=True)
+            for r in rng_seq
+        ]
+        t_seq = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        bat = batched_search([space] * n_jobs, tables, rng_bat,
+                             settings=settings, to_exhaustion=True)
+        t_bat = time.perf_counter() - t0
 
-    identical = True
+        identical = True
+        if check:
+            for jdx, ref in enumerate(seq):
+                tr = bat.job_trace(jdx)
+                identical &= tr.tried == ref.tried and tr.costs == ref.costs
+            assert identical, f"engines diverged at n={n}"
+        trials = sum(len(t.tried) for t in seq)
+
     gather_identical = None
+    fused_identical = None
     if check:
-        for jdx, ref in enumerate(seq):
-            tr = bat.job_trace(jdx)
-            identical &= tr.tried == ref.tried and tr.costs == ref.costs
-        assert identical, f"engines diverged at n={n}"
+        # Cross-layout identity at every point: each retained/alternative
+        # layout must reproduce the feature-buffer traces bit-for-bit (few
+        # jobs — the point is the check, not layout throughput).
+        g_jobs = min(n_jobs, 2)
+        bat_f = batched_search(
+            [space] * g_jobs, tables[:g_jobs], _rngs(g_jobs),
+            settings=settings, to_exhaustion=True,
+        )
         if n <= _GATHER_MAX_N:
-            # Cross-layout identity: the retained d²-gather engine must
-            # reproduce the feature-buffer traces bit-for-bit (few jobs —
-            # the point is the check, not gather-path throughput).
-            g_jobs = min(n_jobs, 2)
             bat_g = batched_search(
                 [space] * g_jobs, tables[:g_jobs], _rngs(g_jobs),
                 settings=settings, to_exhaustion=True, layout="gather",
             )
             gather_identical = all(
-                bat_g.job_trace(jdx).tried == bat.job_trace(jdx).tried
+                bat_g.job_trace(jdx).tried == bat_f.job_trace(jdx).tried
                 for jdx in range(g_jobs)
             )
             assert gather_identical, f"gather layout diverged at n={n}"
+        # The fused streaming-kernel lane has no n ceiling — that is its
+        # entire point — so it is checked at every sweep extent.
+        bat_u = batched_search(
+            [space] * g_jobs, tables[:g_jobs], _rngs(g_jobs),
+            settings=settings, to_exhaustion=True, layout="fused",
+        )
+        fused_identical = all(
+            bat_u.job_trace(jdx).tried == bat_f.job_trace(jdx).tried
+            and bat_u.job_trace(jdx).costs == bat_f.job_trace(jdx).costs
+            for jdx in range(g_jobs)
+        )
+        assert fused_identical, f"fused layout diverged at n={n}"
 
     feature_s, live_mb, largest_mb = _time_packed_step(
         space, table, budget, packed_reps, layout="feature")
+    fused_s = _time_packed_step(
+        space, table, budget, packed_reps, layout="fused")[0]
     gather_s = (
         _time_packed_step(space, table, budget, packed_reps,
                           layout="gather")[0]
@@ -387,16 +455,27 @@ def bench_scaling_point(
         _time_dense_step(space, table, budget, dense_reps)
         if n <= _DENSE_MAX_N else None
     )
-    trials = sum(len(t.tried) for t in seq)
+    feature_transient_mb = _step_transient_mb(space, table, budget, "feature")
+    fused_transient_mb = _step_transient_mb(space, table, budget, "fused")
     return {
         "n": n,
         "budget": budget,
         "n_jobs": n_jobs,
         "chunk": _CHUNK,
         "feature_step_ms": 1e3 * feature_s,
+        "fused_step_ms": 1e3 * fused_s,
         "gather_step_ms": 1e3 * gather_s if gather_s is not None else None,
         "dense_step_ms": 1e3 * dense_s if dense_s is not None else None,
         "step_speedup_vs_dense": dense_s / feature_s if dense_s else None,
+        "fused_step_speedup_vs_feature": feature_s / fused_s,
+        # XLA's compiled transient accounting: the per-chunk scratch the
+        # fused layout's streaming reduction eliminates ((B,n) → (B,tile)).
+        "feature_step_transient_mb": feature_transient_mb,
+        "fused_step_transient_mb": fused_transient_mb,
+        "fused_transient_reduction": (
+            feature_transient_mb / fused_transient_mb
+            if fused_transient_mb > 0 else None
+        ),
         # Geometry memory per job: the feature layout's resident (n,d)
         # encoding vs the (n,n) tensor the gather layout would need.
         "geom_feature_mb": n * d * 4 / 1e6,
@@ -405,32 +484,43 @@ def bench_scaling_point(
         "largest_live_buffer_mb": largest_mb,
         "sequential_s": t_seq,
         "batched_s": t_bat,
-        "speedup": t_seq / t_bat,
+        "speedup": t_seq / t_bat if not step_only else None,
         "total_trials": trials,
-        "traces_identical": bool(identical and check),
+        "traces_identical": bool(identical) if identical is not None else None,
         "gather_traces_identical": gather_identical,
+        "fused_traces_identical": fused_identical,
+        "step_only": step_only,
     }
 
 
 def bench_scaling(ns: Sequence[int], n_jobs: int, budget: int, check: bool,
-                  packed_reps: int = 20, dense_reps: int = 2) -> dict:
+                  packed_reps: int = 20, dense_reps: int = 2,
+                  step_only_ns: Sequence[int] = ()) -> dict:
     rows = []
-    for n in ns:
+    for n in list(ns) + list(step_only_ns):
         r = bench_scaling_point(n, n_jobs, budget, check,
-                                packed_reps=packed_reps, dense_reps=dense_reps)
+                                packed_reps=packed_reps, dense_reps=dense_reps,
+                                step_only=n in step_only_ns)
         rows.append(r)
         gather = (f"{r['gather_step_ms']:8.2f}" if r["gather_step_ms"]
                   else "       –")
         dense = (f"{r['dense_step_ms']:9.2f}" if r["dense_step_ms"]
                  else "        –")
-        print(f"  C. n={r['n']:5d}  B={r['budget']:3d}  "
+        e2e = (
+            f"end-to-end {r['batched_s']:6.2f} s batched vs "
+            f"{r['sequential_s']:7.2f} s sequential ({r['speedup']:.2f}x)"
+            if not r["step_only"] else "end-to-end skipped (step-only point)"
+        )
+        print(f"  C. n={r['n']:6d}  B={r['budget']:3d}  "
               f"feature step {r['feature_step_ms']:8.2f} ms/chunk  "
+              f"fused {r['fused_step_ms']:8.2f} ms "
+              f"({r['fused_step_speedup_vs_feature']:.2f}x, transients "
+              f"{r['feature_step_transient_mb']:.1f} -> "
+              f"{r['fused_step_transient_mb']:.1f} MB, "
+              f"{r['fused_transient_reduction']:.0f}x)  "
               f"gather {gather} ms  dense {dense} ms  "
               f"geom {r['geom_feature_mb']:8.2f} MB (vs "
-              f"{r['geom_gather_mb']:9.1f} MB d²)  "
-              f"end-to-end {r['batched_s']:6.2f} s batched vs "
-              f"{r['sequential_s']:7.2f} s sequential "
-              f"({r['speedup']:.2f}x)")
+              f"{r['geom_gather_mb']:9.1f} MB d²)  " + e2e)
     return {"budget": budget, "n_jobs": n_jobs, "sweep": rows}
 
 
@@ -824,6 +914,7 @@ def _report_session(r: dict) -> None:
 def run(n_jobs: int = 64, check: bool = True,
         settings: BOSettings = BOSettings(), *, smoke: bool = False,
         scaling_ns: Sequence[int] = (69, 256, 512, 1024, 8192, 32768),
+        scaling_step_only_ns: Sequence[int] = (131072,),
         budget: int = 24, json_path: Optional[str] = None,
         session_only: bool = False, shards: Sequence[int] = (2,)) -> dict:
     # The repo-root BENCH_fleet.json is the committed perf baseline; only
@@ -840,6 +931,7 @@ def run(n_jobs: int = 64, check: bool = True,
         # profiling + jit warm dominates).
         n_jobs = min(n_jobs, 8)
         scaling_ns = (64, 32768)
+        scaling_step_only_ns = ()
         budget = 8
         packed_reps, dense_reps = 5, 1
 
@@ -859,7 +951,8 @@ def run(n_jobs: int = 64, check: bool = True,
           f"({', '.join(donation['buffers_checked'])})")
 
     c = bench_scaling(scaling_ns, n_jobs, budget, check,
-                      packed_reps=packed_reps, dense_reps=dense_reps)
+                      packed_reps=packed_reps, dense_reps=dense_reps,
+                      step_only_ns=scaling_step_only_ns)
 
     out = {"n_jobs": n_jobs, "traces_identical": bool(check),
            "smoke": bool(smoke), "donation": donation, "scaling": c,

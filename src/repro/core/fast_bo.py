@@ -16,7 +16,14 @@ w = warm-start seeds):
     layout           memory      kernel blocks          factorizations  posterior
     dense            O(n²)       6·O(n²·d)              18·O(n³)        O(n²)
     d²-gather (PR 2) O(n²)       gathers + 6·O(B²)      18·O(B³)        O(B·n)
-    feature (now)    O(n·d)      O(B²d + B·n·d)+6·O(B²) 18·O(B³)        O(B·n)
+    feature (PR 3)   O(n·d)      O(B²d + B·n·d)+6·O(B²) 18·O(B³)        O(B·n)
+    fused (PR 8)     O(n·d)      same flops, streamed   18·O(B³)        O(B·tile)
+
+The fused row's last column is the *transient* bound: the EI/argmax tail
+runs as a streaming (max, argmax) reduction over n/tile tiles
+(`repro.kernels.ei_argmax`), so the (B,n) cross block — the feature
+layout's one remaining extent-n per-step allocation — never exists; its
+flops are unchanged.
 
 Session-era paths ride the same step with zero new device code (PR 4):
 
@@ -45,8 +52,11 @@ The d²-gather layout paid a one-off O(n²·d) `precompute_d2` per search and
 held the (n,n) tensor for its whole lifetime — an O(n²) memory wall that
 caps searches near n ≈ 10³.  The feature layout recomputes the two distance
 blocks each step (O(B²d + Bnd), trivially cheap for B ≪ n) from O(n·d)
-state, so n = 10⁴–10⁵ spaces run in megabytes.  Both layouts are retained:
-`bo_step_core` (feature) drives both engines, `bo_step_core_gather` +
+state, so n = 10⁴–10⁵ spaces run in megabytes.  All layouts are retained:
+`bo_step_core` (feature) is the default in both engines,
+`bo_step_core_fused` streams its EI/argmax tail through
+`repro.kernels.ei_argmax` (layout="fused", bit-identical — the tail IS the
+same function — with O(B·tile) transients), `bo_step_core_gather` +
 `precompute_d2` are the PR-2 path kept for cross-checking and benchmarking,
 and `bo_step_core_dense` is the original full-extent baseline.
 
@@ -131,6 +141,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.gp import GPParams, matern52, matern52_from_sqdist, pairwise_sqdist
+from repro.kernels.ei_argmax import ei_argmax, ei_from_sqdist
 
 __all__ = [
     "FleetState",
@@ -138,6 +149,7 @@ __all__ = [
     "bo_step",
     "bo_step_core",
     "bo_step_core_dense",
+    "bo_step_core_fused",
     "bo_step_core_gather",
     "encode_features",
     "fleet_step",
@@ -150,7 +162,7 @@ _JITTER = 1e-8
 _LENGTHSCALES = (0.1, 0.25, 0.5, 1.0, 2.0, 4.0)
 _NOISES = (1e-4, 1e-2, 1e-1)
 
-_LAYOUTS = ("feature", "gather")
+_LAYOUTS = ("feature", "gather", "fused")
 
 
 def encode_features(encoded) -> np.ndarray:
@@ -251,18 +263,19 @@ def _masked_posterior(
     return lml, mean_n, var_n
 
 
-def _packed_core(
+def _packed_head(
     d2_bb: jax.Array,  # (B, B) raw squared distances, training block
-    d2_bn: jax.Array,  # (B, n) raw squared distances, cross block
     py: jax.Array,  # (B,) f32 packed observed costs, trial order
     t: jax.Array,  # () i32 observations made (valid packed slots)
-    obs_mask: jax.Array,  # (n,) bool — configurations already tried
-    cand_mask: jax.Array,  # (n,) bool — current candidate pool
-    xi: float,
-) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Everything downstream of the distance blocks, shared verbatim by the
-    feature-buffer and d²-gather layouts — the op-for-op identity of this
-    tail is what makes the two layouts' picks bit-identical.
+) -> Tuple[jax.Array, ...]:
+    """The training-side math every packed layout shares: target
+    standardization, the 18-point (lengthscale, noise) grid, masked
+    Cholesky factorizations, and marginal-likelihood selection.  Everything
+    here is extent-B — the space extent n never appears — so the fused
+    layout runs it verbatim and streams only the tail.
+
+    Returns ``(pm, best, ls_sel, chol, alpha, y_mean, y_std)``: the
+    selected posterior factors the EI tail consumes.
     """
     b = py.shape[0]
     pmask = jnp.arange(b) < t
@@ -309,25 +322,36 @@ def _packed_core(
     lmls = jnp.where(jnp.isfinite(lmls), lmls, -jnp.inf)
     best_h = jnp.argmax(lmls)
 
-    # Posterior over all n points for the selected hyperparameters only:
-    # one (B,n) rescale of the cross block, masked training rows.
-    k_star = matern52_from_sqdist(d2_bn, ls[best_h // nz.shape[0]]) * pm[:, None]
-    mean_n = k_star.T @ alphas[best_h]
-    v = jax.scipy.linalg.solve_triangular(chols[best_h], k_star, lower=True)
-    var_n = jnp.maximum(1.0 - jnp.sum(v * v, axis=0), 1e-12)
-    std_n = jnp.sqrt(var_n)
-
-    # De-standardize.
-    mean = mean_n * y_std + y_mean
-    std = std_n * y_std
-
     best = jnp.min(jnp.where(pmask, py, jnp.inf))
-    improvement = best - mean - xi
-    z = improvement / jnp.maximum(std, 1e-12)
-    cdf = 0.5 * (1.0 + jax.scipy.special.erf(z / jnp.sqrt(2.0)))
-    pdf = jnp.exp(-0.5 * z * z) / jnp.sqrt(2.0 * jnp.pi)
-    ei = jnp.maximum(improvement * cdf + std * pdf, 0.0)
-    ei = jnp.where(cand_mask & ~obs_mask, ei, -jnp.inf)
+    return (
+        pm, best, ls[best_h // nz.shape[0]], chols[best_h], alphas[best_h],
+        y_mean, y_std,
+    )
+
+
+def _packed_core(
+    d2_bb: jax.Array,  # (B, B) raw squared distances, training block
+    d2_bn: jax.Array,  # (B, n) raw squared distances, cross block
+    py: jax.Array,  # (B,) f32 packed observed costs, trial order
+    t: jax.Array,  # () i32 observations made (valid packed slots)
+    obs_mask: jax.Array,  # (n,) bool — configurations already tried
+    cand_mask: jax.Array,  # (n,) bool — current candidate pool
+    xi: float,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Everything downstream of the distance blocks, shared verbatim by the
+    feature-buffer and d²-gather layouts — the op-for-op identity of this
+    tail is what makes the two layouts' picks bit-identical.  The EI math
+    itself is `ei_from_sqdist`, the SAME function the fused layout's tiled
+    lanes execute per (B,tile) block (`repro.kernels.ei_argmax`), so the
+    unfused reference and the fused kernel cannot drift apart.
+    """
+    pm, best, ls_sel, chol, alpha, y_mean, y_std = _packed_head(d2_bb, py, t)
+    # Posterior + EI over all n points for the selected hyperparameters
+    # only: one (B,n) rescale of the cross block, masked training rows.
+    ei = ei_from_sqdist(
+        d2_bn, pm, alpha, chol, ls_sel, y_mean, y_std, best,
+        cand_mask & ~obs_mask, xi,
+    )
     pick = jnp.argmax(ei)
     return pick, jnp.max(ei), best
 
@@ -351,6 +375,60 @@ def bo_step_core(
     """
     d2_bb, d2_bn = packed_sqdist_blocks(feats, encoded, tried)
     return _packed_core(d2_bb, d2_bn, py, t, obs_mask, cand_mask, xi)
+
+
+def bo_step_core_fused(
+    encoded: jax.Array,  # (n, d) static float32 encoding of the whole space
+    feats: jax.Array,  # (B, d) packed features of observed points, trial order
+    tried: jax.Array,  # (B,) i32 trial log in trial order, -1 padded
+    py: jax.Array,  # (B,) f32 packed observed costs, aligned with feats
+    t: jax.Array,  # () i32 observations made (valid packed slots)
+    obs_mask: jax.Array,  # (n,) bool — configurations already tried
+    cand_mask: jax.Array,  # (n,) bool — current candidate pool
+    xi: float = 0.0,
+    *,
+    tile: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One fused-kernel BO iteration, traceable.  Returns
+    (pick_index, max_ei, best) — bit-identical to `bo_step_core`.
+
+    The extent-B head (`_packed_head`) runs unchanged; the n-extent tail is
+    the fused streaming kernel (`repro.kernels.ei_argmax`): tiles of the
+    candidate axis flow through distance → posterior rescale → EI → a
+    running (max, argmax) pair, so the (B,n) cross block is NEVER
+    materialized — peak transient memory drops from O(B·n) to O(B·tile).
+    The training block is computed directly as `pairwise_sqdist(feats,
+    encoded[tried])`: for d ≥ 2 this reproduces the feature lane's gathered
+    block bit-for-bit (the (B,d)·(d,B) contraction is the same reduction,
+    and XLA:CPU compiles it stably across program contexts — property- and
+    golden-pinned).
+
+    d = 1 delegates to the feature path wholesale: XLA:CPU rewrites the
+    degenerate (·,1)·(1,·) matmul elementwise with CONTEXT-DEPENDENT
+    fusion — any differently-shaped fused program drifts by an ulp
+    (observed for the direct training block and for zero-padded d→2
+    formulations alike), and one ulp flips late-search argmax picks.
+    Identical program ⇒ identical bits; a single-feature space is
+    degenerate for catalog-scale search anyway, which is the regime the
+    kernel exists for.
+
+    ``tile`` (None → 1024-wide tiles, single-tile for small n) and
+    ``interpret`` (None → TPU: compiled Pallas, CPU: compiled `lax.scan`;
+    True: Pallas interpreter, the kernel-identity test lane) are
+    trace-static.
+    """
+    if encoded.shape[-1] < 2:
+        return bo_step_core(encoded, feats, tried, py, t, obs_mask,
+                            cand_mask, xi)
+    idx = jnp.maximum(tried, 0)  # padded slots: column 0, masked via pm
+    d2_bb = pairwise_sqdist(feats, encoded[idx])
+    pm, best, ls_sel, chol, alpha, y_mean, y_std = _packed_head(d2_bb, py, t)
+    pick, max_ei = ei_argmax(
+        encoded, cand_mask & ~obs_mask, feats, pm, alpha, chol,
+        ls_sel, y_mean, y_std, best, xi=xi, tile=tile, interpret=interpret,
+    )
+    return pick, max_ei, best
 
 
 def bo_step_core_gather(
@@ -487,9 +565,11 @@ def fleet_step(
     `repro.core.bayesopt._bo_loop` exactly.  A no-op once the job is done.
 
     ``layout`` is trace-static: "feature" (default) takes the (n,d)
-    encoding as ``geom`` and maintains the packed feature buffer;
-    "gather" takes the precomputed (n,n) distance tensor (the retained
-    PR-2 path) and leaves ``state.feats`` untouched.
+    encoding as ``geom`` and maintains the packed feature buffer; "fused"
+    takes the same geometry and buffer but streams the n-extent tail
+    through the fused EI/argmax kernel (`bo_step_core_fused` — no (B,n)
+    block); "gather" takes the precomputed (n,n) distance tensor (the
+    retained PR-2 path) and leaves ``state.feats`` untouched.
     """
     if layout not in _LAYOUTS:
         raise ValueError(f"unknown layout {layout!r}; want one of {_LAYOUTS}")
@@ -518,6 +598,10 @@ def fleet_step(
         bo_pick, max_ei, best = bo_step_core(
             geom, feats, tried, py, t, obs, cand, xi
         )
+    elif layout == "fused":
+        bo_pick, max_ei, best = bo_step_core_fused(
+            geom, feats, tried, py, t, obs, cand, xi
+        )
     else:
         bo_pick, max_ei, best = bo_step_core_gather(
             geom, tried, py, t, obs, cand, xi
@@ -541,7 +625,7 @@ def fleet_step(
     obs = jnp.where(observe, obs.at[pick].set(True), obs)
     tried = jnp.where(observe, tried.at[slot].set(pick), tried)
     py = jnp.where(observe, py.at[slot].set(costs[pick]), py)
-    if layout == "feature":
+    if layout in ("feature", "fused"):
         # The observed point's features enter the packed buffer — the only
         # geometry the next step's kernel blocks will read.
         feats = jnp.where(observe, feats.at[slot].set(geom[pick]), feats)
@@ -610,8 +694,10 @@ class SequentialProbe:
     same static extent, which is what keeps their traces bit-identical.
 
     ``layout="feature"`` (default) keeps only the (n,d) encoding on device
-    — O(n·d) memory, the 10⁴–10⁵-point regime; ``layout="gather"`` is the
-    retained PR-2 path holding the (n,n) distance tensor.
+    — O(n·d) memory, the 10⁴–10⁵-point regime; ``layout="fused"`` keeps
+    the same encoding and streams the EI tail through the fused kernel
+    (O(B·tile) transients, bit-identical picks); ``layout="gather"`` is
+    the retained PR-2 path holding the (n,n) distance tensor.
     """
 
     def __init__(self, encoded, capacity: int, xi: float = 0.0,
@@ -624,7 +710,7 @@ class SequentialProbe:
         self._xi = float(xi)
         self._layout = layout
         self._enc = enc
-        if layout == "feature":
+        if layout in ("feature", "fused"):
             geom = jnp.asarray(enc)
         else:
             geom = precompute_d2(enc)

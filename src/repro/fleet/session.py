@@ -1051,13 +1051,13 @@ class TuningSession:
 
     def _geom(self, space) -> np.ndarray:
         """Per-space geometry, once per space (seed-replica fleets alias one
-        SearchSpace): the (n,d) encoding (feature layout) or the (n,n)
-        distance tensor (retained gather layout)."""
+        SearchSpace): the (n,d) encoding (feature and fused layouts) or the
+        (n,n) distance tensor (retained gather layout)."""
         entry = self._spaces[id(space)]
         if entry.geom is None:
             enc = self._encoding(space)
             entry.geom = (
-                enc if self.layout == "feature"
+                enc if self.layout in ("feature", "fused")
                 else np.asarray(precompute_d2(enc))
             )
         return entry.geom

@@ -1,0 +1,18 @@
+"""Fused posterior+EI+argmax kernel for catalog-scale candidate spaces.
+
+`ei_argmax` streams the candidate axis in tiles — per tile: distance
+block, posterior mean/var rescale, Expected Improvement, and a running
+(max, argmax) reduction — so the (B,n) cross block the unfused BO step
+materializes never exists.  `tile.ei_from_sqdist` is the ONE shared tail
+both the fused lanes and the unfused reference (`repro.core.fast_bo`)
+execute; `kernel.ei_argmax_kernel_call` is the Pallas kernel (TPU
+compiled / interpret); `ops.ei_argmax` dispatches between them and the
+production `lax.scan` CPU lane.  Wired into the engines as
+``layout="fused"`` (see `fast_bo.bo_step_core_fused`).
+"""
+
+from repro.kernels.ei_argmax.kernel import ei_argmax_kernel_call
+from repro.kernels.ei_argmax.ops import ei_argmax
+from repro.kernels.ei_argmax.tile import ei_from_sqdist
+
+__all__ = ["ei_argmax", "ei_argmax_kernel_call", "ei_from_sqdist"]

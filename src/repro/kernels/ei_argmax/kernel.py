@@ -1,0 +1,161 @@
+"""Fused posterior+EI+argmax Pallas kernel: streaming reduction over n-tiles.
+
+The candidate axis is the grid: tile i computes the (B,tile) distance block
+of its slice of the static (n,d) encoding against the (B,d) packed feature
+buffer, runs the shared EI tail (`tile.ei_from_sqdist`) on it, and folds
+the tile's (max EI, argmax index) into a running pair held in the two
+(1,)-shaped outputs — the flash-attention running-max idiom
+(`repro.kernels.flash_attention`), with the accumulator in the revisited
+output block instead of VMEM scratch because the carried state is two
+scalars, not a (block_q, d) tile.  The (B,n) block the unfused step
+materializes never exists: peak transient memory is O(B·tile).
+
+Tie-breaking is the load-bearing detail.  The unfused reference computes
+`jnp.argmax(ei)` over all n, which returns the FIRST maximizing index.
+Here each tile's `jnp.argmax` is first-within-tile, and the cross-tile
+update fires only on a STRICT `>` — a later tile that merely equals the
+running max never wins — so the composition returns the first maximizing
+index over all n.  `jnp.max` is exact (no rounding), so the streamed max
+is bitwise the full-width max.  Both properties are pinned by
+`tests/test_ei_argmax_kernel.py` (manufactured cross-tile EI ties) and the
+golden fixtures.
+
+Grid axis semantics are "arbitrary" (sequential): the running pair makes
+tile i+1 depend on tile i.
+
+The triangular solve: interpret mode (and therefore every CPU test lane)
+uses `jax.scipy.linalg.solve_triangular` inside the kernel body — bitwise
+identical to the reference lane's solve.  The compiled-TPU path substitutes
+`_forward_substitution` (a `fori_loop` forward solve; Mosaic has no
+triangular-solve primitive).  Its bits may differ from LAPACK's at the
+last ulp — the TPU backend is a different float32 context for the whole
+engine anyway; cross-lane bit-identity is only claimed per backend.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.gp import pairwise_sqdist
+from repro.kernels.ei_argmax.tile import ei_from_sqdist
+
+__all__ = ["ei_argmax_kernel_call"]
+
+# JAX 0.4.x spells the Mosaic compiler-params class `TPUCompilerParams`;
+# newer releases renamed it `CompilerParams`.  Accept either.
+_COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+
+def _forward_substitution(chol: jax.Array, rhs: jax.Array) -> jax.Array:
+    """Row-sweep forward solve of L x = rhs (L lower-triangular), written in
+    ops Mosaic lowers (dynamic row slice, masked contraction, fori_loop) —
+    the compiled-TPU stand-in for LAPACK's `solve_triangular`."""
+    b = chol.shape[0]
+    row_ids = jax.lax.broadcasted_iota(jnp.int32, (b, 1), 0)
+
+    def body(i, x):
+        below = (row_ids < i).astype(chol.dtype)  # rows j < i, as (b,1)
+        acc = jnp.sum(chol[i][:, None] * x * below, axis=0)
+        return x.at[i].set((rhs[i] - acc) / chol[i, i])
+
+    return jax.lax.fori_loop(0, b, body, jnp.zeros_like(rhs))
+
+
+def _kernel(
+    enc_ref,  # (tile, d) — this tile's slice of the static encoding
+    feats_ref,  # (B, d) — packed features of observed points
+    pm_ref,  # (B,) — packed-slot validity
+    alpha_ref,  # (B,)
+    chol_ref,  # (B, B)
+    scal_ref,  # (4,) — (lengthscale, y_mean, y_std, best) stacked
+    mask_ref,  # (tile,) bool — candidate mask slice
+    out_val_ref,  # (1,) f32 — running max EI
+    out_idx_ref,  # (1,) i32 — running argmax (global index)
+    *,
+    tile: int,
+    xi: float,
+    solve,
+):
+    ti = pl.program_id(0)
+
+    @pl.when(ti == 0)
+    def _init():
+        out_val_ref[...] = jnp.full_like(out_val_ref, -jnp.inf)
+        out_idx_ref[...] = jnp.zeros_like(out_idx_ref)
+
+    ls, y_mean, y_std, best = (
+        scal_ref[0], scal_ref[1], scal_ref[2], scal_ref[3],
+    )
+    d2 = pairwise_sqdist(feats_ref[...], enc_ref[...])
+    ei = ei_from_sqdist(
+        d2, pm_ref[...], alpha_ref[...], chol_ref[...],
+        ls, y_mean, y_std, best, mask_ref[...], xi, solve=solve,
+    )
+    tile_max = jnp.max(ei)
+    tile_idx = jnp.argmax(ei).astype(jnp.int32) + ti * tile
+
+    # Strict >: an equal later tile never displaces the running winner, so
+    # the lowest maximizing index survives — `jnp.argmax`'s contract.
+    @pl.when(tile_max > out_val_ref[0])
+    def _update():
+        out_val_ref[0] = tile_max
+        out_idx_ref[0] = tile_idx
+
+
+def ei_argmax_kernel_call(
+    enc: jax.Array,  # (n_pad, d) — encoding, zero-padded to a tile multiple
+    mask: jax.Array,  # (n_pad,) bool — candidate mask, False-padded
+    feats: jax.Array,  # (B, d)
+    pm: jax.Array,  # (B,)
+    alpha: jax.Array,  # (B,)
+    chol: jax.Array,  # (B, B)
+    scal: jax.Array,  # (4,) — (lengthscale, y_mean, y_std, best)
+    *,
+    tile: int,
+    xi: float,
+    interpret: bool,
+):
+    """((1,) f32 max EI, (1,) i32 argmax) over the masked candidates."""
+    n_pad, d = enc.shape
+    b = feats.shape[0]
+    if n_pad % tile:
+        raise ValueError(f"n_pad={n_pad} not a multiple of tile={tile}")
+    solve = (
+        functools.partial(jax.scipy.linalg.solve_triangular, lower=True)
+        if interpret
+        else _forward_substitution
+    )
+    kernel = functools.partial(_kernel, tile=tile, xi=xi, solve=solve)
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = _COMPILER_PARAMS(
+            dimension_semantics=("arbitrary",),  # running pair is carried
+        )
+    return pl.pallas_call(
+        kernel,
+        grid=(n_pad // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((b, d), lambda i: (0, 0)),
+            pl.BlockSpec((b,), lambda i: (0,)),
+            pl.BlockSpec((b,), lambda i: (0,)),
+            pl.BlockSpec((b, b), lambda i: (0, 0)),
+            pl.BlockSpec((4,), lambda i: (0,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=interpret,
+        **kwargs,
+    )(enc, feats, pm, alpha, chol, scal, mask)

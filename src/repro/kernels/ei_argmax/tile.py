@@ -1,0 +1,86 @@
+"""THE shared EI tail: posterior squared-distance block → masked EI values.
+
+Everything downstream of a raw squared-distance block — Matérn-5/2
+rescale, posterior mean/variance against the packed training factors,
+de-standardization, and Expected Improvement — lives in this ONE function.
+The unfused reference lane (`repro.core.fast_bo._packed_core`) calls it on
+the full (B,n) cross block; the fused lanes (the Pallas kernel body, its
+interpret-mode twin, and the `lax.scan` CPU lane in `.ops`) call it on
+(B,tile) blocks.  Sharing the function — not just the formulation — is
+what makes "fused ≡ feature" a structural property instead of a reviewed
+convention: the op sequence cannot drift between lanes.
+
+Float32 bit-discipline notes (XLA:CPU, pinned by `tests/
+test_ei_argmax_kernel.py` and the golden fixtures):
+
+  * Tiling the n axis of this tail is BITWISE invariant: every op is
+    either elementwise in n, or contracts only over B (`k_star.T @ alpha`,
+    the triangular solve, the `v*v` column sum), so a (B,tile) slice
+    computes exactly the bits of the corresponding (B,n) columns.
+  * The constants are PYTHON floats (`math.sqrt`), not `jnp` scalars: a
+    Pallas kernel body may not capture traced constants, and
+    float32(math.sqrt(2.0)) rounds to the identical bits as
+    float32(jnp.sqrt(2.0)) — the XLA lanes lose nothing.
+  * The solve is injectable: the CPU/interpret lanes use LAPACK's
+    `solve_triangular` (column-slice invariant — solving for a subset of
+    right-hand-side columns reproduces the full solve's bits), while the
+    compiled-TPU kernel substitutes a Mosaic-lowerable forward
+    substitution (`kernel._forward_substitution`); per-backend bits may
+    differ, exactly like the rest of the engine's per-backend float32
+    contract.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gp import matern52_from_sqdist
+
+__all__ = ["ei_from_sqdist"]
+
+_SQRT2 = math.sqrt(2.0)
+_SQRT2PI = math.sqrt(2.0 * math.pi)
+
+
+def _solve_lower(chol: jax.Array, rhs: jax.Array) -> jax.Array:
+    return jax.scipy.linalg.solve_triangular(chol, rhs, lower=True)
+
+
+def ei_from_sqdist(
+    d2: jax.Array,  # (B, m) raw squared distances, training rows × candidates
+    pm: jax.Array,  # (B,) f32 packed-slot validity (1.0 for slots < t)
+    alpha: jax.Array,  # (B,) K⁻¹ y_train for the selected hyperparameters
+    chol: jax.Array,  # (B, B) Cholesky factor of the masked training kernel
+    ls: jax.Array,  # () selected lengthscale
+    y_mean: jax.Array,  # () training-target mean
+    y_std: jax.Array,  # () training-target std (clamped)
+    best: jax.Array,  # () best observed cost (un-standardized)
+    mask: jax.Array,  # (m,) bool — candidate mask; False → EI = -inf
+    xi: float = 0.0,
+    *,
+    solve=_solve_lower,
+) -> jax.Array:
+    """Masked EI over the m candidate columns of ``d2``; (m,) float32.
+
+    ``m`` may be the full space extent n (the reference lane) or one tile
+    (the fused lanes) — the bits per column are identical either way.
+    """
+    k_star = matern52_from_sqdist(d2, ls) * pm[:, None]
+    mean_n = k_star.T @ alpha
+    v = solve(chol, k_star)
+    var_n = jnp.maximum(1.0 - jnp.sum(v * v, axis=0), 1e-12)
+    std_n = jnp.sqrt(var_n)
+
+    # De-standardize.
+    mean = mean_n * y_std + y_mean
+    std = std_n * y_std
+
+    improvement = best - mean - xi
+    z = improvement / jnp.maximum(std, 1e-12)
+    cdf = 0.5 * (1.0 + jax.scipy.special.erf(z / _SQRT2))
+    pdf = jnp.exp(-0.5 * z * z) / _SQRT2PI
+    ei = jnp.maximum(improvement * cdf + std * pdf, 0.0)
+    return jnp.where(mask, ei, -jnp.inf)

@@ -17,7 +17,9 @@ Timing: instead of a single noisy wall-clock warning (the host wobbles
 ±2×, so a fixed budget produced unattributable alarms), every run of the
 tier-1 lane reports its top-10 slowest tests and writes the full per-test
 timing table to `artifacts/tier1_timing.json` — regressions are pinned to
-a test, not to the weather.
+a test, not to the weather.  Tests carrying the `kernel` marker (the
+Pallas kernel-identity lane) additionally get a per-test 30 s attention
+flag in the summary.
 """
 
 import json
@@ -41,6 +43,14 @@ TIMING_JSON = os.path.abspath(
 )
 _SESSION_T0 = {"t0": None}
 _DURATIONS = {}  # nodeid -> summed setup+call+teardown seconds
+_KERNEL_NODES = set()  # nodeids carrying the `kernel` marker
+_KERNEL_BUDGET_S = 30.0  # per-test ceiling for the kernel-identity lane
+
+
+def pytest_collection_modifyitems(config, items):
+    for item in items:
+        if item.get_closest_marker("kernel") is not None:
+            _KERNEL_NODES.add(item.nodeid)
 
 
 def pytest_sessionstart(session):
@@ -67,6 +77,19 @@ def pytest_terminal_summary(terminalreporter, exitstatus, config):
     )
     for nodeid, dur in top:
         terminalreporter.write_line(f"  {dur:7.2f}s  {nodeid}")
+    # The kernel-identity lane rides tier-1, so each of its tests carries a
+    # hard attention budget: flag (don't fail) any kernel test over 30 s so
+    # a compile-time or interpreter regression is pinned the run it lands.
+    slow_kernel = sorted(
+        ((n, d) for n, d in _DURATIONS.items()
+         if n in _KERNEL_NODES and d > _KERNEL_BUDGET_S),
+        key=lambda kv: kv[1], reverse=True,
+    )
+    for nodeid, dur in slow_kernel:
+        terminalreporter.write_line(
+            f"KERNEL-LANE SLOW: {dur:.1f}s > {_KERNEL_BUDGET_S:.0f}s budget "
+            f"— {nodeid}", yellow=True,
+        )
     # Machine-readable trail for FULL tier-1 runs only: a file/-k-restricted
     # invocation (or another -m selection) has a different test population
     # and would overwrite the baseline with non-comparable numbers.

@@ -7,6 +7,9 @@ For each pinned scenario this runs the UNSHARDED feature-layout
 reference exists (the cold scenarios), cross-checks it trace-for-trace
 with `cherrypick_search`/`ruya_search` before writing the fixture — a
 fixture can only change when the reference numerics deliberately change.
+Every scenario is ALSO replayed through the fused streaming-kernel lane
+(``layout="fused"``, `repro.kernels.ei_argmax`) and must reproduce the
+reference outcomes `as_dict`-identically before anything is written.
 ``--check`` verifies the committed fixtures instead of rewriting them
 (exit 1 on drift).
 
@@ -89,6 +92,21 @@ def _sequential_crosscheck(name, outcomes):
     return len(refs)
 
 
+def _fused_crosscheck(name, outcomes):
+    """Replay the scenario on the fused streaming-kernel lane: the fixture
+    is only valid if ``layout="fused"`` reproduces every outcome dict
+    bit-for-bit (the kernel-identity contract of `repro.kernels.ei_argmax`
+    at the whole-session level)."""
+    from .scenarios import SCENARIOS
+
+    fused = SCENARIOS[name](layout="fused")
+    assert len(fused) == len(outcomes)
+    for j, (got, ref) in enumerate(zip(fused, outcomes)):
+        assert got.as_dict() == ref.as_dict(), (
+            f"{name} job {j}: fused lane diverged from feature reference"
+        )
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--check", action="store_true",
@@ -108,6 +126,7 @@ def main(argv=None) -> int:
             return 2
         outcomes = SCENARIOS[name]()  # unsharded, feature layout
         checked = _sequential_crosscheck(name, outcomes)
+        _fused_crosscheck(name, outcomes)
         payload = {
             "scenario": name,
             "engine": "TuningSession(layout='feature', shard=None)",
@@ -123,7 +142,8 @@ def main(argv=None) -> int:
                 committed = json.load(f)
             same = committed["outcomes"] == payload["outcomes"]
             print(f"{name}: {'OK' if same else 'DRIFT'} "
-                  f"({len(outcomes)} jobs, {checked} sequential-checked)")
+                  f"({len(outcomes)} jobs, {checked} sequential-checked, "
+                  f"fused-checked)")
             if not same:
                 drift.append(name)
             continue
@@ -131,7 +151,7 @@ def main(argv=None) -> int:
             json.dump(payload, f, indent=1, sort_keys=True)
             f.write("\n")
         print(f"wrote {path} ({len(outcomes)} jobs, "
-              f"{checked} sequential-checked)")
+              f"{checked} sequential-checked, fused-checked)")
     if drift:
         print(f"FIXTURE DRIFT: {drift}")
         return 1

@@ -3,6 +3,8 @@ in its seconds-scale smoke mode — donation check (including the (B,d)
 feature buffer), a small scaling-sweep point with trace verification AND
 the n = 32768 feature-buffer point (the 10⁴–10⁵ regime must stay wired:
 nothing of extent n² exists on that path, so it is seconds, not minutes),
+the fused streaming-kernel lane at both points (trace-checked against the
+feature lane, its transient-footprint collapse asserted at n = 32768),
 the `--shards` job-axis sharding sweep (entries recorded, sharded traces
 asserted identical to the lockstep reference), the streaming
 `TuningSession` scenario (recurring jobs in waves, warm-start amortization
@@ -46,12 +48,26 @@ def test_fleet_bench_smoke(tmp_path):
         assert r["feature_step_ms"] > 0.0
 
     small, large = rows
-    # The small point exercises all three layouts; the feature step must
+    # The small point exercises all four layouts; the feature step must
     # beat the dense full-extent step even at the smoke point (B=8, n=64);
     # the margin is large (>10x) so a loose bound survives this host's
     # ±2x wall-clock wobble.
     assert small["gather_traces_identical"]
     assert small["step_speedup_vs_dense"] > 2.0
+
+    # The fused streaming-kernel lane is timed, transient-probed, and
+    # trace-checked at EVERY sweep point — it has no n ceiling.
+    for r in rows:
+        assert r["fused_traces_identical"]
+        assert r["fused_step_ms"] > 0.0
+        assert r["fused_step_transient_mb"] > 0.0
+    # At n=32768 the fused claims must hold even in smoke mode: XLA's
+    # compiled transient footprint collapses (the (B,n) cross block is
+    # gone — ≥5x here at the smoke budget B=8; >20x at the full B=24
+    # protocol) and the fused step is no slower than the feature step
+    # beyond this host's wall-clock wobble.
+    assert large["fused_transient_reduction"] > 5.0
+    assert large["fused_step_ms"] <= 1.25 * large["feature_step_ms"]
 
     # The n=32768 point runs the feature buffer only: the dense step
     # (O(18n³)) and the gather layout (a 4 GiB (n,n) tensor per job) are

@@ -4,9 +4,10 @@ variant must reproduce the committed fixtures bit-for-bit.
 This is the acceptance harness of the sharded fleet engine: the three
 pinned scenarios (n = 69 exhaustion, n = 512 budgeted two-phase, and a
 streaming warm-start session — `tests/golden/scenarios.py`) are replayed
-through the unsharded reference AND across shard counts 2/4, on both
-packed-geometry layouts, and compared to `tests/golden/*.json` with the
-shared `assert_outcomes_match` helper.  The sequential per-job engine is
+through the unsharded reference AND across shard counts 2/4, on all three
+packed-geometry layouts — "feature", the retained d²-"gather", and the
+"fused" streaming-kernel lane (`repro.kernels.ei_argmax`) — and compared
+to `tests/golden/*.json` with the shared `assert_outcomes_match` helper.  The sequential per-job engine is
 pinned against the same fixtures, which closes the loop:
 
     sequential == golden == session(layout × shard count)
@@ -50,7 +51,7 @@ def _need_devices(shard):
 
 
 @pytest.mark.parametrize("shard", SHARD_COUNTS)
-@pytest.mark.parametrize("layout", ("feature", "gather"))
+@pytest.mark.parametrize("layout", ("feature", "gather", "fused"))
 @pytest.mark.parametrize("scenario", sorted(SCENARIOS))
 def test_scenario_matches_golden(scenario, layout, shard):
     _need_devices(shard)
