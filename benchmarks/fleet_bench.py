@@ -52,6 +52,21 @@ Four measurements; A–C are trace-checked against the sequential engine:
      asserted ≥ 95% under the schedule), wasted trials (the cancelled
      jobs' partial work), retry overhead (extra profiling attempts and
      charged backoff seconds), and straggler counts.
+  G. **Open-loop service fleet** — Poisson arrivals against the async
+     `TuningService` (`repro.fleet.service`) vs the global-lockstep
+     `TuningSession`, same pre-drawn arrival times on both sides, three
+     heterogeneous admission groups (24/96/384-config spaces → distinct
+     chunk shapes), and deterministic per-(group, iteration) straggler
+     stalls injected through the service's ``pace`` seam on one side
+     and an equivalent inline sleep in the single-threaded barrier loop
+     on the other.  Under lockstep every straggling group's stall
+     serializes through the barrier; under the service it stalls only
+     that group's dispatch thread.  Reports sustained jobs/sec
+     (completions over the first-arrival → last-completion window) and
+     p50/p99 job sojourn (completion − scheduled arrival); outcomes are
+     asserted bit-identical per job across the two drivers, and the
+     async side must sustain ≥ 1.3× the lockstep jobs/sec at the full
+     protocol (≥ 1.1× in smoke).
 
 The sweep also asserts **buffer donation**: the lockstep update consumes
 (donates) its input state, so each fleet iteration updates the observation
@@ -79,6 +94,7 @@ import json
 import os
 import resource
 import sys
+import threading
 import time
 from typing import List, Optional, Sequence, Tuple
 
@@ -697,6 +713,223 @@ def _report_adversarial(r: dict) -> None:
           f"({r['adversarial_s']:.2f} s)")
 
 
+# Workload G's heterogeneous admission groups: three space extents →
+# three distinct chunk shapes, each with its own dispatch loop under the
+# async service (the lockstep session barriers them together).
+_G_SPACE_NS = (24, 96, 384)
+
+
+def bench_open_loop(n_jobs: int, check: bool, *, smoke: bool = False) -> dict:
+    """Workload G: Poisson-arrival open-loop fleet, async vs lockstep.
+
+    ``n_jobs`` CherryPick jobs (budget 10) cycle over the three
+    `_G_SPACE_NS` spaces and arrive at pre-drawn Poisson times — the SAME
+    absolute schedule for both drivers, submitted open-loop (arrivals
+    never wait for completions).  Straggler stalls are a deterministic
+    per-(group key, group iteration) hash draw shared by both sides:
+
+      * async — `TuningService` with a ``pace`` hook that sleeps the
+        straggling group's OWN dispatch thread; the other groups keep
+        stepping (stall isolation across worker threads — default device
+        placement, since the forced host devices share the same cores);
+      * lockstep — a single-threaded barrier loop over `TuningSession`
+        internals that admits, then steps every live chunk, sleeping
+        inline once per straggling group per barrier — the stall
+        semantics of `TuningSession.step()`, where the slowest group
+        sets the whole fleet's pace.
+
+    Sojourn is completion minus *scheduled* arrival, so queueing delay
+    is charged to the driver; sustained jobs/sec is completions over the
+    first-arrival → last-completion window.  When ``check``, the two
+    drivers' outcomes must be bit-identical per job (chunk membership
+    and scheduling never touch traces) and the async side must clear the
+    committed throughput floor (1.3×; 1.1× in smoke, where the fleet is
+    too small to amortize thread spin-up).
+    """
+    from repro.cluster.faults import _hash_unit
+    from repro.fleet import FleetJob, TuningService, TuningSession
+
+    budget = 10
+    straggler_rate = 0.4
+    straggler_delay_s = 0.08
+    mean_gap_s = 0.010 if smoke else 0.005
+    spaces = [synthetic_space(n) for n in _G_SPACE_NS]
+    arrivals = np.cumsum(
+        np.random.default_rng(4242).exponential(mean_gap_s, size=n_jobs)
+    )
+
+    def make_jobs() -> List:  # fresh objects per driver — submit may annotate
+        return [
+            FleetJob(
+                name=f"g{i}",
+                space=spaces[i % len(spaces)][0],
+                cost_table=spaces[i % len(spaces)][1],
+            )
+            for i in range(n_jobs)
+        ]
+
+    def session_kwargs() -> dict:
+        return dict(
+            settings=BOSettings(max_iters=budget), mode="cherrypick",
+            to_exhaustion=True, warm_start=False,
+        )
+
+    def straggles(key: tuple, iteration: int) -> bool:
+        return (
+            _hash_unit("workloadG", str(key), str(iteration))
+            < straggler_rate
+        )
+
+    def completion_clock(session) -> dict:
+        done = {}
+
+        def listener(outcome):  # fires under the session lock — keep tiny
+            done[outcome.name] = time.perf_counter()
+
+        session._outcome_listeners.append(listener)
+        return done
+
+    def submit_at_arrivals(submit, jobs, t0: float) -> None:
+        for i, (job, at) in enumerate(zip(jobs, arrivals)):
+            lag = (t0 + at) - time.perf_counter()
+            if lag > 0:
+                time.sleep(lag)
+            submit(job, seed=3000 + i)
+
+    def stats(done: dict, t0: float) -> dict:
+        sojourns = [done[f"g{i}"] - (t0 + arrivals[i]) for i in range(n_jobs)]
+        span = max(done.values()) - (t0 + arrivals[0])
+        return {
+            "jobs_per_sec": n_jobs / span,
+            "makespan_s": span,
+            "sojourn_p50_s": float(np.percentile(sojourns, 50)),
+            "sojourn_p99_s": float(np.percentile(sojourns, 99)),
+        }
+
+    # Warm every lockstep program the drivers can hit: admission timing
+    # decides chunk ROW extents (2..8 after single-job padding), and a
+    # mid-run compile would otherwise be charged as scheduling time.
+    for space, table in spaces:
+        warm = TuningSession(**session_kwargs())
+        for rows in range(2, _CHUNK + 1):
+            for i in range(rows):
+                warm.submit(
+                    FleetJob(name=f"w{rows}-{i}", space=space,
+                             cost_table=table),
+                    seed=i,
+                )
+            warm.drain()
+
+    def run_lockstep():
+        session = TuningSession(**session_kwargs())
+        done = completion_clock(session)
+        jobs = make_jobs()
+        t0 = time.perf_counter()
+        feeder = threading.Thread(
+            target=submit_at_arrivals, args=(session.submit, jobs, t0),
+            name="g-lockstep-feeder", daemon=True,
+        )
+        feeder.start()
+        iters: dict = {}
+        while True:
+            with session._lock:
+                session._admit()
+                chunks = list(session._chunks)
+            if not chunks:
+                if not feeder.is_alive():
+                    with session._lock:
+                        if not session._pending and not session._chunks:
+                            break
+                time.sleep(0.001)
+                continue
+            paced = set()
+            for ch in chunks:
+                key = ch.group_key
+                if key not in paced:
+                    # One straggler draw per group per barrier — identical
+                    # injection law to the async pace hook, but the sleep
+                    # happens on the ONLY stepping thread: every other
+                    # group waits out the stall (the lockstep pathology).
+                    paced.add(key)
+                    iters[key] = iters.get(key, 0) + 1
+                    if straggles(key, iters[key]):
+                        time.sleep(straggler_delay_s)
+                session._step_chunk(ch)
+        feeder.join()
+        outs = session.drain()
+        return stats(done, t0), outs
+
+    def run_async():
+        session = TuningSession(**session_kwargs())
+        done = completion_clock(session)
+
+        def pace(key: tuple, iteration: int) -> None:
+            if straggles(key, iteration):
+                time.sleep(straggler_delay_s)  # stalls this group only
+
+        # devices=None: forced host "devices" share the same CPU cores, and
+        # XLA caches executables PER DEVICE — round-robin placement would
+        # recompile every (space, rows) program per device and charge it
+        # as scheduling time.  Stall isolation is a thread property here.
+        svc = TuningService(session, pace=pace, devices=None)
+        jobs = make_jobs()
+        t0 = time.perf_counter()
+        submit_at_arrivals(svc.submit, jobs, t0)
+        outs = svc.drain()
+        m = svc.metrics()
+        svc.shutdown(drain=False)
+        return stats(done, t0), outs, m
+
+    lock_stats, lock_outs = run_lockstep()
+    async_stats, async_outs, metrics = run_async()
+
+    if check:
+        by_lock = {o.name: o.as_dict() for o in lock_outs}
+        by_async = {o.name: o.as_dict() for o in async_outs}
+        assert by_lock == by_async, (
+            "open-loop async outcomes diverged from the lockstep session"
+        )
+
+    speedup = async_stats["jobs_per_sec"] / lock_stats["jobs_per_sec"]
+    floor = 1.1 if smoke else 1.3
+    if check:
+        assert speedup >= floor, (
+            f"async service sustained only {speedup:.2f}x the lockstep "
+            f"jobs/sec under straggler injection (floor {floor}x)"
+        )
+    return {
+        "n_jobs": n_jobs,
+        "space_ns": list(_G_SPACE_NS),
+        "budget": budget,
+        "mean_interarrival_s": mean_gap_s,
+        "straggler_rate": straggler_rate,
+        "straggler_delay_s": straggler_delay_s,
+        "lockstep": lock_stats,
+        "async": async_stats,
+        "speedup_jobs_per_sec": speedup,
+        "speedup_floor": floor,
+        "traces_identical": bool(check) if check else None,
+        "service_groups": len(metrics["groups"]),
+        "service_jobs_per_sec": metrics["jobs_per_sec"],
+    }
+
+
+def _report_open_loop(r: dict) -> None:
+    print(f"  G. open-loop service fleet ({r['n_jobs']} Poisson arrivals, "
+          f"mean gap {1e3 * r['mean_interarrival_s']:.0f} ms, "
+          f"{r['service_groups']} admission groups, stragglers at "
+          f"{r['straggler_rate']} x {1e3 * r['straggler_delay_s']:.0f} ms)")
+    for tag in ("lockstep", "async"):
+        s = r[tag]
+        print(f"    {tag:8s}: {s['jobs_per_sec']:6.2f} jobs/s  "
+              f"sojourn p50 {1e3 * s['sojourn_p50_s']:7.1f} ms  "
+              f"p99 {1e3 * s['sojourn_p99_s']:7.1f} ms  "
+              f"(makespan {s['makespan_s']:.2f} s)")
+    print(f"    sustained throughput: {r['speedup_jobs_per_sec']:.2f}x "
+          f"async vs lockstep (floor {r['speedup_floor']}x, traces "
+          f"{'identical' if r['traces_identical'] else 'UNCHECKED'})")
+
+
 def bench_paper_replay(jobs, check: bool, settings: BOSettings) -> dict:
     """Workload A: full two-phase Ruya search over the 69-config space."""
     n_jobs = len(jobs)
@@ -985,6 +1218,13 @@ def run(n_jobs: int = 64, check: bool = True,
         )
         _report_adversarial(adv)
         out["adversarial"] = adv
+        # Open-loop wiring check: 12 Poisson arrivals over the three
+        # admission groups — big enough for every group to live, small
+        # enough to stay seconds-scale; the ≥1.1x smoke floor still holds
+        # because straggler stalls dominate both drivers' wall clock.
+        g = bench_open_loop(12, check, smoke=True)
+        _report_open_loop(g)
+        out["open_loop"] = g
 
     if not smoke:
         jobs = build_fleet(n_jobs)
@@ -1014,8 +1254,13 @@ def run(n_jobs: int = 64, check: bool = True,
         # including one permanently broken job.
         adv = bench_adversarial(n_jobs, check, settings)
         _report_adversarial(adv)
+        # Workload G: the open-loop Poisson fleet, async service vs
+        # lockstep session under straggler injection (≥1.3x floor).
+        g = bench_open_loop(n_jobs, check)
+        _report_open_loop(g)
         out.update({"paper_replay": a, "priority_service": b,
-                    "session_streaming": d, "adversarial": adv})
+                    "session_streaming": d, "adversarial": adv,
+                    "open_loop": g})
         with open(artifact_path("fleet", f"fleet_bench_{n_jobs}.json"), "w") as f:
             json.dump(out, f, indent=1)
 

@@ -76,7 +76,7 @@ def part3_serve(spec, state):
     print("\n=== 3. Serve it: prefill + batched greedy decode ===")
     from repro.models import Model
     from repro.models.spec import is_spec
-    from repro.runtime.serve import ServeLoop
+    from repro.runtime.decode_loop import ServeLoop
     from repro.runtime.steps import make_serve_steps
 
     model = Model(spec.model)

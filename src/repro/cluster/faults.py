@@ -25,6 +25,12 @@ to preserve them:
     feed the §III-B calibration loop, and touching them would change sweep
     sizes, profiles, splits, and finally traces.
 
+Stall isolation: under the async service (`repro.fleet.service`) a
+straggler-stalled trial slows only its own admission group's dispatch
+thread — other groups keep stepping at their own pace, which is exactly
+what the open-loop straggler bench (workload G, `benchmarks/fleet_bench`)
+measures against the global-lockstep driver.
+
 Stochastic transients are capped by ``max_injected`` so a retried call
 site is GUARANTEED to succeed within ``max_injected + 1`` attempts — pick
 it below the retry policy's ``max_attempts`` and an adversarial schedule
@@ -39,6 +45,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import threading
 from typing import Callable, Tuple
 
 from repro.core.profiler import PermanentRunError, TransientRunError
@@ -93,32 +100,44 @@ class FaultPlan:
         whole point: a retried profiling attempt draws FRESH fault
         decisions while replaying identical successful readings) and an
         injected-fault budget.  Successful calls pass through untouched.
+
+        The counters live behind a lock: seed-replica fleets alias one
+        wrapped run fn across jobs, and with the async service those
+        jobs submit from concurrent threads — the fault DECISION
+        (counter read-increment plus injection-budget check) is atomic,
+        while the successful ``run`` call itself executes outside the
+        lock (it is deterministic in the sample size, so concurrent
+        passes don't contend on profiling).
         """
+        lock = threading.Lock()
         calls = [0]
         injected = [0]
 
         def faulty(sample: float) -> Tuple[float, float]:
-            i = calls[0]
-            calls[0] += 1
-            if self.permanent:
-                raise PermanentRunError(
-                    f"{key}: run {i} failed permanently (injected)"
-                )
-            if i < self.transient_run_failures:
-                raise TransientRunError(
-                    f"{key}: run {i} failed transiently (scripted)"
-                )
-            if (
-                self.transient_rate > 0.0
-                and injected[0] < self.max_injected
-                and _hash_unit("fault", str(self.seed), key, "run", str(i))
-                < self.transient_rate
-            ):
-                injected[0] += 1
-                raise TransientRunError(
-                    f"{key}: run {i} failed transiently (injected "
-                    f"{injected[0]}/{self.max_injected})"
-                )
+            with lock:
+                i = calls[0]
+                calls[0] += 1
+                if self.permanent:
+                    raise PermanentRunError(
+                        f"{key}: run {i} failed permanently (injected)"
+                    )
+                if i < self.transient_run_failures:
+                    raise TransientRunError(
+                        f"{key}: run {i} failed transiently (scripted)"
+                    )
+                if (
+                    self.transient_rate > 0.0
+                    and injected[0] < self.max_injected
+                    and _hash_unit(
+                        "fault", str(self.seed), key, "run", str(i)
+                    )
+                    < self.transient_rate
+                ):
+                    injected[0] += 1
+                    raise TransientRunError(
+                        f"{key}: run {i} failed transiently (injected "
+                        f"{injected[0]}/{self.max_injected})"
+                    )
             return run(sample)
 
         return faulty

@@ -47,6 +47,17 @@ Session-era paths ride the same step with zero new device code (PR 4):
                      device code, and its vmap-independent chunk-mates'
                      traces are untouched by construction (pinned
                      bit-identical by the golden disturbed-fleet scenario)
+    per-group        the async service (PR 9, repro.fleet.service) drives
+    dispatch         each admission group's chunks from its own host
+                     thread — the device program is the unchanged chunk
+                     step; only WHO calls it and WHEN changes, plus an
+                     optional committed device placement per group.
+                     Because vmap rows are independent and row extents
+                     stay inside the f32 batch-extent-invariant [2, 8]
+                     window, chunk membership and step interleaving are
+                     trace-neutral: the async schedule is pinned
+                     bit-identical to the lockstep drain by the
+                     golden-through-service and interleaving-fuzz lanes
 
 The d²-gather layout paid a one-off O(n²·d) `precompute_d2` per search and
 held the (n,n) tensor for its whole lifetime — an O(n²) memory wall that

@@ -28,12 +28,19 @@ negligible per-job overhead.  This package provides:
     jitter for transient profiling-run failures; permanent failures
     fast-fail into first-class "failed" outcomes (`FleetFailedError` only
     when a drain is waiting on nothing else).
+  * `service.TuningService` — the async daemon over a session: one host
+    thread per live admission group drives its own dispatch loop at its
+    own pace (no global lockstep barrier), thread-safe `submit()` with
+    bounded-queue backpressure (`ServiceSaturated`), graceful shutdown,
+    and a JSON metrics surface — bit-identical per job to the lockstep
+    drain under any thread interleaving (pinned by `tests/test_service.py`).
 """
 
 from repro.fleet.batched_engine import BatchedTrace, batched_search
 from repro.fleet.driver import FleetJob, cluster_fleet, replay_seeds, tune_fleet
 from repro.fleet.profile_cache import MemorySignature, ProfileCache
 from repro.fleet.retry import RetryPolicy, RetryStats, call_with_retry
+from repro.fleet.service import ServiceSaturated, TuningService
 from repro.fleet.sharding import resolve_shard_devices
 from repro.fleet.session import (
     FleetFailedError,
@@ -59,6 +66,8 @@ __all__ = [
     "call_with_retry",
     "resolve_shard_devices",
     "SearchOutcome",
+    "ServiceSaturated",
     "TrialRecord",
+    "TuningService",
     "TuningSession",
 ]

@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import threading
 from typing import Callable, Dict, Optional, Tuple
 
 from repro.core.memory_model import MemoryCategory, MemoryModel, fit_memory_model
@@ -100,6 +101,16 @@ class ProfileCache:
     probe bucket and files under its own full-fit signature.  Callers
     (the `TuningSession`) additionally skip warm-seeding a flagged job
     from the stale class's trial history.
+
+    Thread safety: a cache may be shared by concurrent submitters (the
+    async `TuningService`, or several sessions).  Every class-table
+    mutation and the whole `get_or_profile` decision run under ``lock``
+    (re-entrant, exposed) — the probe-classify → hit/miss → store
+    sequence is one atomic unit, so two threads probing into the same
+    empty bucket cannot both "miss" and double-profile, and the counters
+    stay consistent.  ``last_drift`` is a per-call report: a caller that
+    needs it must read it while still holding ``lock`` (the session's
+    profile resolution does exactly that).
     """
 
     def __init__(
@@ -108,6 +119,7 @@ class ProfileCache:
         slope_resolution: float = 0.5,
         intercept_quantum: float = 4.0 * _GiB,
     ) -> None:
+        self.lock = threading.RLock()
         self._store: Dict[MemorySignature, ProfileResult] = {}
         self._slope_resolution = slope_resolution
         self._intercept_quantum = intercept_quantum
@@ -118,7 +130,8 @@ class ProfileCache:
         self.probe_time_s = 0.0
 
     def __len__(self) -> int:
-        return len(self._store)
+        with self.lock:
+            return len(self._store)
 
     def signature(self, model: MemoryModel) -> MemorySignature:
         return MemorySignature.of(
@@ -128,10 +141,12 @@ class ProfileCache:
         )
 
     def get(self, sig: MemorySignature) -> Optional[ProfileResult]:
-        return self._store.get(sig)
+        with self.lock:
+            return self._store.get(sig)
 
     def put(self, sig: MemorySignature, profile: ProfileResult) -> None:
-        self._store[sig] = profile
+        with self.lock:
+            self._store[sig] = profile
 
     def model_drifted(
         self, probe: MemoryModel, cached: MemoryModel, tolerance: float
@@ -165,33 +180,39 @@ class ProfileCache:
         With ``drift_tolerance`` set, a cached hit whose coarse probe fit
         has drifted beyond the tolerance is refused and the job is
         re-profiled and re-classed (see the class docstring);
-        ``last_drift`` reports the decision for the latest call.
+        ``last_drift`` reports the decision for the latest call (read it
+        under ``lock`` when other threads share the cache).
+
+        The whole call holds ``lock``: the emulated run fns are cheap, and
+        releasing it between the probe and the store would let two threads
+        double-profile one class (and tear the hit/miss counters).
         """
-        coarse, probe_s = probe_memory_model(run, full_input_size)
-        self.probe_time_s += probe_s
-        sig = self.signature(coarse)
-        self.last_drift = False
-        cached = self._store.get(sig)
-        if cached is not None:
-            if drift_tolerance is None or not self.model_drifted(
-                coarse, cached.model, drift_tolerance
-            ):
-                self.hits += 1
-                return cached
-            self.last_drift = True
-            self.drift_reprofiles += 1
-        else:
-            self.misses += 1
-        profile = profile_job(run, full_input_size, **profile_kwargs)
-        if self.last_drift:
-            # Re-class: the fresh profile REPLACES the stale class entry
-            # under the probe bucket and files under its own full fit.
-            self._store[sig] = profile
-            self._store[self.signature(profile.model)] = profile
-        else:
-            # Store under the probe signature (the lookup key future jobs
-            # will compute) and the full-fit signature, which can differ
-            # on noisy jobs.
-            self._store.setdefault(sig, profile)
-            self._store.setdefault(self.signature(profile.model), profile)
-        return profile
+        with self.lock:
+            coarse, probe_s = probe_memory_model(run, full_input_size)
+            self.probe_time_s += probe_s
+            sig = self.signature(coarse)
+            self.last_drift = False
+            cached = self._store.get(sig)
+            if cached is not None:
+                if drift_tolerance is None or not self.model_drifted(
+                    coarse, cached.model, drift_tolerance
+                ):
+                    self.hits += 1
+                    return cached
+                self.last_drift = True
+                self.drift_reprofiles += 1
+            else:
+                self.misses += 1
+            profile = profile_job(run, full_input_size, **profile_kwargs)
+            if self.last_drift:
+                # Re-class: the fresh profile REPLACES the stale class entry
+                # under the probe bucket and files under its own full fit.
+                self._store[sig] = profile
+                self._store[self.signature(profile.model)] = profile
+            else:
+                # Store under the probe signature (the lookup key future jobs
+                # will compute) and the full-fit signature, which can differ
+                # on noisy jobs.
+                self._store.setdefault(sig, profile)
+                self._store.setdefault(self.signature(profile.model), profile)
+            return profile

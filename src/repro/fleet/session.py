@@ -63,9 +63,11 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import threading
 import weakref
 from typing import (
-    Dict, List, Optional, Sequence, Set, Tuple, TYPE_CHECKING, Union,
+    Callable, Dict, List, Optional, Sequence, Set, Tuple, TYPE_CHECKING,
+    Union,
 )
 
 import numpy as np
@@ -334,8 +336,9 @@ class JobHandle:
         session = self._session()
         if session is None:
             return "detached"  # session dropped before the job finished
-        if any(r.handle.uid == self.uid for r in session._pending):
-            return "pending"
+        with session._lock:
+            if any(r.handle.uid == self.uid for r in session._pending):
+                return "pending"
         return "running"
 
     def cancel(self) -> bool:
@@ -397,13 +400,17 @@ class _LiveChunk:
     device (the update leaves done rows untouched), and retirement skips
     the tombstone.  ``n_shards`` records the leading shard axis extent
     (1 = plain single-device chunk) for host-side row collapsing.
+
+    ``group_key`` is the admission-group identity ((space shape, packed
+    capacity)) — the unit the async service schedules: every chunk of one
+    key is stepped by the same group thread (`repro.fleet.service`).
     """
 
     __slots__ = ("state", "args", "members", "capacity", "update",
-                 "steps_done", "steps_needed", "n_shards")
+                 "steps_done", "steps_needed", "n_shards", "group_key")
 
     def __init__(self, state, args, members, capacity, update,
-                 steps_needed, n_shards=1):
+                 steps_needed, n_shards=1, group_key=None):
         self.state = state
         self.args = args
         self.members = members
@@ -412,6 +419,7 @@ class _LiveChunk:
         self.steps_done = 0
         self.steps_needed = steps_needed
         self.n_shards = n_shards
+        self.group_key = group_key
 
 
 class _SpaceEntry:
@@ -528,6 +536,21 @@ class TuningSession:
             None if drift_tolerance is None else float(drift_tolerance)
         )
 
+        # Lock discipline (the async service, `repro.fleet.service`, steps
+        # chunks from per-group host threads): every access to the shared
+        # mutable session state — pending queue, chunk list, outcome /
+        # history / cache tables — and every chunk state transition happens
+        # under this re-entrant lock.  Device WAITS happen outside it
+        # (`_step_chunk` captures the state ref under the lock, then blocks
+        # on the device queue unlocked), so a slow group's compute never
+        # stalls another group's dispatch.  The single-threaded paths
+        # (`step()`/`drain()`) take the same lock — uncontended acquisition
+        # is nanoseconds against millisecond-scale chunk steps.
+        self._lock = threading.RLock()
+        # Called (under the lock) with each published SearchOutcome — the
+        # service hooks this for completion signalling and metrics.
+        self._outcome_listeners: List[Callable[[SearchOutcome], None]] = []
+
         self.warm_hits = 0  # jobs that were seeded
         self.warm_trials = 0  # total seeded observations
         self.drift_events: List[str] = []  # job names flagged as drifted
@@ -580,7 +603,31 @@ class TuningSession:
         "failed" — no exception, the rest of the fleet is unaffected.
         ``job_priority`` ranks the job for `preempt_below` (higher keeps
         running; it does not affect scheduling otherwise).
+
+        Thread-safe: concurrent submitters serialize on the session lock
+        (the warm-start history snapshot, the scripted init draw, and the
+        pending-queue append are one atomic unit — a submission is a
+        deterministic function of the class history it observed).
         """
+        with self._lock:
+            return self._submit_locked(
+                job, rng, seed=seed, mode=mode, priority=priority,
+                remaining=remaining, warm_start=warm_start,
+                job_priority=job_priority,
+            )
+
+    def _submit_locked(
+        self,
+        job: "FleetJob",
+        rng: Optional[np.random.Generator] = None,
+        *,
+        seed: Optional[int] = None,
+        mode: Optional[str] = None,
+        priority: Optional[Sequence[int]] = None,
+        remaining: Optional[Sequence[int]] = None,
+        warm_start: Optional[bool] = None,
+        job_priority: int = 0,
+    ) -> JobHandle:
         if (rng is None) == (seed is None):
             raise ValueError("provide exactly one of rng / seed")
         if rng is None:
@@ -721,30 +768,118 @@ class TuningSession:
         """Admit pending jobs into lockstep chunks, then advance every live
         chunk by ONE batched BO iteration.  Returns the number of jobs still
         unfinished (0 → everything has retired)."""
-        self._admit()
-        live: List[_LiveChunk] = []
-        for ch in self._chunks:
-            if all(m is None for m in ch.members):
-                # Every member was retired mid-flight (cancel/fail/preempt)
-                # and published already — drop the chunk without stepping.
-                continue
-            ch.state = ch.update(ch.state, ch.args)
-            ch.steps_done += 1
-            retire = ch.steps_done >= ch.steps_needed
-            if (
-                not retire
-                and not self.to_exhaustion
-                and ch.steps_done % _POLL_PERIOD == 0
-            ):
-                retire = bool(jnp.all(ch.state.done))
-            if retire:
-                self._retire(ch)
-            else:
-                live.append(ch)
-        self._chunks = live
+        with self._lock:
+            self._admit()
+            chunks = list(self._chunks)
+        for ch in chunks:
+            self._step_chunk(ch)
+        with self._lock:
+            return self._unfinished()
+
+    def _unfinished(self) -> int:
+        """Jobs not yet published (pending + live chunk members); caller
+        holds the lock."""
         return sum(
             sum(1 for m in c.members if m is not None) for c in self._chunks
         ) + len(self._pending)
+
+    # ------------------------------------------- async-scheduling surface
+    #
+    # Engine-level primitives for `repro.fleet.service`: one group thread
+    # per live (space shape, capacity) key drives its own chunks through
+    # `_step_chunk` at its own pace, admitting ITS pending jobs at its own
+    # iteration boundary.  Chunk membership never affects traces (vmap rows
+    # are independent, extents stay in the invariant [2, 8] window), so the
+    # async schedule is bit-identical per job to the lockstep one — the
+    # golden fixtures pin it through the service lanes.
+
+    def _pending_group_keys(self) -> Set[tuple]:
+        """Admission-group keys with pending submissions."""
+        with self._lock:
+            return {(rec.enc.shape, rec.budget) for rec in self._pending}
+
+    def _chunks_for(self, key: tuple) -> List["_LiveChunk"]:
+        """Live chunks of one admission group (snapshot)."""
+        with self._lock:
+            return [ch for ch in self._chunks if ch.group_key == key]
+
+    def _admit_group(self, key: tuple, device=None) -> int:
+        """Admit every pending job of ONE admission group into chunks —
+        the per-group half of `_admit`, run by that group's thread at its
+        own iteration boundary.  ``device`` pins the new chunks' buffers
+        (and therefore their compute) to one device, letting the service
+        spread groups across the host topology; None keeps the default
+        placement.  Returns the number of jobs admitted."""
+        with self._lock:
+            members = [
+                rec for rec in self._pending
+                if (rec.enc.shape, rec.budget) == key
+            ]
+            if not members:
+                return 0
+            self._pending = [
+                rec for rec in self._pending
+                if (rec.enc.shape, rec.budget) != key
+            ]
+            shape, cap = key
+            n_init_slots = max(1, max(len(r.init_list) for r in members))
+            if self.shard_devices is not None:
+                self._chunks.extend(
+                    self._build_sharded(members, shape, cap, n_init_slots)
+                )
+                return len(members)
+            for lo in range(0, len(members), _CHUNK):
+                self._chunks.append(
+                    self._build_chunk(
+                        members[lo : lo + _CHUNK], shape, cap, n_init_slots,
+                        device=device,
+                    )
+                )
+            return len(members)
+
+    def _step_chunk(self, ch: "_LiveChunk") -> str:
+        """Advance ONE chunk by one BO iteration; retire it if finished.
+
+        Returns "stepped" (still live), "retired" (outcomes published),
+        "dead" (every member was terminated mid-flight and published
+        already), or "gone" (the chunk left `_chunks` under our feet — a
+        concurrent `reshard` rebuilt the fleet; its rows were resumed into
+        new chunks, nothing to do).
+
+        All state transitions happen under the session lock — `cancel`'s
+        mid-flight kill swaps `state.done`, and the update donates the old
+        state's buffers, so an unlocked reader could touch deleted arrays.
+        Device WAITS (the done-flag poll, the pre-retirement sync) happen
+        OUTSIDE the lock on a captured state reference: only this chunk's
+        owner ever advances it, so the captured buffers cannot be donated
+        from under the wait."""
+        with self._lock:
+            if ch not in self._chunks:
+                return "gone"
+            if all(m is None for m in ch.members):
+                self._chunks.remove(ch)
+                return "dead"
+            ch.state = ch.update(ch.state, ch.args)
+            ch.steps_done += 1
+            retire = ch.steps_done >= ch.steps_needed
+            poll = (
+                not retire
+                and not self.to_exhaustion
+                and ch.steps_done % _POLL_PERIOD == 0
+            )
+            done_flags = ch.state.done if (poll or retire) else None
+        if poll:
+            # Blocks on this chunk's device queue only.
+            retire = bool(jnp.all(done_flags))
+        if not retire:
+            return "stepped"
+        jax.block_until_ready(done_flags)
+        with self._lock:
+            if ch not in self._chunks:
+                return "gone"
+            self._retire(ch)
+            self._chunks.remove(ch)
+            return "retired"
 
     def drain(self) -> List[SearchOutcome]:
         """Step until every submitted job has finished; returns all outcomes
@@ -756,28 +891,37 @@ class TuningSession:
         `fail`s) — ends with status "failed".  All outcomes stay available
         via `results()`; a mixed fleet — some failed, some finished —
         returns normally."""
-        waiting = {rec.handle.uid for rec in self._live_recs()}
-        waiting.update(self._failed_since_drain)
-        self._failed_since_drain = []
+        with self._lock:
+            waiting = {rec.handle.uid for rec in self._live_recs()}
+            waiting.update(self._failed_since_drain)
+            self._failed_since_drain = []
         while self._pending or self._chunks:
             self.step()
-        if waiting:
-            outs = [self._outcomes.get(uid) for uid in sorted(waiting)]
-            if all(o is not None and o.status == "failed" for o in outs):
-                names = [o.name for o in outs]
-                raise FleetFailedError(
-                    f"all {len(names)} job(s) this drain was waiting on "
-                    f"permanently failed: {names} — outcomes remain "
-                    "available via results()"
-                )
+        self._check_all_failed(waiting)
         return self.results()
+
+    def _check_all_failed(self, waiting: Set[int]) -> None:
+        """The drain guard (see `drain`); shared with the async service's
+        own drain, which waits on worker threads instead of stepping."""
+        if not waiting:
+            return
+        with self._lock:
+            outs = [self._outcomes.get(uid) for uid in sorted(waiting)]
+        if all(o is not None and o.status == "failed" for o in outs):
+            names = [o.name for o in outs]
+            raise FleetFailedError(
+                f"all {len(names)} job(s) this drain was waiting on "
+                f"permanently failed: {names} — outcomes remain "
+                "available via results()"
+            )
 
     def results(self) -> List[SearchOutcome]:
         """Outcomes of all FINISHED jobs, in submission order."""
-        return [
-            self._outcomes[h.uid] for h in self._order
-            if h.uid in self._outcomes
-        ]
+        with self._lock:
+            return [
+                self._outcomes[h.uid] for h in self._order
+                if h.uid in self._outcomes
+            ]
 
     def outcome(self, handle: JobHandle) -> SearchOutcome:
         return handle.outcome()
@@ -812,13 +956,14 @@ class TuningSession:
         """Preempt every live job whose submit-time ``job_priority`` is
         below ``min_priority`` (default priority is 0, so any positive
         floor evicts unranked work).  Returns the preempted handles."""
-        victims = [
-            rec.handle for rec in self._live_recs()
-            if rec.job_priority < min_priority
-        ]
-        for handle in victims:
-            self._terminate(handle, "preempted")
-        return victims
+        with self._lock:
+            victims = [
+                rec.handle for rec in self._live_recs()
+                if rec.job_priority < min_priority
+            ]
+            for handle in victims:
+                self._terminate(handle, "preempted")
+            return victims
 
     def _live_recs(self) -> List[_JobRec]:
         """Every unfinished submission: pending plus live chunk members."""
@@ -828,6 +973,12 @@ class TuningSession:
         return recs
 
     def _terminate(
+        self, handle: JobHandle, status: str, reason: Optional[str] = None
+    ) -> bool:
+        with self._lock:
+            return self._terminate_locked(handle, status, reason)
+
+    def _terminate_locked(
         self, handle: JobHandle, status: str, reason: Optional[str] = None
     ) -> bool:
         if handle._outcome is not None:
@@ -899,40 +1050,41 @@ class TuningSession:
         disturbed-fleet scenario.  Pending jobs are untouched (they admit
         at the next `step()` under the new layout).  Returns the number of
         live searches re-bundled."""
-        self.shard_devices = resolve_shard_devices(shard, devices)
-        survivors: List[Tuple[_JobRec, FleetState]] = []
-        for ch in self._chunks:
-            rows = collapse_rows(ch.state, ch.n_shards)
-            for i, rec in enumerate(ch.members):
-                if rec is None:
+        with self._lock:
+            self.shard_devices = resolve_shard_devices(shard, devices)
+            survivors: List[Tuple[_JobRec, FleetState]] = []
+            for ch in self._chunks:
+                rows = collapse_rows(ch.state, ch.n_shards)
+                for i, rec in enumerate(ch.members):
+                    if rec is None:
+                        continue
+                    row = jax.tree_util.tree_map(lambda x, _i=i: x[_i], rows)
+                    survivors.append((rec, row))
+            self._chunks = []
+            groups: Dict[tuple, List[Tuple[_JobRec, FleetState]]] = {}
+            for rec, row in survivors:
+                groups.setdefault((rec.enc.shape, rec.budget), []).append(
+                    (rec, row)
+                )
+            for (shape, cap), pairs in groups.items():
+                members = [p[0] for p in pairs]
+                resume = [p[1] for p in pairs]
+                n_init_slots = max(1, max(len(r.init_list) for r in members))
+                if self.shard_devices is not None:
+                    self._chunks.extend(
+                        self._build_sharded(
+                            members, shape, cap, n_init_slots, resume=resume
+                        )
+                    )
                     continue
-                row = jax.tree_util.tree_map(lambda x, _i=i: x[_i], rows)
-                survivors.append((rec, row))
-        self._chunks = []
-        groups: Dict[tuple, List[Tuple[_JobRec, FleetState]]] = {}
-        for rec, row in survivors:
-            groups.setdefault((rec.enc.shape, rec.budget), []).append(
-                (rec, row)
-            )
-        for (shape, cap), pairs in groups.items():
-            members = [p[0] for p in pairs]
-            resume = [p[1] for p in pairs]
-            n_init_slots = max(1, max(len(r.init_list) for r in members))
-            if self.shard_devices is not None:
-                self._chunks.extend(
-                    self._build_sharded(
-                        members, shape, cap, n_init_slots, resume=resume
+                for lo in range(0, len(members), _CHUNK):
+                    self._chunks.append(
+                        self._build_chunk(
+                            members[lo : lo + _CHUNK], shape, cap,
+                            n_init_slots, resume=resume[lo : lo + _CHUNK],
+                        )
                     )
-                )
-                continue
-            for lo in range(0, len(members), _CHUNK):
-                self._chunks.append(
-                    self._build_chunk(
-                        members[lo : lo + _CHUNK], shape, cap, n_init_slots,
-                        resume=resume[lo : lo + _CHUNK],
-                    )
-                )
-        return len(survivors)
+            return len(survivors)
 
     # ---------------------------------------------------------- internals
 
@@ -963,13 +1115,22 @@ class TuningSession:
         )
         if entry[2] is None:
             stats = RetryStats(attempts=0)
+            drifted = [False]
 
             def resolve() -> ProfileResult:
                 if self.cache is not None:
-                    return self.cache.get_or_profile(
-                        job.profile_run, job.full_input_size,
-                        drift_tolerance=self.drift_tolerance,
-                    )
+                    # `last_drift` is a per-call report on a possibly
+                    # shared cache: read it while still holding the
+                    # cache lock so a concurrent submitter's call (from
+                    # another session sharing this cache) cannot clobber
+                    # it between the resolution and the read.
+                    with self.cache.lock:
+                        prof = self.cache.get_or_profile(
+                            job.profile_run, job.full_input_size,
+                            drift_tolerance=self.drift_tolerance,
+                        )
+                        drifted[0] = self.cache.last_drift
+                    return prof
                 return profile_job(job.profile_run, job.full_input_size)
 
             try:
@@ -982,7 +1143,7 @@ class TuningSession:
                 # the failed outcome reports what the attempts burned.
                 entry[3], entry[4] = stats.attempts, stats.backoff_s
             entry[2] = profile
-            if self.cache is not None and self.cache.last_drift:
+            if drifted[0]:
                 entry[5] = True
                 self.drift_events.append(job.name)
         return entry[2]
@@ -1015,6 +1176,8 @@ class TuningSession:
         self._outcomes[handle.uid] = outcome
         handle._outcome = outcome
         self._failed_since_drain.append(handle.uid)
+        for listener in self._outcome_listeners:
+            listener(outcome)
         return handle
 
     def _retain(self, job: "FleetJob") -> None:
@@ -1154,6 +1317,7 @@ class TuningSession:
                     update=lambda st, a, _u=update: _u(st, *a),
                     steps_needed=max(p[2] for p in parts),
                     n_shards=n_shards,
+                    group_key=(shape, cap),
                 )
             )
         return out
@@ -1161,17 +1325,32 @@ class TuningSession:
     def _build_chunk(
         self, members: List[_JobRec], shape, cap: int, n_init_slots: int,
         resume: Optional[List[FleetState]] = None,
+        device=None,
     ) -> _LiveChunk:
         state_np, args_np, steps_needed = self._chunk_arrays(
             members, shape, cap, n_init_slots, max(len(members), 2),
             resume=resume,
         )
-        state = jax.tree_util.tree_map(jnp.asarray, state_np)
-        args = tuple(jnp.asarray(a) for a in args_np) + (
-            jnp.asarray(self.settings.min_observations, jnp.int32),
-            jnp.asarray(self.settings.ei_stop_rel, jnp.float32),
-            jnp.asarray(self.to_exhaustion),
+        tail_np = (
+            np.asarray(self.settings.min_observations, np.int32),
+            np.asarray(self.settings.ei_stop_rel, np.float32),
+            np.asarray(self.to_exhaustion),
         )
+        if device is None:
+            state = jax.tree_util.tree_map(jnp.asarray, state_np)
+            args = tuple(jnp.asarray(a) for a in args_np) + tuple(
+                jnp.asarray(v) for v in tail_np
+            )
+        else:
+            # Committed placement: the jitted update runs on ``device``
+            # (identical program and numerics on the identical-ISA host
+            # devices — only WHERE it executes changes, which is how the
+            # service spreads group threads across the forced topology).
+            put = lambda x: jax.device_put(np.asarray(x), device)
+            state = jax.tree_util.tree_map(put, state_np)
+            args = tuple(put(a) for a in args_np) + tuple(
+                put(v) for v in tail_np
+            )
         xi, layout = self.settings.xi, self.layout
         return _LiveChunk(
             state=state,
@@ -1180,6 +1359,7 @@ class TuningSession:
             capacity=max(cap, 1),
             update=lambda st, a: _fleet_update(st, *a, xi=xi, layout=layout),
             steps_needed=steps_needed,
+            group_key=(shape, cap),
         )
 
     def _chunk_arrays(
@@ -1359,3 +1539,5 @@ class TuningSession:
         # chunk; evict its cache shares so a long-lived session holds
         # only outcomes and class history.
         self._release(rec)
+        for listener in self._outcome_listeners:
+            listener(outcome)

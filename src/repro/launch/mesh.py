@@ -18,7 +18,7 @@ from typing import Optional, Tuple
 
 import jax
 
-__all__ = ["make_production_mesh", "make_mesh"]
+__all__ = ["make_production_mesh", "make_mesh", "mesh_context"]
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
@@ -32,6 +32,18 @@ def make_mesh(
 ) -> jax.sharding.Mesh:
     """Arbitrary mesh for tests / the tuner's candidate configurations."""
     return jax.make_mesh(shape, axes)
+
+
+def mesh_context(mesh: jax.sharding.Mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    `jax.set_mesh` only exists from jax 0.6; on the pinned 0.4.37 the
+    `Mesh` object itself is the context manager.  Lowering under the
+    ambient mesh is what lets partially-manual `shard_map`s (auto axes)
+    resolve their automatic dimensions.
+    """
+    set_mesh = getattr(jax, "set_mesh", None)
+    return set_mesh(mesh) if set_mesh is not None else mesh
 
 
 def data_axes(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:

@@ -27,7 +27,7 @@ def main() -> None:
     from repro.data import make_batch
     from repro.models import Model, init_tree
     from repro.models.spec import is_spec
-    from repro.runtime.serve import ServeLoop
+    from repro.runtime.decode_loop import ServeLoop
     from repro.runtime.steps import make_serve_steps
 
     spec = C.smoke(args.arch) if args.smoke else C.get(args.arch)

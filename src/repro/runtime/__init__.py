@@ -1,12 +1,15 @@
-"""Training/serving runtime: step factories, fault-tolerant loops."""
+"""Training/serving runtime: step factories, fault-tolerant loops, and
+the tuning-as-a-service daemon (`TuningDaemon`)."""
 
 from repro.runtime.steps import TrainState, make_train_step, make_serve_steps
 from repro.runtime.loop import TrainLoop, StragglerMonitor, PreemptionGuard
-from repro.runtime.serve import ServeLoop
+from repro.runtime.decode_loop import ServeLoop
+from repro.runtime.serve import TuningDaemon
 
 __all__ = [
     "PreemptionGuard",
     "ServeLoop",
+    "TuningDaemon",
     "StragglerMonitor",
     "TrainLoop",
     "TrainState",

@@ -1,73 +1,134 @@
-"""Batched serving loop: continuous greedy decoding over request batches.
+"""Tuning-as-a-service daemon: a supervised `TuningService` with a
+periodic JSON metrics snapshot.
 
-A deliberately small but real serving path: requests (prompts) are grouped
-into fixed-size batches, prefilled once, then decoded token-by-token with a
-shared jitted decode step and donated caches.  Per-request stop handling
-masks finished rows (EOS or length); the loop reports aggregate throughput.
+This is the deployment wrapper around `repro.fleet.service.TuningService`
+(which owns the actual scheduling — per-group dispatch threads, admission
+backpressure, graceful drain): the daemon adds the operational shell a
+long-running tuner needs — a background snapshot thread that serializes
+`TuningService.metrics()` to disk at a fixed cadence (atomic
+write-then-rename, so a scraper never reads a torn file) and a
+stop-the-world `stop(drain=...)` that flushes a final snapshot.
+
+    daemon = TuningDaemon(metrics_path="artifacts/tuning_metrics.json",
+                          cache=ProfileCache(), max_in_flight=128)
+    daemon.start()
+    handle = daemon.submit(job, seed=0)
+    ...
+    daemon.stop(drain=True)       # drain, final snapshot, join threads
+
+The token-decode serving loop that used to live here moved to
+`repro.runtime.decode_loop` (re-exported below for compatibility — it is
+a model-serving loop, not a tuning service, and the two share nothing
+but the word "serve").
 """
 
 from __future__ import annotations
 
-import dataclasses
+import json
+import os
+import threading
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import List, Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.fleet.service import TuningService
+from repro.fleet.session import JobHandle, SearchOutcome
+from repro.runtime.decode_loop import ServeLoop  # noqa: F401  (compat)
 
-__all__ = ["ServeLoop"]
+__all__ = ["ServeLoop", "TuningDaemon"]
 
 
-@dataclasses.dataclass
-class ServeLoop:
-    prefill_step: Callable  # (params, batch, cache) -> (logits, cache)
-    decode_step: Callable  # (params, cache, tokens, index) -> (logits, cache)
-    params: Any
-    init_cache: Callable[[], Any]  # fresh zeroed cache per batch
-    eos_id: int = 1
+class TuningDaemon:
+    """Long-running tuning service with periodic metrics snapshots.
 
-    def generate(
+    Constructor keywords forward to `TuningService` (and through it to
+    `TuningSession`) unless an existing ``service`` is passed.
+    ``metrics_path`` (optional) is where the snapshot thread writes the
+    JSON metrics surface every ``snapshot_every_s`` seconds; with no
+    path, `metrics()` is still available on demand and nothing touches
+    disk.  The daemon is a context manager: `with TuningDaemon(...) as d:`
+    starts it and stops (draining) on clean exit.
+    """
+
+    def __init__(
         self,
-        batch: Dict[str, jax.Array],  # {"tokens": (B,T), +modality stubs}
-        max_new_tokens: int,
+        service: Optional[TuningService] = None,
         *,
-        prompt_len: Optional[int] = None,
-        echo_metrics: bool = False,
-    ) -> Dict[str, Any]:
-        cache = self.init_cache()
-        b, t = batch["tokens"].shape
-        offset = t
-        if "patches" in batch:
-            offset += batch["patches"].shape[1]
+        metrics_path: Optional[str] = None,
+        snapshot_every_s: float = 5.0,
+        **service_kwargs: object,
+    ) -> None:
+        if service is not None and service_kwargs:
+            raise ValueError(
+                "pass EITHER an existing service OR TuningService kwargs"
+            )
+        self.service = service or TuningService(**service_kwargs)
+        self.metrics_path = metrics_path
+        self.snapshot_every_s = float(snapshot_every_s)
+        self._stop = threading.Event()
+        self._snapshotter: Optional[threading.Thread] = None
 
-        t0 = time.monotonic()
-        logits, cache = self.prefill_step(self.params, batch, cache)
-        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-        prefill_s = time.monotonic() - t0
+    # --------------------------------------------------------- lifecycle
 
-        out_tokens: List[np.ndarray] = [np.asarray(next_tok)]
-        finished = np.zeros((b,), bool)
-        t1 = time.monotonic()
-        index = jnp.int32(offset)
-        for i in range(max_new_tokens - 1):
-            logits, cache = self.decode_step(self.params, cache, next_tok, index)
-            next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-            index = index + 1
-            host_tok = np.asarray(next_tok)
-            finished |= host_tok[:, 0] == self.eos_id
-            out_tokens.append(host_tok)
-            if finished.all():
-                break
-        decode_s = time.monotonic() - t1
+    def start(self) -> "TuningDaemon":
+        """Idempotent; spins up the snapshot thread when a path is set."""
+        if self.metrics_path is not None and self._snapshotter is None:
+            self._snapshotter = threading.Thread(
+                target=self._snapshot_loop, name="tuning-metrics", daemon=True
+            )
+            self._snapshotter.start()
+        return self
 
-        tokens = np.concatenate(out_tokens, axis=1)
-        result: Dict[str, Any] = {"tokens": tokens}
-        if echo_metrics:
-            result["metrics"] = {
-                "prefill_s": prefill_s,
-                "decode_s": decode_s,
-                "decoded": int(tokens.shape[1]),
-                "tokens_per_s": tokens.size / max(decode_s, 1e-9),
-            }
-        return result
+    def stop(self, drain: bool = True) -> List[SearchOutcome]:
+        """Shut the service down (``drain=True`` finishes live work
+        first), stop the snapshot thread, and flush a final snapshot."""
+        outcomes = self.service.shutdown(drain=drain)
+        self._stop.set()
+        if self._snapshotter is not None:
+            self._snapshotter.join(timeout=5.0)
+            self._snapshotter = None
+        self.snapshot()
+        return outcomes
+
+    def __enter__(self) -> "TuningDaemon":
+        return self.start()
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.stop(drain=exc_type is None)
+
+    # ------------------------------------------------------- passthrough
+
+    def submit(self, job, rng=None, **kwargs) -> JobHandle:
+        return self.service.submit(job, rng, **kwargs)
+
+    def drain(self) -> List[SearchOutcome]:
+        return self.service.drain()
+
+    def results(self) -> List[SearchOutcome]:
+        return self.service.results()
+
+    def metrics(self) -> dict:
+        return self.service.metrics()
+
+    # ----------------------------------------------------------- metrics
+
+    def snapshot(self) -> Optional[str]:
+        """Write one metrics snapshot now (atomic rename); returns the
+        path, or None when no ``metrics_path`` is configured."""
+        if self.metrics_path is None:
+            return None
+        payload = self.service.metrics()
+        payload["snapshot_unix_s"] = time.time()
+        directory = os.path.dirname(os.path.abspath(self.metrics_path))
+        os.makedirs(directory, exist_ok=True)
+        tmp = f"{self.metrics_path}.tmp"
+        with open(tmp, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+        os.replace(tmp, self.metrics_path)
+        return self.metrics_path
+
+    def _snapshot_loop(self) -> None:
+        while not self._stop.wait(self.snapshot_every_s):
+            try:
+                self.snapshot()
+            except OSError:
+                pass  # disk hiccups must not kill the scraper thread

@@ -22,6 +22,7 @@ Pallas kernel-identity lane) additionally get a per-test 30 s attention
 flag in the summary.
 """
 
+import faulthandler
 import json
 import os
 import sys
@@ -51,6 +52,26 @@ def pytest_collection_modifyitems(config, items):
     for item in items:
         if item.get_closest_marker("kernel") is not None:
             _KERNEL_NODES.add(item.nodeid)
+
+
+_SERVICE_WATCHDOG_S = 60.0  # per-test ceiling for threaded service tests
+
+
+@pytest.fixture(autouse=True)
+def _service_watchdog(request):
+    """Deadlock insurance for the threaded `service` lane: a wedged
+    worker/CV interaction must abort the process WITH all-thread
+    tracebacks after 60 s, not hang the suite.  Stdlib `faulthandler`
+    (pytest-timeout is not a dependency); armed only for tests carrying
+    the ``service`` marker, disarmed on the way out either way."""
+    if request.node.get_closest_marker("service") is None:
+        yield
+        return
+    faulthandler.dump_traceback_later(_SERVICE_WATCHDOG_S, exit=True)
+    try:
+        yield
+    finally:
+        faulthandler.cancel_dump_traceback_later()
 
 
 def pytest_sessionstart(session):

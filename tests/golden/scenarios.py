@@ -88,13 +88,21 @@ def quad_table(n=20, optimum=9):
     return np.array([1.0 + 0.05 * (i - optimum) ** 2 for i in range(n)])
 
 
-def _session(layout, shard, **kw):
+def _session(layout, shard, engine=None, **kw):
+    """``engine`` swaps the driver under a scenario: a factory called as
+    ``engine(layout=..., shard=..., **session_kwargs)`` returning any
+    object with the session's submit/drain/results surface — the async
+    service lanes inject `TuningService` here and must reproduce the
+    committed single-threaded fixtures bit-for-bit."""
+    if engine is not None:
+        return engine(layout=layout, shard=shard, **kw)
     return TuningSession(layout=layout, shard=shard, **kw)
 
 
-def run_n69_exhaustion(layout="feature", shard=None):
+def run_n69_exhaustion(layout="feature", shard=None, engine=None):
     space, table = synth_space_table(69)
-    session = _session(layout, shard, mode="cherrypick", to_exhaustion=True)
+    session = _session(layout, shard, engine,
+                       mode="cherrypick", to_exhaustion=True)
     for s in range(4):
         session.submit(
             FleetJob(name=f"j{s}", space=space, cost_table=table), seed=s,
@@ -102,14 +110,15 @@ def run_n69_exhaustion(layout="feature", shard=None):
     return session.drain()
 
 
-def run_n512_budgeted(layout="feature", shard=None):
+def run_n512_budgeted(layout="feature", shard=None, engine=None):
     space, table = synth_space_table(512)
     st = BOSettings(max_iters=10)
     prio = list(range(0, 50))
     rest = list(range(50, 512))
     # 7 jobs: at S = 4 the group re-chunks to rows = 2 → a genuine 4-shard
     # bundle; at S = 2, rows = 4 → 2 shards.
-    session = _session(layout, shard, settings=st, to_exhaustion=True)
+    session = _session(layout, shard, engine, settings=st,
+                       to_exhaustion=True)
     for s in range(7):
         session.submit(
             FleetJob(name=f"j{s}", space=space, cost_table=table),
@@ -118,7 +127,7 @@ def run_n512_budgeted(layout="feature", shard=None):
     return session.drain()
 
 
-def run_warm_session(layout="feature", shard=None):
+def run_warm_session(layout="feature", shard=None, engine=None):
     """Two waves through ONE warm-starting session; drained per wave so
     the class history every wave sees is shard-count-independent."""
     space, table = quad_space(), quad_table()
@@ -130,7 +139,8 @@ def run_warm_session(layout="feature", shard=None):
             full_input_size=10e9, profile_result=prof,
         )
 
-    session = _session(layout, shard, warm_start=True, to_exhaustion=False)
+    session = _session(layout, shard, engine,
+                       warm_start=True, to_exhaustion=False)
     for s in range(3):  # cold profiled wave — builds the class history
         session.submit(job(f"cold{s}"), seed=s)
     session.drain()
@@ -165,11 +175,12 @@ def _elastic_job(name, idx):
     )
 
 
-def run_elastic_fleet(layout="feature", shard=None):
+def run_elastic_fleet(layout="feature", shard=None, engine=None):
     """The undisturbed reference: 8 two-class Ruya jobs, profiled through
     the deterministic linear run fns, drained to completion."""
     session = _session(
-        layout, shard, settings=BOSettings(max_iters=12), warm_start=False,
+        layout, shard, engine,
+        settings=BOSettings(max_iters=12), warm_start=False,
     )
     for s in range(8):
         session.submit(_elastic_job(f"e{s}", s), seed=s)

@@ -8,8 +8,11 @@ feature lane, its transient-footprint collapse asserted at n = 32768),
 the `--shards` job-axis sharding sweep (entries recorded, sharded traces
 asserted identical to the lockstep reference), the streaming
 `TuningSession` scenario (recurring jobs in waves, warm-start amortization
-asserted), and the `BENCH_fleet.json` emission — so the bench plumbing is
-exercised without the multi-minute full sweep.
+asserted), the open-loop Poisson workload G (async `TuningService` vs the
+lockstep session under deterministic straggler injection — bit-identical
+outcomes, sustained jobs/sec and sojourn percentiles, the smoke-mode
+≥1.1× throughput floor), and the `BENCH_fleet.json` emission — so the
+bench plumbing is exercised without the multi-minute full sweep.
 
 Excluded from the default tier-1 lane (see pyproject addopts); selected
 explicitly with `pytest -m bench_smoke`, and included in the full
@@ -126,8 +129,26 @@ def test_fleet_bench_smoke(tmp_path):
     if jax.device_count() >= 2:
         assert adv["shard"] == 2 and adv["reshard_survivors"] > 0
 
+    # Open-loop workload G: async service vs lockstep session under
+    # Poisson arrivals and straggler injection.  The bench itself asserts
+    # per-job outcome bit-identity across the two drivers and the smoke
+    # throughput floor (≥1.1x; the full protocol is held to ≥1.3x); the
+    # structural checks here pin the emitted entry.
+    g = out["open_loop"]
+    assert g["traces_identical"]
+    assert g["service_groups"] == len(g["space_ns"]) == 3
+    assert g["speedup_jobs_per_sec"] >= g["speedup_floor"] >= 1.1
+    for side in ("lockstep", "async"):
+        s = g[side]
+        assert s["jobs_per_sec"] > 0.0
+        assert 0.0 < s["sojourn_p50_s"] <= s["sojourn_p99_s"]
+    # The straggler stalls serialize through the lockstep barrier, so the
+    # async side must also win on latency, not just throughput.
+    assert g["async"]["sojourn_p50_s"] < g["lockstep"]["sojourn_p50_s"]
+
     data = json.loads(path.read_text())
     assert data["scaling"]["sweep"][0]["n"] == rows[0]["n"]
     assert data["session_streaming"]["warm_jobs"] == d["warm_jobs"]
     assert data["sharding"]["shards"] == sh["shards"]
     assert data["adversarial"]["completion_rate"] == adv["completion_rate"]
+    assert data["open_loop"]["speedup_jobs_per_sec"] == g["speedup_jobs_per_sec"]

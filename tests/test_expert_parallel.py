@@ -3,8 +3,6 @@ flow, and the documented capacity/aux deviations (subprocess, 8 devices)."""
 
 import pytest
 
-pytestmark = pytest.mark.slow  # excluded from the tier-1 fast lane
-
 
 
 class TestExpertParallel:

@@ -3,8 +3,6 @@ stack and gradient flow through the ppermute schedule (subprocess, 8 dev)."""
 
 import pytest
 
-pytestmark = pytest.mark.slow  # excluded from the tier-1 fast lane
-
 
 
 class TestPipeline:

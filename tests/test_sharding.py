@@ -5,8 +5,6 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-pytestmark = pytest.mark.slow  # excluded from the tier-1 fast lane
-
 from repro.models.spec import TensorSpec
 from repro.parallel.sharding import ShardingRules, default_rules
 
@@ -84,7 +82,8 @@ class TestResolvePspec:
             state2 = init_train_state(model, ex, jax.random.key(0))
             jitted = jax.jit(built.step_fn, in_shardings=built.in_shardings,
                              out_shardings=built.out_shardings)
-            with jax.set_mesh(mesh):
+            from repro.launch.mesh import mesh_context
+            with mesh_context(mesh):
                 _, m2 = jitted(state2, batch)
             l1, l2 = float(m1["loss"]), float(m2["loss"])
             print("LOSSES", l1, l2)
@@ -131,6 +130,7 @@ class TestResolvePspec:
         )
         assert "MOE EP OK" in out
 
+    @pytest.mark.slow  # ~80s: compiles 6 archs × 3 step kinds
     def test_tiny_mesh_dryrun_all_step_kinds(self, devices_runner):
         """lower+compile every step kind on an 8-device mesh using smoke
         configs — the dry-run machinery end to end, in miniature."""
