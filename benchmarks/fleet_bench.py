@@ -67,6 +67,13 @@ Four measurements; A–C are trace-checked against the sequential engine:
      asserted bit-identical per job across the two drivers, and the
      async side must sustain ≥ 1.3× the lockstep jobs/sec at the full
      protocol (≥ 1.1× in smoke).
+  H. **Cost-aware pricing** — the `repro.cluster.pricing` catalogs:
+     per-catalog USD-argmin movement over the Table I jobs (≥ 3 must move
+     on at least one book), the spot-volatility fleets searched under
+     both `objective="runtime"` and `objective="cost"` (reported USD
+     savings of the cost picks, ≥ 1 job where the objectives diverge,
+     Pareto-front invariants asserted on every cost outcome), and the
+     family-constrained Graviton scenarios at table level.
 
 The sweep also asserts **buffer donation**: the lockstep update consumes
 (donates) its input state, so each fleet iteration updates the observation
@@ -930,6 +937,163 @@ def _report_open_loop(r: dict) -> None:
           f"{'identical' if r['traces_identical'] else 'UNCHECKED'})")
 
 
+def bench_pricing(check: bool, settings: BOSettings, *, smoke: bool = False,
+                  seed: int = 0) -> dict:
+    """Workload H: cost-aware tuning over pricing catalogs.
+
+    Three measurements over `repro.cluster.pricing`:
+
+      * **Repricing movement** — for every Table I job × every catalog in
+        `default_catalogs(seed)`, does the USD-optimal configuration move
+        off the legacy (x86 on-demand) optimum?  Asserted ≥ 3 jobs on at
+        least one catalog: if no book can move the optimum, a cost
+        objective is a no-op and the whole axis is dead weight.
+      * **Objective contrast** — the `spot_volatility_scenarios` fleets
+        (priced `cluster_fleet` jobs, per spot epoch) searched twice
+        through `TuningSession`, once per objective.  Reports the USD the
+        cost objective saves over the runtime objective's pick (summed;
+        asserted ≥ 0 with ≥ 1 job where the two objectives choose
+        different configurations) and asserts the Pareto-front invariants
+        on every cost-run outcome (non-empty, mutually non-dominated,
+        deterministic, contains the per-axis argmins).
+      * **Family-constrained optima** — the `family_constrained_scenarios`
+        Graviton searches evaluated at table level: the USD penalty of
+        pinning each job to one instance family vs the whole grid.
+    """
+    from repro.cluster import (
+        JOBS, default_catalogs, family_indices, job_cost_table,
+    )
+    from repro.cluster.workloads import (
+        family_constrained_scenarios, spot_volatility_scenarios,
+    )
+    from repro.fleet import TuningSession
+
+    t0 = time.perf_counter()
+
+    # -- repricing movement (table-level; cheap enough to always run full)
+    legacy_arg = {k: int(np.argmin(job_cost_table(j))) for k, j in JOBS.items()}
+    argmin_moved = {}
+    for cat in default_catalogs(seed).values():
+        argmin_moved[cat.name] = sum(
+            int(np.argmin(job_cost_table(j, catalog=cat))) != legacy_arg[k]
+            for k, j in JOBS.items()
+        )
+
+    # -- objective contrast over the spot-volatility fleets
+    scens = spot_volatility_scenarios(seed=seed)
+    if smoke:
+        first_epoch = scens[0].epoch
+        scens = [s for s in scens if s.epoch == first_epoch]
+    by_epoch: dict = {}
+    for s in scens:
+        by_epoch.setdefault(s.epoch, []).append(s)
+
+    job_rows = []
+    pareto_max = 0
+    for epoch, group in sorted(by_epoch.items()):
+        catalog = group[0].catalog
+        keys = [s.job_key for s in group]
+        jobs = cluster_fleet(keys, catalog=catalog, epoch=epoch)
+        outs = {}
+        for objective in ("runtime", "cost"):
+            session = TuningSession(
+                settings=settings, warm_start=False, objective=objective,
+            )
+            for i, job in enumerate(jobs):
+                session.submit(job, seed=7000 + 100 * epoch + i)
+            outs[objective] = session.drain()
+        for s, o_rt, o_cost in zip(group, outs["runtime"], outs["cost"]):
+            rt_pick = min(o_rt.observations, key=lambda r: r.cost)
+            cost_pick = min(o_cost.observations, key=lambda r: r.cost)
+            front = o_cost.pareto()
+            pareto_max = max(pareto_max, len(front))
+            if check:
+                assert front, f"{s.name}: empty Pareto front"
+                assert o_cost.pareto() == front, (
+                    f"{s.name}: pareto() is not deterministic"
+                )
+                for i, a in enumerate(front):
+                    for j, b in enumerate(front):
+                        if i != j:
+                            assert not (
+                                b.runtime_h <= a.runtime_h and b.usd <= a.usd
+                                and (b.runtime_h < a.runtime_h or b.usd < a.usd)
+                            ), f"{s.name}: front member {i} is dominated"
+                assert any(r.usd == o_cost.best_usd for r in front)
+                assert any(
+                    r.runtime_h == o_cost.best_runtime_h for r in front
+                )
+                # The cost search's own pick IS its cheapest observation.
+                assert cost_pick.usd == o_cost.best_usd
+            job_rows.append({
+                "scenario": s.name,
+                "epoch": epoch,
+                "runtime_pick": int(rt_pick.index),
+                "cost_pick": int(cost_pick.index),
+                "usd_at_runtime_pick": float(rt_pick.usd),
+                "usd_at_cost_pick": float(cost_pick.usd),
+                "usd_saved": float(rt_pick.usd - cost_pick.usd),
+                "pareto_size": len(front),
+            })
+
+    usd_rt = sum(r["usd_at_runtime_pick"] for r in job_rows)
+    usd_cost = sum(r["usd_at_cost_pick"] for r in job_rows)
+    contrast = sum(r["runtime_pick"] != r["cost_pick"] for r in job_rows)
+
+    # -- family-constrained Graviton optima (table-level)
+    fam_rows = []
+    for s in family_constrained_scenarios():
+        usd = job_cost_table(JOBS[s.job_key], catalog=s.catalog, epoch=s.epoch)
+        idx = family_indices(s.families)
+        fam_rows.append({
+            "scenario": s.name,
+            "families": list(s.families),
+            "in_family_usd": float(usd[idx].min()),
+            "global_usd": float(usd.min()),
+            "family_penalty": float(usd[idx].min() / usd.min()),
+        })
+
+    row = {
+        "seed": seed,
+        "n_scenarios": len(scens) + len(fam_rows),
+        "argmin_moved": argmin_moved,
+        "jobs": job_rows,
+        "usd_runtime_total": usd_rt,
+        "usd_cost_total": usd_cost,
+        "usd_saved_total": usd_rt - usd_cost,
+        "contrast_jobs": int(contrast),
+        "pareto_max_size": pareto_max,
+        "family": fam_rows,
+        "pricing_s": time.perf_counter() - t0,
+    }
+    if check:
+        assert max(argmin_moved.values()) >= 3, (
+            f"no catalog moves >= 3 Table I optima: {argmin_moved}"
+        )
+        assert row["usd_saved_total"] >= 0.0, (
+            f"cost objective spent MORE than runtime's pick: {row}"
+        )
+        assert contrast >= 1, (
+            "runtime and cost objectives picked identical configs on every "
+            "catalog job — no contrast to measure"
+        )
+        for f in fam_rows:
+            assert f["family_penalty"] >= 1.0 - 1e-12
+    return row
+
+
+def _report_pricing(r: dict) -> None:
+    moved = ", ".join(f"{k}:{v}" for k, v in r["argmin_moved"].items())
+    print(f"  H. cost-aware pricing ({len(r['jobs'])} priced searches x 2 "
+          f"objectives, {len(r['family'])} family scenarios)")
+    print(f"    Table I USD-argmin moved per catalog: {moved}")
+    print(f"    cost objective saves {r['usd_saved_total']:.2f} USD over the "
+          f"runtime picks ({r['usd_runtime_total']:.2f} -> "
+          f"{r['usd_cost_total']:.2f}; {r['contrast_jobs']} jobs diverge, "
+          f"Pareto fronts <= {r['pareto_max_size']} trials)  "
+          f"({r['pricing_s']:.2f} s)")
+
+
 def bench_paper_replay(jobs, check: bool, settings: BOSettings) -> dict:
     """Workload A: full two-phase Ruya search over the 69-config space."""
     n_jobs = len(jobs)
@@ -1225,6 +1389,13 @@ def run(n_jobs: int = 64, check: bool = True,
         g = bench_open_loop(12, check, smoke=True)
         _report_open_loop(g)
         out["open_loop"] = g
+        # Cost-aware pricing wiring check: one spot epoch (3 priced jobs x
+        # 2 objectives) at the smoke trial budget; the table-level
+        # repricing-movement and family scenarios always run in full
+        # (they are argmin sweeps, not searches).
+        h = bench_pricing(check, BOSettings(max_iters=16), smoke=True)
+        _report_pricing(h)
+        out["pricing"] = h
 
     if not smoke:
         jobs = build_fleet(n_jobs)
@@ -1258,9 +1429,13 @@ def run(n_jobs: int = 64, check: bool = True,
         # lockstep session under straggler injection (≥1.3x floor).
         g = bench_open_loop(n_jobs, check)
         _report_open_loop(g)
+        # Workload H: cost-aware tuning over the pricing catalogs — all
+        # spot epochs, both objectives, Pareto invariants asserted.
+        h = bench_pricing(check, settings)
+        _report_pricing(h)
         out.update({"paper_replay": a, "priority_service": b,
                     "session_streaming": d, "adversarial": adv,
-                    "open_loop": g})
+                    "open_loop": g, "pricing": h})
         with open(artifact_path("fleet", f"fleet_bench_{n_jobs}.json"), "w") as f:
             json.dump(out, f, indent=1)
 

@@ -21,6 +21,13 @@ import numpy as np
 
 from benchmarks.common import artifact_path
 
+# Nominal accelerator price for the dollar-denominated savings line: what
+# the trial time the tuner avoids would have billed on the 256-chip mesh.
+# A bookkeeping constant (public cloud accelerator-hours are ~$1-2/chip-h),
+# not a measurement — the trials-saved quotient is the real result.
+USD_PER_CHIP_HOUR = 1.20
+TRIAL_CHIPS = 256
+
 
 def run(arch: str = "granite-8b", cell: str = "train_4k", seeds: int = 25) -> dict:
     """Driver entry: the tuner needs 512 placeholder devices, but the
@@ -104,8 +111,10 @@ def _run_inprocess(arch: str = "granite-8b", cell: str = "train_4k",
     print(f"  trials-to-best: Ruya {r_m:.2f} vs plain BO {c_m:.2f} "
           f"→ quotient {quot*100:.1f}%  ({seeds} seeds)")
     chip_s_saved = (c_m - r_m) * 15.0  # ~15 s of 256-chip compile+profile
+    usd_saved = chip_s_saved * TRIAL_CHIPS / 3600.0 * USD_PER_CHIP_HOUR
     print(f"  ≈ {chip_s_saved:.0f} wall-s of trial time saved per tuning run "
-          f"(× 256 chips when trials are real profiled runs)")
+          f"(× {TRIAL_CHIPS} chips when trials are real profiled runs; "
+          f"≈ ${usd_saved:.2f} at ${USD_PER_CHIP_HOUR:.2f}/chip-h)")
 
     out = {
         "arch": arch, "cell": cell,
@@ -116,6 +125,9 @@ def _run_inprocess(arch: str = "granite-8b", cell: str = "train_4k",
         "quotient": quot,
         "best_config": space[int(np.argmin(costs))].name,
         "best_cost_chip_s": float(best_cost),
+        "trial_wall_s_saved": float(chip_s_saved),
+        "usd_saved_per_tuning_run": float(usd_saved),
+        "usd_per_chip_hour": USD_PER_CHIP_HOUR,
     }
     with open(artifact_path("autotune", f"{arch}__{cell}__compare.json"),
               "w") as f:

@@ -16,19 +16,32 @@ from repro.cluster.nodes import (
     make_cluster_search_space,
 )
 from repro.cluster.faults import FaultPlan
+from repro.cluster.pricing import (
+    CATALOGS,
+    PriceCatalog,
+    SpotSchedule,
+    default_catalogs,
+    family_indices,
+)
 from repro.cluster.workloads import (
     JOBS,
     JobSpec,
+    PricingScenario,
     drift_spec,
     failure_scenario_jobs,
+    family_constrained_scenarios,
+    pricing_scenarios,
+    spot_volatility_scenarios,
 )
 from repro.cluster.simulator import (
     ClusterSimulator,
     job_cost_table,
+    job_runtime_table,
     make_profile_run_fn,
 )
 
 __all__ = [
+    "CATALOGS",
     "ClusterConfig",
     "ClusterSimulator",
     "FaultPlan",
@@ -36,10 +49,19 @@ __all__ = [
     "JobSpec",
     "NODE_TYPES",
     "NodeType",
+    "PriceCatalog",
+    "PricingScenario",
+    "SpotSchedule",
+    "default_catalogs",
     "drift_spec",
     "enumerate_cluster_configs",
     "failure_scenario_jobs",
+    "family_constrained_scenarios",
+    "family_indices",
     "job_cost_table",
+    "job_runtime_table",
     "make_cluster_search_space",
     "make_profile_run_fn",
+    "pricing_scenarios",
+    "spot_volatility_scenarios",
 ]

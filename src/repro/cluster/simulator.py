@@ -40,7 +40,8 @@ from repro.cluster.nodes import (
     enumerate_cluster_configs,
     make_cluster_search_space,
 )
-from repro.cluster.workloads import JOBS, JobSpec, failure_scenario_jobs
+from repro.cluster.pricing import PriceCatalog
+from repro.cluster.workloads import JOBS, JobSpec, _scenario_catalog
 from repro.core.search_space import SearchSpace
 
 __all__ = [
@@ -50,12 +51,19 @@ __all__ = [
     "PER_NODE_OVERHEAD_GB",
     "ClusterSimulator",
     "job_cost_table",
+    "job_runtime_table",
     "make_profile_run_fn",
 ]
 
 REF_CORES = 32  # reference parallelism for cpu_hours
 REF_NODES = 8  # reference node count for io_hours
-USABLE_MEM_FRACTION = 1.0  # Table I figures already exclude framework/OS
+# Table I requirements are JOB memory; the framework/OS resident set is
+# modeled separately as a flat per-node overhead, so the memory a job can
+# actually use is  total · USABLE_MEM_FRACTION − overhead · nodes  (clamped
+# at 0: a grid of nodes smaller than the overhead has NO usable memory —
+# it must not wrap around into a saturated spill via the missing-fraction
+# clamp).
+USABLE_MEM_FRACTION = 1.0  # job-usable fraction of instance memory
 PER_NODE_OVERHEAD_GB = 0.5  # framework+OS resident memory per node
 
 
@@ -70,9 +78,16 @@ def _hash_unit_normal(*parts: str) -> float:
 def _spill_factor(job: JobSpec, cfg: ClusterConfig) -> float:
     if job.spill_slope == 0.0 and job.spill_base <= 1.0:
         return 1.0
-    usable = (
+    # Usable = job-visible memory after the per-node framework/OS slice,
+    # clamped at 0: on the committed c4/m4/r4 grid the smallest node
+    # (3.75 GB) comfortably clears the 0.5 GB overhead, but the clamp is
+    # the model's guarantee — a hypothetical grid of overhead-dominated
+    # nodes spills at the full missing fraction instead of feeding a
+    # negative "usable" into the ratio below.
+    usable = max(
         cfg.total_memory_gb * USABLE_MEM_FRACTION
-        - PER_NODE_OVERHEAD_GB * cfg.scale_out
+        - PER_NODE_OVERHEAD_GB * cfg.scale_out,
+        0.0,
     )
     required = job.mem_requirement_gb
     if usable >= required:
@@ -92,11 +107,37 @@ def runtime_hours(job: JobSpec, cfg: ClusterConfig) -> float:
     return base * coord * _spill_factor(job, cfg) * rug
 
 
-def job_cost_table(job: JobSpec) -> np.ndarray:
-    """(69,) USD execution cost per configuration, deterministic."""
+def job_runtime_table(
+    job: JobSpec, catalog: Optional[PriceCatalog] = None
+) -> np.ndarray:
+    """(69,) hours per configuration.  ``catalog`` applies its arch's
+    runtime offset (`PriceCatalog.perf_factor`); None is the x86 baseline."""
     configs = enumerate_cluster_configs()
-    return np.asarray(
-        [runtime_hours(job, c) * c.price_per_hour for c in configs], np.float64
+    rt = np.asarray([runtime_hours(job, c) for c in configs], np.float64)
+    if catalog is not None and catalog.perf_factor != 1.0:
+        rt = rt * catalog.perf_factor
+    return rt
+
+
+def job_cost_table(
+    job: JobSpec, catalog: Optional[PriceCatalog] = None, epoch: int = 0
+) -> np.ndarray:
+    """(69,) USD execution cost per configuration, deterministic.
+
+    With ``catalog=None`` (default) this is the legacy book — the
+    committed x86 on-demand prices, bit-identical to every pinned trace.
+    A catalog reprices the same configurations (runtime×price under its
+    book at ``epoch``); the identity catalog (`pricing.on_demand()`)
+    reproduces the legacy values bit-for-bit.
+    """
+    configs = enumerate_cluster_configs()
+    if catalog is None:
+        return np.asarray(
+            [runtime_hours(job, c) * c.price_per_hour for c in configs],
+            np.float64,
+        )
+    return job_runtime_table(job, catalog) * catalog.price_table(
+        configs, epoch=epoch
     )
 
 
@@ -156,19 +197,50 @@ class ClusterSimulator:
     costs: np.ndarray  # (69,) USD
     normalized: np.ndarray  # costs / min(costs) — the paper's metric
     faults: Optional[FaultPlan] = None
+    # Cost-aware extras, populated only when a catalog is requested: the
+    # raw runtime/price axes the fleet layer threads into priced
+    # `FleetJob`s (Pareto fronts, USD reporting).
+    catalog: Optional[PriceCatalog] = None
+    runtime_h: Optional[np.ndarray] = None  # (69,) hours under the catalog
+    price_hour: Optional[np.ndarray] = None  # (69,) USD/hour under the catalog
 
     @classmethod
     def for_job(
-        cls, key: str, faults: Optional[FaultPlan] = None
+        cls,
+        key: str,
+        faults: Optional[FaultPlan] = None,
+        catalog: Optional[PriceCatalog] = None,
+        epoch: int = 0,
     ) -> "ClusterSimulator":
-        # Table I catalog first; the adversarial/drift scenario specs
-        # (`workloads.failure_scenario_jobs`) share the same key space.
-        job = JOBS.get(key) or failure_scenario_jobs()[key]
+        # Table I catalog first, then the MEMOIZED adversarial/drift
+        # scenario specs (same key space).  NOT `JOBS.get(key) or ...`:
+        # the falsy-`or` shape silently re-routes falsy container values
+        # (the PR-9 `session or TuningSession(...)` bug) and re-built the
+        # whole scenario dict per lookup, with a typo'd key escaping as a
+        # bare KeyError from the scenario dict.
+        job = JOBS.get(key)
+        if job is None:
+            job = _scenario_catalog().get(key)
+        if job is None:
+            raise KeyError(
+                f"unknown job key {key!r}: valid keys are the Table I "
+                f"catalog {sorted(JOBS)} or the failure scenarios "
+                f"{sorted(_scenario_catalog())}"
+            )
         space = make_cluster_search_space()
-        costs = job_cost_table(job)
+        if catalog is None:
+            costs = job_cost_table(job)
+            return cls(
+                job=job, space=space, costs=costs,
+                normalized=costs / costs.min(), faults=faults,
+            )
+        rt = job_runtime_table(job, catalog)
+        price = catalog.price_table(epoch=epoch)
+        costs = rt * price
         return cls(
             job=job, space=space, costs=costs,
             normalized=costs / costs.min(), faults=faults,
+            catalog=catalog, runtime_h=rt, price_hour=price,
         )
 
     def cost_fn(self) -> Callable[[int], float]:

@@ -16,9 +16,22 @@ JVM-object blowup typical for Spark caching.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+import functools
+from typing import TYPE_CHECKING, Dict, List, Optional, Tuple
 
-__all__ = ["JobSpec", "JOBS", "drift_spec", "failure_scenario_jobs"]
+if TYPE_CHECKING:  # pricing is a peer module; keep import-time deps flat
+    from repro.cluster.pricing import PriceCatalog
+
+__all__ = [
+    "JobSpec",
+    "JOBS",
+    "PricingScenario",
+    "drift_spec",
+    "failure_scenario_jobs",
+    "family_constrained_scenarios",
+    "pricing_scenarios",
+    "spot_volatility_scenarios",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -141,16 +154,13 @@ def drift_spec(
     )
 
 
-def failure_scenario_jobs() -> Dict[str, JobSpec]:
-    """Named adversarial-scenario specs derived from the Table I catalog.
+@functools.lru_cache(maxsize=1)
+def _scenario_catalog() -> Dict[str, JobSpec]:
+    """The memoized adversarial-scenario catalog (shared, do not mutate).
 
-    These are the workloads the chaos lane (`pytest -m chaos`) and the
-    adversarial fleet bench disturb: renamed clones whose profiling runs
-    get a `repro.cluster.faults.FaultPlan` attached (flaky / broken), plus
-    drifted recurrences of a linear and a flat job (see `drift_spec`).
-    The specs themselves are ordinary `JobSpec`s — the faults live in the
-    plan, not the workload, so the same spec serves both the disturbed and
-    the undisturbed (reference) run.
+    `ClusterSimulator.for_job` consults this on every non-Table-I lookup;
+    the specs are frozen dataclasses, so sharing one dict across lookups
+    is safe — `failure_scenario_jobs()` hands callers their own copy.
     """
     kmeans = JOBS["kmeans/spark/bigdata"]
     terasort = JOBS["terasort/hadoop/bigdata"]
@@ -161,6 +171,99 @@ def failure_scenario_jobs() -> Dict[str, JobSpec]:
         "drifted-terasort": drift_spec(terasort, overhead_growth_gb=2.0),
     }
     return {spec.key: spec for spec in out.values()}
+
+
+def failure_scenario_jobs() -> Dict[str, JobSpec]:
+    """Named adversarial-scenario specs derived from the Table I catalog.
+
+    These are the workloads the chaos lane (`pytest -m chaos`) and the
+    adversarial fleet bench disturb: renamed clones whose profiling runs
+    get a `repro.cluster.faults.FaultPlan` attached (flaky / broken), plus
+    drifted recurrences of a linear and a flat job (see `drift_spec`).
+    The specs themselves are ordinary `JobSpec`s — the faults live in the
+    plan, not the workload, so the same spec serves both the disturbed and
+    the undisturbed (reference) run.  Built once per process (the specs
+    are immutable); each call returns a fresh dict over the shared specs.
+    """
+    return dict(_scenario_catalog())
+
+
+@dataclasses.dataclass(frozen=True)
+class PricingScenario:
+    """One cost-aware search setup: a Table I job priced under a catalog.
+
+    ``families`` optionally restricts the search to the named node
+    families (the priority pool is `pricing.family_indices(families)`);
+    ``epoch`` selects the point of the catalog's spot-volatility schedule.
+    The interesting scenarios are exactly the ones where the same job's
+    cost-optimal configuration (argmin runtime×price under the catalog)
+    differs from its runtime-optimal one (argmin of the legacy book) —
+    fleet_bench workload H asserts that movement.
+    """
+
+    name: str
+    job_key: str
+    catalog: "PriceCatalog"
+    families: Optional[Tuple[str, ...]] = None
+    epoch: int = 0
+
+
+# Jobs whose cost surfaces probe the three pricing-sensitive regimes:
+# a memory-cliff job (spill dominates — family choice is load-bearing),
+# an IO-heavy flat job (scale-out dominates), and a CPU-heavy job
+# (core price dominates).
+_PRICING_JOB_KEYS = (
+    "kmeans/spark/bigdata",
+    "terasort/hadoop/bigdata",
+    "pagerank/spark/huge",
+)
+
+
+def spot_volatility_scenarios(
+    seed: int = 0, epochs: Tuple[int, ...] = (0, 1, 2)
+) -> List[PricingScenario]:
+    """Spot-billed searches across several schedule epochs: the same job
+    re-priced as the deterministic discount schedule moves, so the
+    cost-optimal configuration can migrate while the runtime-optimal one
+    stays put."""
+    from repro.cluster.pricing import spot
+
+    cat = spot(seed)
+    return [
+        PricingScenario(
+            name=f"spot/{key.split('/')[0]}-e{epoch}",
+            job_key=key,
+            catalog=cat,
+            epoch=epoch,
+        )
+        for key in _PRICING_JOB_KEYS
+        for epoch in epochs
+    ]
+
+
+def family_constrained_scenarios() -> List[PricingScenario]:
+    """Family-constrained arm-book searches: the same job restricted to
+    each node family under the graviton catalog, whose non-uniform
+    per-family discounts move the cost optimum across family boundaries
+    that the runtime objective never crosses."""
+    from repro.cluster.pricing import graviton
+
+    cat = graviton()
+    return [
+        PricingScenario(
+            name=f"graviton/{key.split('/')[0]}-{fam}",
+            job_key=key,
+            catalog=cat,
+            families=(fam,),
+        )
+        for key in _PRICING_JOB_KEYS
+        for fam in ("c", "m", "r")
+    ]
+
+
+def pricing_scenarios(seed: int = 0) -> List[PricingScenario]:
+    """The combined scenario set fleet_bench workload H sweeps."""
+    return spot_volatility_scenarios(seed) + family_constrained_scenarios()
 
 
 # Table I ground truth.  bigdata ≈ 2× huge for the same job.

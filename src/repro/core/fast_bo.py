@@ -58,6 +58,14 @@ Session-era paths ride the same step with zero new device code (PR 4):
                      trace-neutral: the async schedule is pinned
                      bit-identical to the lockstep drain by the
                      golden-through-service and interleaving-fuzz lanes
+    objective        O(n) host derivation once per submission (PR 10,
+    routing          repro.fleet.session.objective_table): "cost" and
+                     weighted runtime/cost blends rebuild the job's (n,)
+                     score table from its pricing axes BEFORE packing —
+                     the device step is objective-agnostic and unchanged
+                     at every extent; objective="runtime" passes the
+                     job's own table through untouched (pinned as_dict-
+                     equal to the golden fixtures by `-m pricing`)
 
 The d²-gather layout paid a one-off O(n²·d) `precompute_d2` per search and
 held the (n,n) tensor for its whole lifetime — an O(n²) memory wall that

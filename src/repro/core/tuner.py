@@ -65,6 +65,7 @@ def run_ruya(
     settings: BOSettings = BOSettings(),
     to_exhaustion: bool = False,
     profile_result: Optional[ProfileResult] = None,
+    objective="runtime",
 ) -> RuyaReport:
     """The full Ruya pipeline.  ``profile_result`` can be injected to reuse a
     previous profiling phase (the paper: profiling only repeats when the
@@ -74,6 +75,13 @@ def run_ruya(
     engine) or from ``cost_table`` (recorded/emulated workload replay, driven
     by the batched fleet engine as a fleet of one).  Both engines are
     trace-identical, so the choice is purely about execution style.
+
+    ``objective`` routes the replay scoring ("runtime" — the default,
+    pinned legacy path — or "cost" / a weight mapping; see
+    `repro.fleet.session.objective_table`).  Non-runtime objectives need
+    the ``cost_table`` path with pricing axes (``runtime_table`` /
+    ``price_table``) — a live ``cost_fn`` observes one scalar per trial
+    and has no second axis to trade against.
 
     .. deprecated:: PR 4
         The ``cost_table`` path is a one-shot deprecation shim over
@@ -99,8 +107,16 @@ def run_ruya(
             flat_fraction=flat_fraction,
         )
         return tune_fleet(
-            [job], [rng], settings=settings, to_exhaustion=to_exhaustion
+            [job], [rng], settings=settings, to_exhaustion=to_exhaustion,
+            objective=objective,
         )[0]
+    from repro.fleet.session import canonical_objective
+
+    if canonical_objective(objective) != "runtime":
+        raise ValueError(
+            "non-runtime objectives need the cost_table path with pricing "
+            "axes; a live cost_fn observes a single scalar per trial"
+        )
 
     if profile_result is None and profile_run is None:
         raise ValueError("provide profile_run or profile_result")

@@ -48,6 +48,8 @@ from repro.fleet.session import (
     SearchOutcome,
     TrialRecord,
     TuningSession,
+    canonical_objective,
+    objective_table,
 )
 
 __all__ = [
@@ -64,6 +66,8 @@ __all__ = [
     "RetryPolicy",
     "RetryStats",
     "call_with_retry",
+    "canonical_objective",
+    "objective_table",
     "resolve_shard_devices",
     "SearchOutcome",
     "ServiceSaturated",

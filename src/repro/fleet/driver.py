@@ -56,6 +56,13 @@ class FleetJob:
     `TrialRecord.attempts`, never fed into the cost surface).  The plan's
     run failures are already baked into ``profile_run`` by whoever wrapped
     it (`FaultPlan.wrap_run` / `ClusterSimulator(faults=...)`).
+
+    ``runtime_table``/``price_table`` are the job's raw pricing axes
+    (hours and USD/hour per config under a `repro.cluster.pricing`
+    catalog) — set for jobs built via ``cluster_fleet(..., catalog=...)``.
+    They enable non-runtime objectives (`TuningSession(objective=...)`)
+    and per-trial runtime/USD annotation (Pareto fronts); without them the
+    job behaves exactly as before.
     """
 
     name: str
@@ -68,6 +75,9 @@ class FleetJob:
     leeway: float = 0.10
     flat_fraction: float = 1.0 / 7.0
     faults: Optional["FaultPlan"] = None
+    runtime_table: Optional[np.ndarray] = None  # (len(space),) hours
+    price_table: Optional[np.ndarray] = None  # (len(space),) USD/hour
+    currency: str = "USD"
 
 
 def cluster_fleet(
@@ -76,6 +86,8 @@ def cluster_fleet(
     per_node_overhead_gb: float = 0.5,
     sims=None,
     faults: Optional[Dict[str, "FaultPlan"]] = None,
+    catalog=None,
+    epoch: int = 0,
 ) -> List[FleetJob]:
     """Build fleet jobs from the paper's emulated Spark/Hadoop workloads.
 
@@ -86,26 +98,52 @@ def cluster_fleet(
     plan (memoized ``sims`` are bypassed for it — the fault wrapper is
     stateful and must be fresh per fleet) and the plan rides on
     `FleetJob.faults` for trial-level straggler reporting.
+
+    ``catalog`` (a `repro.cluster.pricing.PriceCatalog`, with ``epoch``
+    selecting the spot-schedule point) builds PRICED jobs: the cost table
+    comes from the catalog's book and the raw runtime/price axes ride on
+    the job (`runtime_table`/`price_table`) for objective routing and
+    Pareto fronts.  Priced builds bypass memoized ``sims`` — those were
+    built under the legacy book.  Without a catalog nothing changes:
+    tables, profiling, every committed trace.
     """
     from repro.cluster.simulator import ClusterSimulator
 
     GiB = 1024.0**3
+    sims = {} if sims is None else sims
     jobs = []
     for key in keys:
-        plan = (faults or {}).get(key)
-        if plan is not None:
-            sim = ClusterSimulator.for_job(key, faults=plan)
+        plan = None if faults is None else faults.get(key)
+        if plan is not None or catalog is not None:
+            sim = ClusterSimulator.for_job(
+                key, faults=plan, catalog=catalog, epoch=epoch
+            )
         else:
-            sim = (sims or {}).get(key) or ClusterSimulator.for_job(key)
+            # NOT `sims.get(key) or ...`: same falsy-`or` shape as the
+            # PR-9 session bug — route on None, not truthiness.
+            sim = sims.get(key)
+            if sim is None:
+                sim = ClusterSimulator.for_job(key)
+        # A priced job's base table is its normalized RUNTIME axis, so
+        # objective="runtime" means fastest and objective="cost" means
+        # cheapest under the same catalog — the two-objective contrast
+        # workload H measures.  Unpriced jobs keep the legacy normalized
+        # table byte-for-byte (the paper's metric, and every pinned trace).
+        table = (
+            sim.normalized if sim.runtime_h is None
+            else sim.runtime_h / sim.runtime_h.min()
+        )
         jobs.append(
             FleetJob(
                 name=key,
                 space=sim.space,
-                cost_table=sim.normalized,
+                cost_table=table,
                 full_input_size=sim.job.input_gb * GiB,
                 profile_run=sim.profile_run_fn(),
                 per_node_overhead=per_node_overhead_gb * GiB,
                 faults=plan,
+                runtime_table=sim.runtime_h,
+                price_table=sim.price_hour,
             )
         )
     return jobs
@@ -140,6 +178,7 @@ def tune_fleet(
     cache: Optional[ProfileCache] = None,
     engine: str = "batched",
     shard=None,
+    objective="runtime",
 ) -> List[RuyaReport]:
     """Tune J jobs; returns one `RuyaReport` per job.
 
@@ -150,7 +189,11 @@ def tune_fleet(
     per-job engine in a Python loop — both produce identical traces, the
     sequential path exists for verification and J=1 fallback.  ``shard``
     (batched engine only) spreads the job axis across JAX devices — see
-    `repro.fleet.sharding`; traces stay bit-identical.
+    `repro.fleet.sharding`; traces stay bit-identical.  ``objective``
+    routes the scoring ("runtime" | "cost" | weight mapping — see
+    `repro.fleet.session.objective_table`); both engines observe the same
+    derived score table, so traces stay engine-identical under every
+    objective.
 
     .. deprecated:: PR 4
         This is a one-shot deprecation shim over
@@ -174,7 +217,7 @@ def tune_fleet(
 
         session = TuningSession(
             settings=settings, mode=mode, cache=cache, warm_start=False,
-            to_exhaustion=to_exhaustion, shard=shard,
+            to_exhaustion=to_exhaustion, shard=shard, objective=objective,
         )
         for job, rng in zip(jobs, rngs):
             session.submit(job, rng)
@@ -182,7 +225,12 @@ def tune_fleet(
 
     # Sequential verification path: the pre-session per-job engine, with
     # the host-side §III-D split (the reference `TuningSession`'s on-device
-    # split is pinned against).
+    # split is pinned against).  Objective routing happens through the
+    # SAME derived table the session observes, so the two engines stay
+    # trace-identical under every objective.
+    from repro.fleet.session import objective_table
+
+    tables = [objective_table(job, objective) for job in jobs]
     profiles: List[Optional[ProfileResult]] = []
     priority: List[List[int]] = []
     remaining: List[List[int]] = []
@@ -211,14 +259,16 @@ def tune_fleet(
     traces: List[SearchTrace] = [
         ruya_search(
             job.space,
-            lambda i, _t=np.asarray(job.cost_table, np.float64): float(_t[i]),
+            lambda i, _t=table: float(_t[i]),
             rng,
             prio,
             rest,
             settings=settings,
             to_exhaustion=to_exhaustion,
         )
-        for job, rng, prio, rest in zip(jobs, rngs, priority, remaining)
+        for job, table, rng, prio, rest in zip(
+            jobs, tables, rngs, priority, remaining
+        )
     ]
     return [
         RuyaReport(

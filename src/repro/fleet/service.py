@@ -443,9 +443,21 @@ class TuningService:
             for ch in self._session._chunks:
                 live_chunks[ch.group_key] = live_chunks.get(ch.group_key, 0) + 1
         with self._cv:
+            # Sustained rate only over a real window: `is not None` (a
+            # monotonic stamp CAN be 0.0 — truthiness silently dropped the
+            # rate), and at least two completions (one completion's
+            # "window" is that job's latency; the old `max(span, 1e-9)`
+            # clamp extrapolated it — or a zero-width window — into
+            # absurd/near-infinite jobs_per_sec).
             span = None
-            if self._t_first_submit is not None and self._t_last_complete:
-                span = max(self._t_last_complete - self._t_first_submit, 1e-9)
+            if (
+                self._t_first_submit is not None
+                and self._t_last_complete is not None
+                and self._completed >= 2
+            ):
+                span = self._t_last_complete - self._t_first_submit
+                if span <= 0.0:
+                    span = None
             groups = {}
             for key, st in self._stats.items():
                 g = st.as_dict()

@@ -112,9 +112,86 @@ __all__ = [
     "SearchOutcome",
     "TrialRecord",
     "TuningSession",
+    "canonical_objective",
+    "objective_table",
 ]
 
 _TRIAL_SOURCES = ("init", "search", "warm")
+
+# A tuning objective is "runtime" (the legacy table — every committed
+# golden trace), "cost" (runtime×price under the job's catalog), or a
+# weight mapping over both.  The canonical form is the string, or a
+# sorted tuple of (axis, weight) pairs — hashable, so it can extend the
+# warm-start class key (histories from different objectives score trials
+# on different scales and must never cross-seed).
+Objective = Union[str, Tuple[Tuple[str, float], ...]]
+_OBJECTIVE_AXES = ("runtime", "cost")
+
+
+def canonical_objective(objective) -> Objective:
+    """Validate and canonicalize an objective spec (see `Objective`)."""
+    if isinstance(objective, str):
+        if objective not in _OBJECTIVE_AXES:
+            raise ValueError(
+                f"unknown objective {objective!r}; want one of "
+                f"{_OBJECTIVE_AXES} or a weight mapping over them"
+            )
+        return objective
+    if isinstance(objective, tuple):
+        objective = dict(objective)
+    if isinstance(objective, dict):
+        extra = set(objective) - set(_OBJECTIVE_AXES)
+        if extra or not objective:
+            raise ValueError(
+                f"objective weights must be over {_OBJECTIVE_AXES}, got "
+                f"{sorted(objective) if objective else 'no axes'}"
+            )
+        weights = {k: float(v) for k, v in objective.items()}
+        if min(weights.values()) < 0.0 or sum(weights.values()) <= 0.0:
+            raise ValueError(
+                f"objective weights must be >= 0 with a positive sum, "
+                f"got {weights}"
+            )
+        return tuple(sorted(weights.items()))
+    raise TypeError(
+        f"objective must be a string or a weight mapping, got "
+        f"{type(objective).__name__}"
+    )
+
+
+def objective_table(job: "FleetJob", objective: Objective) -> np.ndarray:
+    """The (n,) float64 score table a search over ``job`` observes.
+
+    ``"runtime"`` is the job's own ``cost_table``, byte-for-byte — the
+    pinned legacy path.  ``"cost"`` scores by runtime×price from the
+    job's pricing axes, normalized by its minimum (the same conditioning
+    the legacy tables have); a weight mapping blends the two normalized
+    axes.  Non-runtime objectives need a priced job (build one via
+    `cluster_fleet(..., catalog=...)`).
+    """
+    obj = canonical_objective(objective)
+    table = np.asarray(job.cost_table, np.float64)
+    if obj == "runtime":
+        return table
+    rt = getattr(job, "runtime_table", None)
+    price = getattr(job, "price_table", None)
+    if rt is None or price is None:
+        raise ValueError(
+            f"job {job.name!r}: objective {objective!r} needs the job's "
+            "runtime_table and price_table pricing axes — build priced "
+            "jobs via cluster_fleet(..., catalog=...) or set both fields"
+        )
+    usd = np.asarray(rt, np.float64) * np.asarray(price, np.float64)
+    usd_norm = usd / usd.min()
+    if obj == "cost":
+        return usd_norm
+    weights = dict(obj)
+    rt_norm = table / table.min()
+    total = sum(weights.values())
+    return (
+        weights.get("runtime", 0.0) * rt_norm
+        + weights.get("cost", 0.0) * usd_norm
+    ) / total
 
 # Terminal status of a search.  "converged" is the normal retirement (EI
 # threshold fired or trial budget exhausted); the other three are
@@ -146,6 +223,12 @@ class TrialRecord:
     ``attempts`` is the number of cluster runs the trial took (> 1 when a
     straggler run was re-dispatched — reported latency only, the observed
     cost is always the deterministic table value).
+
+    ``runtime_h``/``usd`` are the trial's RAW axes — hours and dollars
+    under the job's price catalog — populated only for priced jobs
+    (`FleetJob.runtime_table`/`price_table` set); ``cost`` stays the
+    objective's score.  Unpriced records serialize without the two keys,
+    so every committed golden fixture round-trips unchanged.
     """
 
     index: int
@@ -153,25 +236,36 @@ class TrialRecord:
     slot: int
     source: str = "search"
     attempts: int = 1
+    runtime_h: Optional[float] = None
+    usd: Optional[float] = None
 
     def as_dict(self) -> dict:
-        return {
+        d = {
             "index": int(self.index),
             "cost": float(self.cost),
             "slot": int(self.slot),
             "source": str(self.source),
             "attempts": int(self.attempts),
         }
+        if self.runtime_h is not None:
+            d["runtime_h"] = float(self.runtime_h)
+        if self.usd is not None:
+            d["usd"] = float(self.usd)
+        return d
 
     @classmethod
     def from_dict(cls, d: dict) -> "TrialRecord":
         src = str(d["source"])
         if src not in _TRIAL_SOURCES:
             raise ValueError(f"unknown trial source {src!r}")
+        rt = d.get("runtime_h")
+        usd = d.get("usd")
         return cls(
             index=int(d["index"]), cost=float(d["cost"]),
             slot=int(d["slot"]), source=src,
             attempts=int(d.get("attempts", 1)),
+            runtime_h=None if rt is None else float(rt),
+            usd=None if usd is None else float(usd),
         )
 
 
@@ -193,6 +287,13 @@ class SearchOutcome:
     the profiling phase cost under faults (1 / 0.0 = clean first try; the
     backoff is charged, not slept — see `repro.fleet.retry`), and
     ``failure`` carries the terminal error text for "failed" outcomes.
+
+    ``objective`` is the canonical objective the search scored trials
+    under (see `canonical_objective`); ``currency`` is set ("USD") for
+    priced jobs, whose records carry raw runtime/dollar axes — the inputs
+    to `pareto()`, `best_usd` and `best_runtime_h`.  Both serialize only
+    when non-default, so unpriced runtime-objective outcomes (every
+    committed golden fixture) keep their exact legacy `as_dict` form.
     """
 
     name: str
@@ -208,6 +309,8 @@ class SearchOutcome:
     profile_attempts: int = 1
     retry_backoff_s: float = 0.0
     failure: Optional[str] = None
+    objective: Objective = "runtime"
+    currency: Optional[str] = None
 
     @property
     def memory_model(self):
@@ -246,6 +349,60 @@ class SearchOutcome:
                 return i + 1
         return None
 
+    def _priced_observations(self) -> List[TrialRecord]:
+        obs = [
+            r for r in self._require_observations()
+            if r.runtime_h is not None and r.usd is not None
+        ]
+        if not obs:
+            raise RuntimeError(
+                f"job {self.name!r} has no priced observations — runtime/"
+                "cost axes exist only for jobs built with a price catalog "
+                "(cluster_fleet(..., catalog=...))"
+            )
+        return obs
+
+    def pareto(self) -> List[TrialRecord]:
+        """The cost/runtime Pareto front: observed trials not dominated on
+        the two RAW axes (hours, dollars), in trial order.
+
+        A trial dominates another when it is no worse on both axes and
+        strictly better on at least one.  Ties on both axes keep only the
+        earliest trial (deterministic tie-break by trial order), so the
+        front is a pure function of the observation sequence.
+        """
+        obs = self._priced_observations()
+        front: List[TrialRecord] = []
+        for i, r in enumerate(obs):
+            dominated = False
+            for j, o in enumerate(obs):
+                if o.runtime_h <= r.runtime_h and o.usd <= r.usd and (
+                    o.runtime_h < r.runtime_h or o.usd < r.usd
+                ):
+                    dominated = True
+                    break
+                # Exact tie on both axes: the earliest trial represents it.
+                if (
+                    j < i
+                    and o.runtime_h == r.runtime_h
+                    and o.usd == r.usd
+                ):
+                    dominated = True
+                    break
+            if not dominated:
+                front.append(r)
+        return front
+
+    @property
+    def best_usd(self) -> float:
+        """Cheapest observed trial in dollars (priced jobs only)."""
+        return min(r.usd for r in self._priced_observations())
+
+    @property
+    def best_runtime_h(self) -> float:
+        """Fastest observed trial in hours (priced jobs only)."""
+        return min(r.runtime_h for r in self._priced_observations())
+
     def trace(self) -> SearchTrace:
         """The executed trials as the legacy `SearchTrace` (bit-exact for
         cold searches; warm searches re-base the registers past the seeds)."""
@@ -269,8 +426,10 @@ class SearchOutcome:
         )
 
     def as_dict(self) -> dict:
-        """JSON-able view; drops `profile`/`signature` (not serializable)."""
-        return {
+        """JSON-able view; drops `profile`/`signature` (not serializable).
+        The cost-aware fields ("objective", "currency") are emitted only
+        when non-default, so legacy fixtures compare byte-for-byte."""
+        d = {
             "name": self.name,
             "records": [r.as_dict() for r in self.records],
             "seeded": [r.as_dict() for r in self.seeded],
@@ -283,6 +442,14 @@ class SearchOutcome:
             "retry_backoff_s": float(self.retry_backoff_s),
             "failure": self.failure,
         }
+        if self.objective != "runtime":
+            d["objective"] = (
+                self.objective if isinstance(self.objective, str)
+                else dict(self.objective)
+            )
+        if self.currency is not None:
+            d["currency"] = str(self.currency)
+        return d
 
     @classmethod
     def from_dict(cls, d: dict) -> "SearchOutcome":
@@ -292,6 +459,7 @@ class SearchOutcome:
         if status not in _STATUSES:
             raise ValueError(f"unknown outcome status {status!r}")
         failure = d.get("failure")
+        currency = d.get("currency")
         return cls(
             name=str(d["name"]),
             records=[TrialRecord.from_dict(r) for r in d["records"]],
@@ -304,6 +472,8 @@ class SearchOutcome:
             profile_attempts=int(d.get("profile_attempts", 1)),
             retry_backoff_s=float(d.get("retry_backoff_s", 0.0)),
             failure=None if failure is None else str(failure),
+            objective=canonical_objective(d.get("objective", "runtime")),
+            currency=None if currency is None else str(currency),
         )
 
 
@@ -381,6 +551,9 @@ class _JobRec:
     retry_backoff_s: float = 0.0  # charged profiling backoff
     status: str = "converged"  # terminal status, set before publication
     job_priority: int = 0  # preemption rank (see preempt_below)
+    objective: Objective = "runtime"  # canonical scoring objective
+    # (runtime_h, usd) raw-axis tables for priced jobs; None otherwise.
+    axes64: Optional[Tuple[np.ndarray, np.ndarray]] = None
 
 
 class _LiveChunk:
@@ -512,11 +685,16 @@ class TuningSession:
         seed: int = 0,
         retry: RetryPolicy = RetryPolicy(),
         drift_tolerance: Optional[float] = None,
+        objective="runtime",
     ) -> None:
         if mode not in ("ruya", "cherrypick"):
             raise ValueError(f"unknown mode {mode!r}")
         if layout not in _LAYOUTS:
             raise ValueError(f"unknown layout {layout!r}; want one of {_LAYOUTS}")
+        # "runtime" | "cost" | {"runtime": w1, "cost": w2} — the session
+        # default; overridable per submit.  "runtime" is the pinned legacy
+        # path (golden-fixture bit-identity); see `objective_table`.
+        self.objective: Objective = canonical_objective(objective)
         # None → single-device reference path; else a tuple of ≥ 2 devices
         # the job axis is sharded over.
         self.shard_devices = resolve_shard_devices(shard, devices)
@@ -584,6 +762,7 @@ class TuningSession:
         remaining: Optional[Sequence[int]] = None,
         warm_start: Optional[bool] = None,
         job_priority: int = 0,
+        objective=None,
     ) -> JobHandle:
         """Register one job; it joins a lockstep chunk at the next `step()`.
 
@@ -602,7 +781,9 @@ class TuningSession:
         returns a handle whose outcome is already published with status
         "failed" — no exception, the rest of the fleet is unaffected.
         ``job_priority`` ranks the job for `preempt_below` (higher keeps
-        running; it does not affect scheduling otherwise).
+        running; it does not affect scheduling otherwise).  ``objective``
+        overrides the session objective for this job (see
+        `objective_table`; non-runtime objectives need a priced job).
 
         Thread-safe: concurrent submitters serialize on the session lock
         (the warm-start history snapshot, the scripted init draw, and the
@@ -613,7 +794,7 @@ class TuningSession:
             return self._submit_locked(
                 job, rng, seed=seed, mode=mode, priority=priority,
                 remaining=remaining, warm_start=warm_start,
-                job_priority=job_priority,
+                job_priority=job_priority, objective=objective,
             )
 
     def _submit_locked(
@@ -627,6 +808,7 @@ class TuningSession:
         remaining: Optional[Sequence[int]] = None,
         warm_start: Optional[bool] = None,
         job_priority: int = 0,
+        objective=None,
     ) -> JobHandle:
         if (rng is None) == (seed is None):
             raise ValueError("provide exactly one of rng / seed")
@@ -636,16 +818,35 @@ class TuningSession:
         if mode not in ("ruya", "cherrypick"):
             raise ValueError(f"unknown mode {mode!r}")
         warm = self.warm_start if warm_start is None else bool(warm_start)
+        obj = (
+            self.objective if objective is None
+            else canonical_objective(objective)
+        )
 
         space = job.space
         n = len(space)
         d = space.encoded().shape[1]
-        table64 = np.asarray(job.cost_table, np.float64)
+        # The score table the engine observes.  objective="runtime" is
+        # exactly `job.cost_table` (the pinned legacy path); "cost"/blends
+        # derive it from the job's pricing axes.
+        table64 = objective_table(job, obj)
         if table64.shape != (n,):
             raise ValueError(
                 f"job {job.name!r}: cost table has shape {table64.shape}, "
                 f"want ({n},)"
             )
+        axes64: Optional[Tuple[np.ndarray, np.ndarray]] = None
+        rt_tab = getattr(job, "runtime_table", None)
+        price_tab = getattr(job, "price_table", None)
+        if rt_tab is not None and price_tab is not None:
+            rt64 = np.asarray(rt_tab, np.float64)
+            price64 = np.asarray(price_tab, np.float64)
+            if rt64.shape != (n,) or price64.shape != (n,):
+                raise ValueError(
+                    f"job {job.name!r}: pricing axes have shapes "
+                    f"{rt64.shape}/{price64.shape}, want ({n},)"
+                )
+            axes64 = (rt64, rt64 * price64)
 
         profile: Optional[ProfileResult] = None
         signature: Optional[MemorySignature] = None
@@ -710,12 +911,26 @@ class TuningSession:
         # submit time, so a search is a deterministic function of (class
         # history, seed) no matter how the session is stepped afterwards.
         seed_trials: List[TrialRecord] = []
-        class_key = (signature, n, d) if signature is not None else None
+        # Non-runtime objectives score trials on a different scale, so
+        # their class histories are keyed apart — a cost-objective search
+        # must never warm-seed donor costs from a runtime-objective one.
+        class_key = None
+        if signature is not None:
+            class_key = (
+                (signature, n, d) if obj == "runtime"
+                else (signature, n, d, obj)
+            )
         if warm and class_key is not None and class_key in self._history:
             room = max(budget - self.warm_reserve, 0)
             hist = self._history[class_key][0][:room]
             seed_trials = [
-                TrialRecord(index=i, cost=c, slot=s, source="warm")
+                TrialRecord(
+                    index=i, cost=c, slot=s, source="warm",
+                    runtime_h=(
+                        None if axes64 is None else float(axes64[0][i])
+                    ),
+                    usd=None if axes64 is None else float(axes64[1][i]),
+                )
                 for s, (i, c) in enumerate(hist)
             ]
             if seed_trials:
@@ -757,6 +972,8 @@ class TuningSession:
             profile_attempts=je[3],
             retry_backoff_s=je[4],
             job_priority=int(job_priority),
+            objective=obj,
+            axes64=axes64,
         )
         self._order.append(handle)
         self._pending.append(rec)
@@ -1487,6 +1704,10 @@ class TuningSession:
         # trial), never fed back: the observed cost is the deterministic
         # table value either way, so the trace is unchanged.
         plan = getattr(rec.job, "faults", None)
+        # Priced jobs carry raw runtime/dollar axes on every record (the
+        # Pareto-front inputs); unpriced jobs keep the exact legacy record
+        # shape, so the golden fixtures stay byte-identical.
+        rt64, usd64 = rec.axes64 if rec.axes64 is not None else (None, None)
         records = []
         for slot in range(w, k):
             idx = int(tried_row[slot])
@@ -1500,6 +1721,8 @@ class TuningSession:
                         2 if plan is not None
                         and plan.is_straggler(rec.job.name, slot) else 1
                     ),
+                    runtime_h=None if rt64 is None else float(rt64[idx]),
+                    usd=None if usd64 is None else float(usd64[idx]),
                 )
             )
         outcome = SearchOutcome(
@@ -1517,6 +1740,11 @@ class TuningSession:
             profile_attempts=rec.profile_attempts,
             retry_backoff_s=rec.retry_backoff_s,
             failure=failure,
+            objective=rec.objective,
+            currency=(
+                getattr(rec.job, "currency", "USD")
+                if rec.axes64 is not None else None
+            ),
         )
         self._outcomes[rec.handle.uid] = outcome
         rec.handle._outcome = outcome

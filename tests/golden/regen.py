@@ -107,6 +107,28 @@ def _fused_crosscheck(name, outcomes):
         )
 
 
+def _spill_surface_payload():
+    """The pinned spill surface: `_spill_factor` for every Table I job ×
+    every committed configuration.  Not a session scenario — a direct pin
+    on the memory-cliff model, so any change to the usable-memory
+    accounting (e.g. the overhead clamp) shows up as explicit fixture
+    drift instead of silently moving every cost table."""
+    from repro.cluster.nodes import enumerate_cluster_configs
+    from repro.cluster.simulator import _spill_factor
+    from repro.cluster.workloads import JOBS
+
+    configs = enumerate_cluster_configs()
+    return {
+        "scenario": "spill-surface",
+        "regen": "PYTHONPATH=src python -m tests.golden.regen",
+        "configs": [c.name for c in configs],
+        "spill": {
+            key: [float(_spill_factor(job, c)) for c in configs]
+            for key, job in sorted(JOBS.items())
+        },
+    }
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--check", action="store_true",
@@ -118,9 +140,28 @@ def main(argv=None) -> int:
     from . import fixture_path
     from .scenarios import SCENARIOS
 
-    names = args.only or list(SCENARIOS)
+    names = args.only or (list(SCENARIOS) + ["spill-surface"])
     drift = []
     for name in names:
+        if name == "spill-surface":
+            payload = json.loads(json.dumps(_spill_surface_payload()))
+            path = fixture_path(name)
+            if args.check:
+                with open(path) as f:
+                    committed = json.load(f)
+                same = committed == payload
+                print(f"{name}: {'OK' if same else 'DRIFT'} "
+                      f"({len(payload['spill'])} jobs x "
+                      f"{len(payload['configs'])} configs)")
+                if not same:
+                    drift.append(name)
+            else:
+                with open(path, "w") as f:
+                    json.dump(payload, f, indent=1, sort_keys=True)
+                    f.write("\n")
+                print(f"wrote {path} ({len(payload['spill'])} jobs x "
+                      f"{len(payload['configs'])} configs)")
+            continue
         if name not in SCENARIOS:
             print(f"unknown scenario {name!r}; have {list(SCENARIOS)}")
             return 2

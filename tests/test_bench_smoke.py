@@ -11,8 +11,10 @@ asserted identical to the lockstep reference), the streaming
 asserted), the open-loop Poisson workload G (async `TuningService` vs the
 lockstep session under deterministic straggler injection — bit-identical
 outcomes, sustained jobs/sec and sojourn percentiles, the smoke-mode
-≥1.1× throughput floor), and the `BENCH_fleet.json` emission — so the
-bench plumbing is exercised without the multi-minute full sweep.
+≥1.1× throughput floor), the cost-aware pricing workload H (catalog
+repricing movement, runtime-vs-cost objective contrast with USD savings,
+Pareto invariants), and the `BENCH_fleet.json` emission — so the bench
+plumbing is exercised without the multi-minute full sweep.
 
 Excluded from the default tier-1 lane (see pyproject addopts); selected
 explicitly with `pytest -m bench_smoke`, and included in the full
@@ -146,9 +148,26 @@ def test_fleet_bench_smoke(tmp_path):
     # async side must also win on latency, not just throughput.
     assert g["async"]["sojourn_p50_s"] < g["lockstep"]["sojourn_p50_s"]
 
+    # Workload H: cost-aware pricing.  The bench itself asserts the
+    # repricing-movement floor (≥ 3 Table I optima on some catalog) and
+    # the Pareto invariants; the structural checks here pin the emitted
+    # entry — a USD savings field must be present and non-negative, and
+    # the cost objective must actually diverge from the runtime objective
+    # on at least one catalog job.
+    h = out["pricing"]
+    assert h["usd_saved_total"] >= 0.0
+    assert h["usd_runtime_total"] >= h["usd_cost_total"] > 0.0
+    assert h["contrast_jobs"] >= 1
+    assert max(h["argmin_moved"].values()) >= 3
+    assert h["argmin_moved"]["ondemand"] == 0  # the identity book
+    assert all("usd_saved" in r for r in h["jobs"])
+    assert all(r["pareto_size"] >= 1 for r in h["jobs"])
+    assert all(f["family_penalty"] >= 1.0 for f in h["family"])
+
     data = json.loads(path.read_text())
     assert data["scaling"]["sweep"][0]["n"] == rows[0]["n"]
     assert data["session_streaming"]["warm_jobs"] == d["warm_jobs"]
     assert data["sharding"]["shards"] == sh["shards"]
     assert data["adversarial"]["completion_rate"] == adv["completion_rate"]
     assert data["open_loop"]["speedup_jobs_per_sec"] == g["speedup_jobs_per_sec"]
+    assert data["pricing"]["usd_saved_total"] == h["usd_saved_total"]

@@ -109,3 +109,110 @@ class TestCostSurface:
     def test_normalized_min_is_one(self):
         sim = ClusterSimulator.for_job("join/spark/bigdata")
         assert sim.normalized.min() == pytest.approx(1.0)
+
+
+class TestForJobLookup:
+    """`ClusterSimulator.for_job` key routing: loud KeyError naming the
+    valid key space, and the memoized scenario catalog (both halves of the
+    falsy-`or` bugfix)."""
+
+    def test_unknown_key_raises_with_valid_key_space(self):
+        with pytest.raises(KeyError) as exc:
+            ClusterSimulator.for_job("kmeans/spark/typo")
+        msg = str(exc.value)
+        assert "kmeans/spark/typo" in msg
+        assert "kmeans/spark/bigdata" in msg  # Table I half
+        assert "failure scenarios" in msg
+
+    def test_scenario_keys_resolve(self):
+        from repro.cluster import failure_scenario_jobs
+
+        for key in failure_scenario_jobs():
+            sim = ClusterSimulator.for_job(key)
+            assert sim.job.key == key
+
+    def test_scenario_catalog_is_memoized(self):
+        from repro.cluster.workloads import _scenario_catalog
+
+        assert _scenario_catalog() is _scenario_catalog()
+
+    def test_failure_scenario_jobs_returns_a_copy(self):
+        from repro.cluster import failure_scenario_jobs
+
+        d = failure_scenario_jobs()
+        d.clear()  # caller mutation must not poison the memo
+        assert failure_scenario_jobs()
+
+
+class TestSpillClamp:
+    """`_spill_factor`'s usable-memory clamp: a grid whose per-node
+    overhead exceeds node memory has NO usable memory — the job spills at
+    the saturated missing fraction instead of feeding a negative
+    "usable" into the ratio."""
+
+    def _spilling_job(self):
+        for job in JOBS.values():
+            if job.spill_slope > 0.0:
+                return job
+        raise AssertionError("no spilling job in the catalog")
+
+    def test_overhead_dominated_config_saturates(self):
+        from repro.cluster.nodes import ClusterConfig, NodeType
+        from repro.cluster.simulator import PER_NODE_OVERHEAD_GB, _spill_factor
+
+        job = self._spilling_job()
+        tiny = NodeType("tiny.sub-overhead", "c", "large", 2,
+                        PER_NODE_OVERHEAD_GB / 2.0, 0.01)
+        cfg = ClusterConfig(node=tiny, scale_out=8)
+        assert cfg.total_memory_gb < PER_NODE_OVERHEAD_GB * cfg.scale_out
+        # usable clamps to 0 → missing fraction saturates at 1.0.
+        assert _spill_factor(job, cfg) == pytest.approx(
+            job.spill_base + job.spill_slope
+        )
+
+    def test_spill_surface_matches_golden_fixture(self):
+        """The fixed spill surface is pinned in tests/golden/: any change
+        to the usable-memory accounting must show up as fixture drift."""
+        import json
+
+        from golden import load
+        from repro.cluster.simulator import _spill_factor
+
+        fix = load("spill-surface")
+        configs = enumerate_cluster_configs()
+        assert fix["configs"] == [c.name for c in configs]
+        assert sorted(fix["spill"]) == sorted(JOBS)
+        for key, want in fix["spill"].items():
+            got = [float(_spill_factor(JOBS[key], c)) for c in configs]
+            assert json.loads(json.dumps(got)) == want, key
+
+    def test_committed_grid_clears_the_overhead(self):
+        from repro.cluster.simulator import PER_NODE_OVERHEAD_GB
+
+        # The clamp is behavior-neutral on the real grid: every node has
+        # more memory than the per-node overhead slice (the committed
+        # cost tables therefore cannot move; tests/golden/spill-surface
+        # pins the actual spill values).
+        for cfg in enumerate_cluster_configs():
+            assert cfg.node.memory_gb > PER_NODE_OVERHEAD_GB
+
+
+class TestPricedSimulator:
+    def test_priced_costs_are_runtime_times_price(self):
+        from repro.cluster.pricing import spot
+
+        sim = ClusterSimulator.for_job(
+            "kmeans/spark/huge", catalog=spot(seed=0), epoch=3
+        )
+        assert sim.runtime_h is not None and sim.price_hour is not None
+        np.testing.assert_array_equal(sim.costs, sim.runtime_h * sim.price_hour)
+
+    def test_identity_catalog_matches_legacy_simulator(self):
+        from repro.cluster.pricing import on_demand
+
+        legacy = ClusterSimulator.for_job("kmeans/spark/huge")
+        priced = ClusterSimulator.for_job(
+            "kmeans/spark/huge", catalog=on_demand()
+        )
+        np.testing.assert_array_equal(legacy.costs, priced.costs)
+        np.testing.assert_array_equal(legacy.normalized, priced.normalized)

@@ -1,0 +1,289 @@
+"""Cost-aware tuning property suite (`pytest -m pricing`, part of tier-1).
+
+Pins the `repro.cluster.pricing` catalogs and the objective-routing layer:
+
+  * every configuration is priced (finite, positive) under every default
+    catalog at every probed epoch;
+  * price is strictly monotone in scale_out within a node type (more
+    nodes always bill more under every book);
+  * a spot book never exceeds its on-demand base at any schedule point,
+    and its discount stays inside the schedule's [floor, ceiling];
+  * the identity catalog reproduces the legacy cost tables bit-for-bit;
+  * `objective="runtime"` reproduces the committed golden fixtures
+    as_dict-equal — the objective plumbing must be a no-op on the
+    default path;
+  * `SearchOutcome.pareto()` is non-empty, mutually non-dominated,
+    deterministic, and contains the per-axis argmins;
+  * the batched and sequential engines stay trace-identical under
+    `objective="cost"`.
+"""
+
+import numpy as np
+import pytest
+
+from repro.cluster import (
+    CATALOGS,
+    JOBS,
+    default_catalogs,
+    enumerate_cluster_configs,
+    family_indices,
+    job_cost_table,
+)
+from repro.cluster.pricing import SpotSchedule, graviton, on_demand, spot
+from repro.cluster.workloads import (
+    family_constrained_scenarios,
+    pricing_scenarios,
+    spot_volatility_scenarios,
+)
+from repro.fleet import (
+    TuningSession,
+    canonical_objective,
+    cluster_fleet,
+    objective_table,
+    tune_fleet,
+)
+
+pytestmark = pytest.mark.pricing
+
+_EPOCHS = (0, 1, 2, 7)
+_KEYS = ["kmeans/spark/bigdata", "terasort/hadoop/bigdata"]
+
+
+# --------------------------------------------------------------- catalogs
+
+
+def test_all_configs_priced_under_all_catalogs():
+    configs = enumerate_cluster_configs()
+    for name, cat in default_catalogs().items():
+        for epoch in _EPOCHS:
+            prices = cat.price_table(configs, epoch=epoch)
+            assert prices.shape == (len(configs),)
+            assert np.all(np.isfinite(prices)), (name, epoch)
+            assert np.all(prices > 0.0), (name, epoch)
+
+
+def test_price_monotone_in_scale_out():
+    configs = enumerate_cluster_configs()
+    for name, cat in default_catalogs().items():
+        for epoch in _EPOCHS:
+            by_node = {}
+            for i, c in enumerate(configs):
+                by_node.setdefault(c.node.name, []).append(i)
+            prices = cat.price_table(configs, epoch=epoch)
+            for node, idx in by_node.items():
+                idx = sorted(idx, key=lambda i: configs[i].scale_out)
+                p = prices[idx]
+                assert np.all(np.diff(p) > 0.0), (
+                    f"{name}@{epoch}: price not strictly increasing in "
+                    f"scale_out for {node}: {p}"
+                )
+
+
+def test_spot_never_exceeds_on_demand():
+    configs = enumerate_cluster_configs()
+    od, sp = on_demand(), spot(seed=0)
+    for epoch in range(10):
+        p_od = od.price_table(configs, epoch=epoch)
+        p_sp = sp.price_table(configs, epoch=epoch)
+        assert np.all(p_sp < p_od), f"spot >= on-demand at epoch {epoch}"
+
+
+def test_spot_schedule_bounds_and_determinism():
+    sched = SpotSchedule(seed=3, base_discount=0.5, volatility=0.4,
+                         floor=0.1, ceiling=0.8)
+    for node in ("c4.large", "r4.2xlarge"):
+        for epoch in range(20):
+            d = sched.discount(node, epoch)
+            assert 0.1 <= d <= 0.8
+            assert d == sched.discount(node, epoch)  # pure function
+    # A different seed is a different schedule somewhere on the probe grid.
+    other = SpotSchedule(seed=4, base_discount=0.5, volatility=0.4,
+                         floor=0.1, ceiling=0.8)
+    assert any(
+        sched.discount("c4.large", e) != other.discount("c4.large", e)
+        for e in range(20)
+    )
+
+
+def test_identity_catalog_bit_equal_to_legacy():
+    ident = on_demand()
+    for key, job in JOBS.items():
+        legacy = job_cost_table(job)
+        priced = job_cost_table(job, catalog=ident)
+        assert np.array_equal(legacy, priced), key
+
+
+def test_cost_objective_moves_table1_optima():
+    sp = spot(seed=0)
+    moved = sum(
+        int(np.argmin(job_cost_table(j, catalog=sp)))
+        != int(np.argmin(job_cost_table(j)))
+        for j in JOBS.values()
+    )
+    assert moved >= 3, f"spot book moved only {moved} Table I optima"
+
+
+def test_family_indices_partition_the_grid():
+    configs = enumerate_cluster_configs()
+    seen = []
+    for fam in "cmr":
+        idx = [int(i) for i in family_indices((fam,))]
+        assert idx, fam
+        assert all(configs[i].node.name.startswith(fam) for i in idx)
+        seen.extend(idx)
+    assert sorted(seen) == list(range(len(configs)))
+
+
+def test_scenario_generators_are_deterministic():
+    a, b = pricing_scenarios(seed=0), pricing_scenarios(seed=0)
+    assert a == b
+    assert len(spot_volatility_scenarios()) == 9
+    fams = family_constrained_scenarios()
+    assert len(fams) == 9
+    assert all(s.families for s in fams)
+
+
+# ------------------------------------------------------ objective routing
+
+
+def test_canonical_objective_forms():
+    assert canonical_objective("runtime") == "runtime"
+    assert canonical_objective("cost") == "cost"
+    tup = canonical_objective({"runtime": 1.0, "cost": 3.0})
+    assert tup == (("cost", 3.0), ("runtime", 1.0))
+    assert canonical_objective(tup) == tup
+
+
+@pytest.mark.parametrize("bad", [
+    "latency",
+    {"runtime": -1.0, "cost": 1.0},
+    {"runtime": 0.0, "cost": 0.0},
+    {"carbon": 1.0},
+    42,
+])
+def test_canonical_objective_rejects(bad):
+    with pytest.raises((ValueError, TypeError)):
+        canonical_objective(bad)
+
+
+def test_objective_table_needs_pricing_axes():
+    [job] = cluster_fleet(_KEYS[:1])  # unpriced: no runtime/price tables
+    assert np.array_equal(objective_table(job, "runtime"), job.cost_table)
+    with pytest.raises(ValueError):
+        objective_table(job, "cost")
+
+
+def test_objective_table_weighted_blend():
+    [job] = cluster_fleet(_KEYS[:1], catalog=spot(seed=0))
+    rt = objective_table(job, "runtime")
+    cost = objective_table(job, "cost")
+    half = objective_table(job, {"runtime": 1.0, "cost": 1.0})
+    np.testing.assert_allclose(half, 0.5 * (rt / rt.min() + cost), rtol=1e-12)
+    # Degenerate weights collapse to the pure axes.
+    np.testing.assert_array_equal(
+        objective_table(job, {"runtime": 2.0}), rt / rt.min()
+    )
+    np.testing.assert_array_equal(objective_table(job, {"cost": 2.0}), cost)
+
+
+# ------------------------------------------------------------ Pareto front
+
+
+def _cost_outcomes():
+    jobs = cluster_fleet(_KEYS, catalog=spot(seed=0), epoch=1)
+    session = TuningSession(objective="cost", warm_start=False)
+    for i, job in enumerate(jobs):
+        session.submit(job, seed=100 + i)
+    return session.drain()
+
+
+def test_pareto_front_invariants():
+    for out in _cost_outcomes():
+        front = out.pareto()
+        obs = [
+            r for r in out.observations
+            if r.runtime_h is not None and r.usd is not None
+        ]
+        assert front, "empty Pareto front"
+        assert out.pareto() == front, "pareto() is not deterministic"
+        # Front members are observations, in trial order.
+        positions = [obs.index(r) for r in front]
+        assert positions == sorted(positions)
+        # Mutually non-dominated.
+        for i, a in enumerate(front):
+            for j, b in enumerate(front):
+                if i == j:
+                    continue
+                dominates = (
+                    b.runtime_h <= a.runtime_h and b.usd <= a.usd
+                    and (b.runtime_h < a.runtime_h or b.usd < a.usd)
+                )
+                assert not dominates, f"front member {i} dominated by {j}"
+        # Contains the argmin of each raw axis.
+        assert min(r.usd for r in front) == out.best_usd
+        assert min(r.runtime_h for r in front) == out.best_runtime_h
+        # Every non-front observation is dominated by some front member.
+        for r in obs:
+            if r in front:
+                continue
+            assert any(
+                f.runtime_h <= r.runtime_h and f.usd <= r.usd
+                and (f.runtime_h < r.runtime_h or f.usd < r.usd)
+                for f in front
+            ), "non-front trial is not dominated"
+
+
+def test_pareto_requires_priced_observations():
+    space_jobs = cluster_fleet(_KEYS[:1])  # unpriced
+    session = TuningSession(warm_start=False)
+    session.submit(space_jobs[0], seed=0)
+    [out] = session.drain()
+    with pytest.raises(RuntimeError):
+        out.pareto()
+
+
+def test_priced_outcome_serialization_round_trip():
+    import json
+
+    for out in _cost_outcomes():
+        d = out.as_dict()
+        assert d["objective"] == "cost"
+        assert d["currency"] == "USD"
+        assert all("usd" in r and "runtime_h" in r for r in d["records"])
+        from repro.fleet import SearchOutcome
+
+        rt = SearchOutcome.from_dict(json.loads(json.dumps(d)))
+        assert rt.as_dict() == d
+        assert rt.pareto() == out.pareto()
+
+
+# --------------------------------------------------- engine/golden identity
+
+
+def test_engines_identical_under_cost_objective():
+    jobs = cluster_fleet(_KEYS, catalog=spot(seed=0), epoch=2)
+    rngs = lambda: [np.random.default_rng(s) for s in (5, 6)]
+    batched = tune_fleet(jobs, rngs(), objective="cost")
+    sequential = tune_fleet(jobs, rngs(), objective="cost",
+                            engine="sequential")
+    for a, b in zip(batched, sequential):
+        assert a.trace.tried == b.trace.tried
+        assert a.trace.costs == b.trace.costs
+        assert a.trace.stop_iteration == b.trace.stop_iteration
+        assert a.trace.phase_boundary == b.trace.phase_boundary
+
+
+def test_runtime_objective_matches_golden_fixtures():
+    """objective="runtime" (passed EXPLICITLY) must reproduce every
+    committed golden fixture as_dict-equal: the objective plumbing is
+    required to be a no-op on the default path."""
+    from tests.golden import assert_outcomes_match
+    from tests.golden.scenarios import SCENARIOS
+
+    def engine(layout, shard, **kw):
+        return TuningSession(
+            layout=layout, shard=shard, objective="runtime", **kw
+        )
+
+    for name, runner in SCENARIOS.items():
+        assert_outcomes_match(name, runner(engine=engine))

@@ -413,6 +413,38 @@ class TestMetricsSurface:
         assert g["admitted"] == 3
         assert g["live_chunks"] == 0
 
+    def test_zero_job_snapshot_has_no_rate(self):
+        """A fresh service has no completion window: `jobs_per_sec` must
+        be None, not a division artifact."""
+        svc = TuningService(**_session_kwargs())
+        try:
+            m = svc.metrics()
+        finally:
+            svc.shutdown(drain=False)
+        json.dumps(m)
+        assert m["submitted"] == 0 and m["completed"] == 0
+        assert m["jobs_per_sec"] is None
+
+    def test_one_job_snapshot_has_no_rate(self):
+        """One completion's 'window' is just that job's latency — the old
+        truthiness check plus the `max(span, 1e-9)` clamp extrapolated it
+        into absurd (near-infinite) jobs/sec.  A single-completion
+        snapshot must report None and leave the rest of the surface
+        intact."""
+        svc = TuningService(**_session_kwargs())
+        space, table = synth_space_table(69)
+        try:
+            svc.submit(FleetJob(name="only", space=space, cost_table=table),
+                       seed=0, mode="cherrypick")
+            svc.drain()
+            m = svc.metrics()
+        finally:
+            svc.shutdown(drain=False)
+        json.dumps(m)
+        assert m["completed"] == 1
+        assert m["statuses"] == {"converged": 1}
+        assert m["jobs_per_sec"] is None
+
     def test_fault_counters_aggregate_from_outcomes(self):
         from repro.cluster.faults import FaultPlan
 
